@@ -1,0 +1,75 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/bench")
+
+
+def save(name: str, payload):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=_to_py)
+    return path
+
+
+def _to_py(x):
+    if isinstance(x, (np.floating, np.integer)):
+        return x.item()
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    return str(x)
+
+
+def table(rows, cols, title=""):
+    """Print a markdown table."""
+    if title:
+        print(f"\n### {title}")
+    print("| " + " | ".join(cols) + " |")
+    print("|" + "---|" * len(cols))
+    for r in rows:
+        cells = []
+        for c in cols:
+            v = r.get(c, "")
+            if isinstance(v, float):
+                v = f"{v:.4g}"
+            cells.append(str(v))
+        print("| " + " | ".join(cells) + " |")
+    print(flush=True)
+
+
+def gb(x) -> float:
+    return x / 1e9
+
+
+def setup_fed_run(arch: str, *, algo="ampere", alpha=0.33, clients=8,
+                  cohort=4, local_steps=8, batch=16, lr=0.2,
+                  n_train=1536, n_eval=384, seq_len=48, seed=0):
+    """Build (model, run_cfg, clients, eval) at smoke scale."""
+    from repro.configs import registry
+    from repro.configs.base import FedConfig, OptimConfig, RunConfig
+    from repro.data import federate, make_dataset_for_model
+    from repro.models import build_model
+
+    cfg = registry.get_smoke_config(arch)
+    model = build_model(cfg)
+    run_cfg = RunConfig(
+        arch=arch, algo=algo,
+        fed=FedConfig(num_clients=clients, clients_per_round=cohort,
+                      local_steps=local_steps, device_batch_size=batch,
+                      server_batch_size=2 * batch, dirichlet_alpha=alpha,
+                      seed=seed),
+        optim=OptimConfig(name="momentum", lr=lr, schedule="inverse_time",
+                          decay_gamma=0.005),
+        seed=seed)
+    train = make_dataset_for_model(model, n_train, seq_len=seq_len, seed=seed)
+    evald = make_dataset_for_model(model, n_eval, seq_len=seq_len,
+                                   seed=seed + 1)
+    cl = federate(train, clients, alpha, seed=seed)
+    return model, run_cfg, cl, evald

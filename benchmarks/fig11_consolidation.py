@@ -1,0 +1,84 @@
+"""Paper Fig. 11 (ablation): Ampere with vs without activation
+consolidation.  Without consolidation the server trains K per-client
+blocks on per-client activation pools and aggregates them each epoch (the
+SFL-style arm the paper compares against)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save, setup_fed_run, table
+from repro.core import aggregation, evaluate, splitting, steps
+from repro.data import ActivationStore
+from repro.models import build_model
+
+
+def _train_server_no_consolidation(model, run_cfg, dev_state, srv_params,
+                                   store, evald, epochs):
+    """K per-client server blocks on per-client pools, FedAvg'd per epoch."""
+    step_fn = jax.jit(steps.make_server_train_step(model, run_cfg))
+    clients = store.clients()
+    merged_model = build_model(splitting.merged_config(model))
+    eval_step = evaluate.make_eval_step(merged_model)
+    global_srv = srv_params
+    curve = []
+    for _ in range(epochs):
+        per_client, weights = [], []
+        for cid in clients:
+            st = steps.init_server_state(model, run_cfg, global_srv)
+            for batch in store.batches(run_cfg.fed.server_batch_size,
+                                       epochs=1, client_id=cid):
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                st, _ = step_fn(st, batch)
+            per_client.append(st["server"])
+            weights.append(store.num_samples(cid))
+        global_srv = aggregation.fedavg(per_client, weights)
+        merged = splitting.merge_params(model, dev_state["device"],
+                                        global_srv,
+                                        run_cfg.split.split_point)
+        curve.append(evaluate.evaluate(merged_model, merged, evald,
+                                       eval_step=eval_step)["acc"])
+    return curve
+
+
+def run(quick: bool = True):
+    rounds = 8 if quick else 50
+    epochs = 5 if quick else 25
+    from repro.core.uit import AmpereTrainer
+    model, run_cfg, clients, evald = setup_fed_run("mobilenet-l")
+
+    # shared device phase
+    tr = AmpereTrainer(model, run_cfg, clients, evald, patience=100)
+    key = jax.random.PRNGKey(0)
+    dev, srv, aux = tr._init_states(key)
+    dev_state = tr.run_device_phase({"device": dev, "aux": aux},
+                                    max_rounds=rounds)
+
+    # with consolidation
+    store_c = ActivationStore(consolidated=True, seed=0)
+    tr.generate_activations(dev_state, store_c)
+    srv_state = tr.run_server_phase(dev_state, srv, store_c,
+                                    max_epochs=epochs)
+    acc_with = tr.history["server"][-1]["val_acc"]
+
+    # without consolidation (per-client pools + K server blocks)
+    store_n = ActivationStore(consolidated=False, seed=0)
+    tr2 = AmpereTrainer(model, run_cfg, clients, evald, patience=100,
+                        consolidate=False)
+    tr2.generate_activations(dev_state, store_n)
+    curve = _train_server_no_consolidation(model, run_cfg, dev_state, srv,
+                                           store_n, evald, epochs)
+    acc_without = curve[-1]
+
+    rows = [{"variant": "Ampere w/ consolidation", "final_acc": acc_with},
+            {"variant": "Ampere w/o consolidation", "final_acc": acc_without}]
+    table(rows, ["variant", "final_acc"],
+          f"Fig 11 — activation consolidation ablation ({epochs} epochs)")
+    save("fig11_consolidation", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,72 @@
+"""Paper Fig. 3 + Fig. 6: the split-point trade-off.
+
+Fig. 3 (BP/SFL): per-round communication INCLUDES per-iteration
+activations+gradients — minimized at a *late* split point, while on-device
+compute is minimized at p=1: the trade-off Ampere eliminates.
+Fig. 6 (UIT/Ampere): communication is model exchanges + one-shot
+activations — the model term and compute BOTH grow with p, so p=1 is
+simultaneously optimal.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import gb, save, table
+from repro.configs import registry
+from repro.configs.base import SplitConfig
+from repro.core import comm_model
+from repro.models import build_model
+
+SAMPLES_PER_ROUND = 10_000   # paper: 10k local samples per round
+EPOCHS = 100
+
+
+def run(quick: bool = True):
+    model = build_model(registry.get_config("mobilenet-l"))
+    L = model.num_layers
+    rows = []
+    for p in range(1, L + 1):
+        sc = SplitConfig(split_point=p)
+        sizes = comm_model.split_sizes(model, sc)
+        act_round = sizes.act_per_sample * SAMPLES_PER_ROUND
+        bp_comm = 2 * sizes.device + 2 * act_round          # per round
+        # UIT per-round comm = model exchanges; the one-shot activation
+        # transfer is NOT per-round (paper §3.2.1: negligible for N>=100;
+        # reported separately as act_oneshot_GB)
+        uit_comm = 2 * (sizes.device + sizes.aux)
+        dev_gflops_bp = comm_model.device_flops_per_sample(
+            model, sc, "splitfed") * SAMPLES_PER_ROUND / 1e9
+        dev_gflops_uit = comm_model.device_flops_per_sample(
+            model, sc, "ampere") * SAMPLES_PER_ROUND / 1e9
+        rows.append({"p": p,
+                     "bp_comm_GB": gb(bp_comm),
+                     "uit_comm_GB": gb(uit_comm),
+                     "act_oneshot_GB": gb(act_round),
+                     "bp_device_GFLOPs": dev_gflops_bp,
+                     "uit_device_GFLOPs": dev_gflops_uit})
+    table(rows[:6] + rows[-2:],
+          ["p", "bp_comm_GB", "uit_comm_GB", "bp_device_GFLOPs",
+           "uit_device_GFLOPs"],
+          "Fig 3/6 — split-point sweep (MobileNet-L; first 6 + last 2 rows)")
+    save("fig3_fig6_splitpoint", rows)
+
+    # Fig. 3 property: BP comm is NOT minimized at p=1 (activations shrink
+    # deeper in the net) while compute IS minimized at p=1.
+    bp_comm = [r["bp_comm_GB"] for r in rows]
+    assert int(np.argmin(bp_comm)) > 0
+    assert rows[0]["bp_device_GFLOPs"] == min(r["bp_device_GFLOPs"]
+                                              for r in rows)
+    # Fig. 6 property: UIT model-exchange-dominated comm and compute are
+    # both minimized at p=1 — no trade-off.
+    assert rows[0]["uit_comm_GB"] == min(r["uit_comm_GB"] for r in rows)
+    assert rows[0]["uit_device_GFLOPs"] == min(r["uit_device_GFLOPs"]
+                                               for r in rows)
+    print("Fig3: BP comm optimum at p="
+          f"{int(np.argmin(bp_comm)) + 1}, compute optimum at p=1 "
+          "(trade-off).  Fig6: UIT both optima at p=1 (eliminated).")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Paper Fig. 7: auxiliary-network dimension ratio vs on-device compute
+(exact, analytic) and final model accuracy (smoke-scale training)."""
+
+from __future__ import annotations
+
+from benchmarks.common import save, setup_fed_run, table
+from repro.configs import registry
+from repro.configs.base import SplitConfig, replace
+from repro.core import comm_model
+from repro.models import build_model
+
+RATIOS = (0.25, 0.5, 0.75, 1.0)
+
+
+def run(quick: bool = True):
+    # compute curve on the FULL MobileNet-L (like the paper's x-axis)
+    model = build_model(registry.get_config("mobilenet-l"))
+    rows = []
+    for r in RATIOS:
+        sc = SplitConfig(split_point=1, aux_ratio=r)
+        fl = comm_model.device_flops_per_sample(model, sc, "ampere")
+        sizes = comm_model.split_sizes(model, sc)
+        rows.append({"ratio": r, "device_GFLOPs_per_sample": fl / 1e9,
+                     "aux_MB": sizes.aux / 1e6})
+    flops = [r["device_GFLOPs_per_sample"] for r in rows]
+    assert flops == sorted(flops)  # compute grows with the ratio
+
+    if not quick:
+        from repro.core.uit import AmpereTrainer
+        for row, r in zip(rows, RATIOS):
+            m, run_cfg, clients, evald = setup_fed_run("mobilenet-l")
+            run_cfg = replace(run_cfg, split=SplitConfig(split_point=1,
+                                                         aux_ratio=r))
+            tr = AmpereTrainer(m, run_cfg, clients, evald, patience=100)
+            out = tr.run_all(max_device_rounds=20, max_server_epochs=10)
+            row["final_acc"] = out["history"]["server"][-1]["val_acc"]
+    table(rows, ["ratio", "device_GFLOPs_per_sample", "aux_MB"]
+          + (["final_acc"] if not quick else []),
+          "Fig 7 — auxiliary dimension ratio")
+    save("fig7_aux_ratio", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

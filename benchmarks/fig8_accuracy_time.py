@@ -1,0 +1,48 @@
+"""Paper Fig. 8: accuracy vs (simulated) training time — Ampere against
+the SFL baselines, real training at smoke scale on synthetic non-IID data,
+wall-time from the testbed time model."""
+
+from __future__ import annotations
+
+from benchmarks.common import save, setup_fed_run, table
+
+
+def run(quick: bool = True):
+    rounds = 10 if quick else 60
+    server_epochs = 6 if quick else 30
+    variants = ["splitfed"] if quick else ["splitfed", "pipar", "splitgp",
+                                           "scaffold"]
+    model, run_cfg, clients, evald = setup_fed_run("mobilenet-l")
+
+    from repro.core.baselines import SFLTrainer
+    from repro.core.uit import AmpereTrainer
+
+    results = {}
+    amp = AmpereTrainer(model, run_cfg, clients, evald, patience=100)
+    out = amp.run_all(max_device_rounds=rounds, max_server_epochs=server_epochs)
+    results["ampere"] = {
+        "final_acc": out["history"]["server"][-1]["val_acc"],
+        "sim_time_s": out["history"]["sim_time"],
+        "comm_GB": out["history"]["comm_bytes"] / 1e9,
+        "curve": [r["val_acc"] for r in out["history"]["server"]],
+    }
+    for v in variants:
+        tr = SFLTrainer(model, run_cfg, clients, evald, variant=v,
+                        patience=100)
+        res = tr.run_rounds(rounds)
+        results[v] = {
+            "final_acc": res["history"]["rounds"][-1]["val_acc"],
+            "sim_time_s": res["history"]["sim_time"],
+            "comm_GB": res["history"]["comm_bytes"] / 1e9,
+            "curve": [r["val_acc"] for r in res["history"]["rounds"]],
+        }
+    rows = [{"system": k, **{kk: vv for kk, vv in v.items() if kk != "curve"}}
+            for k, v in results.items()]
+    table(rows, ["system", "final_acc", "sim_time_s", "comm_GB"],
+          f"Fig 8 — accuracy vs time ({rounds} rounds, smoke scale)")
+    save("fig8_accuracy_time", results)
+    return results
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,50 @@
+"""§Roofline table: read the dry-run result rows (results/dryrun/merged.json
+by default) and print the per-(arch x shape) roofline terms for the
+single-pod mesh — compute / memory / collective seconds, the dominant
+term, MODEL_FLOPS/HLO_FLOPs, and the roofline fraction."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import save, table
+
+DEFAULT = os.environ.get("REPRO_DRYRUN", "results/dryrun/merged.json")
+
+
+def run(quick: bool = True, path: str = DEFAULT):
+    if not os.path.exists(path):
+        print(f"[roofline] no dry-run results at {path}; run "
+              "scripts/run_dryrun_matrix.sh first")
+        return []
+    with open(path) as f:
+        rows = json.load(f)
+    out = []
+    for r in rows:
+        if r.get("status") == "skip":
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "bottleneck": "SKIP(full-attn @500k)"})
+            continue
+        if r.get("status") != "ok" or r.get("mesh") != "single_pod":
+            continue
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "step": r["step"],
+            "t_compute_ms": r["t_compute_ms"],
+            "t_memory_ms": r["t_memory_ms"],
+            "t_collective_ms": r["t_collective_ms"],
+            "bottleneck": r["bottleneck"],
+            "useful_frac": r.get("useful_flops_frac", 0),
+            "roofline_frac": r.get("roofline_frac", 0),
+            "peak_GB": r.get("peak_mem_gb_per_device", 0),
+        })
+    table(out, ["arch", "shape", "step", "t_compute_ms", "t_memory_ms",
+                "t_collective_ms", "bottleneck", "useful_frac",
+                "roofline_frac", "peak_GB"],
+          "§Roofline — single-pod (256 chips), per (arch x shape)")
+    save("roofline_table", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

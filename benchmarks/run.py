@@ -1,0 +1,76 @@
+"""Benchmark entry point: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick pass (~15 min)
+  PYTHONPATH=src python -m benchmarks.run --full     # full training curves
+  PYTHONPATH=src python -m benchmarks.run --only table1_comm_rounds,fig10
+
+Analytic benchmarks (Tables 1/2/5, Figs 3/6/7/9) are exact at the paper's
+full scale; training benchmarks (Figs 8/10/11, Table 4) run the real
+federated systems at smoke scale on synthetic non-IID data.  The roofline
+benchmark reads the dry-run matrix results when present.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    fig3_fig6_splitpoint,
+    fig7_aux_ratio,
+    fig8_accuracy_time,
+    fig9_device_compute,
+    fig10_noniid,
+    fig11_consolidation,
+    roofline,
+    table1_comm_rounds,
+    table2_sizes,
+    table4_epochs,
+    table5_comm_volume,
+)
+
+BENCHMARKS = {
+    "table1_comm_rounds": table1_comm_rounds.run,
+    "table2_sizes": table2_sizes.run,
+    "fig3_fig6_splitpoint": fig3_fig6_splitpoint.run,
+    "fig7_aux_ratio": fig7_aux_ratio.run,
+    "table5_comm_volume": table5_comm_volume.run,
+    "fig9_device_compute": fig9_device_compute.run,
+    "fig8_accuracy_time": fig8_accuracy_time.run,
+    "fig10_noniid": fig10_noniid.run,
+    "fig11_consolidation": fig11_consolidation.run,
+    "table4_epochs": table4_epochs.run,
+    "roofline": roofline.run,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args(argv)
+    only = [s for s in args.only.split(",") if s]
+
+    failures = []
+    for name, fn in BENCHMARKS.items():
+        if only and not any(o in name for o in only):
+            continue
+        t0 = time.time()
+        print(f"\n===== {name} =====", flush=True)
+        try:
+            fn(quick=not args.full)
+            print(f"[{name}] ok in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+            print(f"[{name}] FAILED", flush=True)
+    print(f"\n{len(BENCHMARKS) - len(failures)}/{len(BENCHMARKS)} "
+          f"benchmarks ok" + (f"; failed: {failures}" if failures else ""))
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Table 2: model / auxiliary / activation sizes at split point p=1
+for the paper's four architectures (ours, exact, fp32 like the paper)."""
+
+from __future__ import annotations
+
+from benchmarks.common import gb, save, table
+from repro.configs import registry
+from repro.configs.base import SplitConfig
+from repro.core import comm_model
+from repro.models import build_model
+
+N_SAMPLES = 50_000
+
+
+def run(quick: bool = True):
+    rows = []
+    for arch in ("mobilenet-l", "vgg11", "swin-t", "vit-s"):
+        model = build_model(registry.get_config(arch))
+        sizes = comm_model.split_sizes(model, SplitConfig(split_point=1))
+        rows.append({
+            "model": arch,
+            "s_act_GB": gb(sizes.act_per_sample * N_SAMPLES),
+            "s_d_GB": gb(sizes.device),
+            "s_aux_GB": gb(sizes.aux),
+            "s_s_GB": gb(sizes.server),
+        })
+        # the paper's structural relations: s_act >> s_s >> s_aux ~ s_d
+        assert rows[-1]["s_act_GB"] > rows[-1]["s_s_GB"]
+        assert rows[-1]["s_s_GB"] > rows[-1]["s_aux_GB"]
+    table(rows, ["model", "s_act_GB", "s_d_GB", "s_aux_GB", "s_s_GB"],
+          "Table 2 — sizes at p=1 (50k samples, fp32)")
+    save("table2_sizes", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

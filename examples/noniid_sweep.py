@@ -1,0 +1,54 @@
+"""Data-heterogeneity sweep (paper Fig. 10 in miniature).
+
+Runs Ampere and SplitFed across three non-IID degrees (alpha = 1.0 IID,
+0.33 moderate, 0.1 severe) and reports the accuracy spread — Ampere's
+activation consolidation keeps the server block training on a near-IID
+mixture regardless of alpha.
+
+    PYTHONPATH=src python examples/noniid_sweep.py
+"""
+
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import FedConfig, OptimConfig, RunConfig
+from repro.core.baselines import SFLTrainer
+from repro.core.uit import AmpereTrainer
+from repro.data import class_histogram, federate, heterogeneity_index, \
+    make_dataset_for_model
+from repro.models import build_model
+
+ARCH = "mobilenet-l"
+ROUNDS, SERVER_EPOCHS = 10, 6
+
+cfg = registry.get_smoke_config(ARCH)
+model = build_model(cfg)
+test = make_dataset_for_model(model, 384, seed=1)
+
+results = {}
+for alpha in (1.0, 0.33, 0.1):
+    run_cfg = RunConfig(
+        arch=ARCH,
+        fed=FedConfig(num_clients=8, clients_per_round=4, local_steps=8,
+                      device_batch_size=16, server_batch_size=32,
+                      dirichlet_alpha=alpha),
+        optim=OptimConfig(name="momentum", lr=0.2, schedule="inverse_time",
+                          decay_gamma=0.005))
+    train = make_dataset_for_model(model, 1536, seed=0)
+    clients = federate(train, 8, alpha, seed=0)
+
+    amp = AmpereTrainer(model, run_cfg, clients, test)
+    a = amp.run_all(max_device_rounds=ROUNDS, max_server_epochs=SERVER_EPOCHS)
+    sfl = SFLTrainer(model, run_cfg, clients, test, variant="splitfed")
+    s = sfl.run_rounds(ROUNDS)
+    results[alpha] = {
+        "ampere": a["history"]["server"][-1]["val_acc"],
+        "splitfed": s["history"]["rounds"][-1]["val_acc"],
+    }
+    print(f"alpha={alpha}: ampere={results[alpha]['ampere']:.3f} "
+          f"splitfed={results[alpha]['splitfed']:.3f}")
+
+amp_accs = [r["ampere"] for r in results.values()]
+sfl_accs = [r["splitfed"] for r in results.values()]
+print(f"\naccuracy std across alphas: "
+      f"ampere={np.std(amp_accs):.4f}  splitfed={np.std(sfl_accs):.4f}")

@@ -1,0 +1,54 @@
+"""Render the §Roofline markdown table from results/dryrun/merged.json and
+inject it into EXPERIMENTS.md at the <!-- ROOFLINE_TABLE --> marker."""
+
+import json
+import sys
+
+SRC = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun/merged.json"
+DST = "EXPERIMENTS.md"
+
+with open(SRC) as f:
+    rows = json.load(f)
+
+hdr = ("| arch | shape | step | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+       "bottleneck | useful | roofline frac | peak GB/dev | multi-pod |\n")
+sep = "|" + "---|" * 11 + "\n"
+
+by_key = {}
+for r in rows:
+    if r.get("status") == "ok":
+        by_key[(r["arch"], r["shape"], r["mesh"])] = r
+    elif r.get("status") == "skip":
+        by_key[(r["arch"], r["shape"], "skip")] = r
+
+lines = [hdr, sep]
+archs, shapes = [], ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+for r in rows:
+    if r["arch"] not in archs:
+        archs.append(r["arch"])
+for arch in archs:
+    for shape in shapes:
+        if (arch, shape, "skip") in by_key:
+            lines.append(f"| {arch} | {shape} | — | — | — | — | "
+                         f"SKIP (full-attn @500k) | — | — | — | — |\n")
+            continue
+        r = by_key.get((arch, shape, "single_pod"))
+        if r is None:
+            continue
+        mp = by_key.get((arch, shape, "multi_pod"))
+        mp_s = "ok" if mp else "—"
+        lines.append(
+            f"| {arch} | {shape} | {r['step'].replace('_step','')} "
+            f"| {r['t_compute_ms']:.1f} | {r['t_memory_ms']:.1f} "
+            f"| {r['t_collective_ms']:.1f} | {r['bottleneck']} "
+            f"| {r['useful_flops_frac']:.2f} | {r['roofline_frac']:.3f} "
+            f"| {r['peak_mem_gb_per_device']:.1f} | {mp_s} |\n")
+
+table = "".join(lines)
+with open(DST) as f:
+    doc = f.read()
+marker = "<!-- ROOFLINE_TABLE -->"
+doc = doc.replace(marker, table)
+with open(DST, "w") as f:
+    f.write(doc)
+print(f"injected {len(lines)-2} rows into {DST}")

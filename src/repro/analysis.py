@@ -1,0 +1,63 @@
+"""Analysis-mode switch.
+
+``cost_analysis()`` counts a ``lax.scan`` body ONCE regardless of trip
+count (XLA while-loops are not unrolled by the cost model).  For the
+roofline we therefore lower *analysis graphs* in which the inner scans
+(vocab-block xent, attention kv-chunk loop, SSD chunk recurrence) are
+fully unrolled — numerically identical, but cost-transparent.  The layer
+scan itself is handled by two-point depth extrapolation in the dry-run
+(1-rep vs 2-rep unrolled compiles), so analysis graphs stay cheap.
+
+Production graphs keep every scan rolled (small HLO, fast compiles); this
+context only changes what the cost model sees.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_state = threading.local()
+
+
+def unroll_scans_enabled() -> bool:
+    return getattr(_state, "unroll", False)
+
+
+@contextlib.contextmanager
+def unroll_scans(enable: bool = True):
+    prev = unroll_scans_enabled()
+    _state.unroll = enable
+    try:
+        yield
+    finally:
+        _state.unroll = prev
+
+
+def scan_unroll(length: int) -> int:
+    """`unroll=` argument for inner lax.scans under analysis mode."""
+    return length if unroll_scans_enabled() else 1
+
+
+# ---------------------------------------------------------------------------
+# Gradient-communication dtype (§Perf cells A/C follow-up)
+# ---------------------------------------------------------------------------
+
+
+def grad_comm_dtype_active():
+    return getattr(_state, "grad_comm", None)
+
+
+@contextlib.contextmanager
+def grad_comm_dtype(dtype_name):
+    """While active (at trace time), weight-gradient matmuls emit their
+    partial results in ``dtype_name`` (local accumulation stays fp32 in
+    the MXU) so the cross-device gradient reduction moves that dtype —
+    the fix for the in-backward fp32 all-reduce diagnosed in EXPERIMENTS
+    §Perf cells A/C.  None/empty = off."""
+    prev = grad_comm_dtype_active()
+    _state.grad_comm = dtype_name or None
+    try:
+        yield
+    finally:
+        _state.grad_comm = prev

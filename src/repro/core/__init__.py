@@ -1,0 +1,15 @@
+from repro.core import (
+    aggregation,
+    auxiliary,
+    comm_model,
+    evaluate,
+    losses,
+    splitting,
+    steps,
+)
+from repro.core.uit import AmpereTrainer
+
+__all__ = [
+    "aggregation", "auxiliary", "comm_model", "evaluate", "losses",
+    "splitting", "steps", "AmpereTrainer",
+]

@@ -1,0 +1,91 @@
+"""Model aggregation: weighted FedAvg (Eq. 4/10) and cohort sampling with
+fault-tolerance semantics (client dropout, straggler deadlines, elastic
+cohort size).
+
+Two forms:
+* ``fedavg``          — host-level, list of parameter trees (CPU-scale loops)
+* ``fedavg_stacked``  — jit-level, leaves stacked over a leading client
+  axis; the weighted mean lowers to the cross-client psum when the client
+  axis is sharded over the DP mesh axes (this *is* the FL aggregation
+  collective on the pod).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def normalize_weights(weights):
+    w = jnp.asarray(weights, jnp.float32)
+    return w / jnp.maximum(jnp.sum(w), 1e-12)
+
+
+def fedavg_stacked(stacked_tree, weights):
+    """Weighted mean over the leading client axis of every leaf."""
+    w = normalize_weights(weights)
+
+    def agg(leaf):
+        wf = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(leaf.astype(jnp.float32) * wf, axis=0).astype(leaf.dtype)
+    return jax.tree.map(agg, stacked_tree)
+
+
+def fedavg(trees, weights):
+    """Host-level weighted average of a list of parameter trees."""
+    w = np.asarray(weights, np.float64)
+    w = w / max(w.sum(), 1e-12)
+
+    def agg(*leaves):
+        acc = sum(wi * l.astype(jnp.float32) for wi, l in zip(w, leaves))
+        return acc.astype(leaves[0].dtype)
+    return jax.tree.map(agg, *trees)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(lambda x, y: (x.astype(jnp.float32)
+                                      - y.astype(jnp.float32)), a, b)
+
+
+def tree_add(a, b, scale=1.0):
+    return jax.tree.map(
+        lambda x, y: (x.astype(jnp.float32)
+                      + scale * y.astype(jnp.float32)).astype(x.dtype), a, b)
+
+
+def sample_cohort(rng: np.random.Generator, fed_cfg, round_idx: int = 0):
+    """Sample the participating cohort for one round and apply the
+    fault-tolerance policy.
+
+    Returns dict with:
+      * ``clients``  — selected client ids (after dropout/deadline drops)
+      * ``weights``  — aggregation weights (renormalized over survivors)
+      * ``dropped``  — ids that failed this round
+      * ``times``    — simulated per-client round times (straggler model)
+    """
+    k = min(fed_cfg.clients_per_round, fed_cfg.num_clients)
+    chosen = rng.choice(fed_cfg.num_clients, size=k, replace=False)
+
+    # random failures
+    alive = rng.random(k) >= fed_cfg.drop_prob
+    # straggler model: speed group by client id, slowest may miss deadline
+    groups = np.asarray(fed_cfg.straggler_speed_groups)
+    speed = groups[chosen % len(groups)]
+    times = 1.0 / speed * (1.0 + 0.05 * rng.random(k))
+    if fed_cfg.straggler_deadline_factor > 0:
+        deadline = np.median(times) * fed_cfg.straggler_deadline_factor
+        alive &= times <= deadline
+    if not alive.any():           # never lose the whole round
+        alive[np.argmin(times)] = True
+
+    clients = chosen[alive]
+    weights = np.ones(len(clients), np.float64) / len(clients)
+    return {
+        "clients": clients,
+        "weights": weights,
+        "dropped": chosen[~alive],
+        "times": times[alive],
+        "round_time": float(times[alive].max()) if len(clients) else 0.0,
+    }

@@ -1,0 +1,161 @@
+"""Lightweight auxiliary network generation (Ampere §3.2.2).
+
+The auxiliary network theta~(d) connects the device block's output to a
+local loss so the device trains with **no** server gradients:
+
+* layer 1 — a clone of the *first server-block layer* (layer p) with its
+  internal dimensions scaled by ``aux_ratio`` (paper default 0.5: half the
+  heads / half the FFN width / half the experts / half the SSM expansion).
+  The residual width (d_model / channel count) is preserved so the clone
+  consumes the split activations directly.
+* layer 2 — the task head.  Vision: GAP + FC to classes (paper-exact).
+  LM adaptation: the head is *tied to the device-side embedding table* by
+  default (a separate (D, V) dense head would dwarf the device block for
+  150k–256k vocabularies and defeat the "lightweight" requirement —
+  recorded in DESIGN.md); ``aux_head="dense"`` restores a paper-literal FC.
+
+Ablation switch ``aux_clone_first_server_layer=False`` drops layer 1
+(FC-only aux) — the configuration the paper argues *against* in §3.2.2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cnn as CNN
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import vit as VIT
+from repro.kernels.xent import ops as xent_ops
+
+
+# ---------------------------------------------------------------------------
+# Config surgery: scale internal dims of one layer
+# ---------------------------------------------------------------------------
+
+
+def scaled_lm_cfg(cfg, ratio: float):
+    """An LMConfig whose *internal* widths are scaled by ``ratio`` while the
+    residual width d_model stays fixed (block in/out shape unchanged)."""
+    def s(x, lo=1):
+        return max(lo, int(round(x * ratio)))
+
+    moe = cfg.moe
+    if moe.enabled:
+        n_exp = s(moe.num_experts)
+        moe = dataclasses.replace(
+            moe, num_experts=n_exp, top_k=min(moe.top_k, n_exp),
+            d_expert=s(moe.d_expert, 8),
+            num_shared_experts=(s(moe.num_shared_experts)
+                                if moe.num_shared_experts else 0),
+            d_shared=(s(moe.d_shared, 8) if moe.d_shared else 0))
+    mamba = cfg.mamba
+    if cfg.family in ("ssm", "hybrid"):
+        mamba = dataclasses.replace(mamba, expand=max(1, int(round(mamba.expand * ratio))),
+                                    d_state=s(mamba.d_state, 8))
+    n_kv = s(cfg.num_kv_heads) if cfg.num_kv_heads else 0
+    n_q = s(cfg.num_heads) if cfg.num_heads else 0
+    if n_kv and n_q % n_kv:
+        n_q = max(n_kv, (n_q // n_kv) * n_kv)  # keep GQA divisibility
+    return dataclasses.replace(
+        cfg, num_heads=n_q, num_kv_heads=n_kv, d_ff=s(cfg.d_ff, 8) if cfg.d_ff else 0,
+        moe=moe, mamba=mamba)
+
+
+# ---------------------------------------------------------------------------
+# Init / forward
+# ---------------------------------------------------------------------------
+
+
+def resolve_aux_head(model, split_cfg) -> str:
+    mode = getattr(split_cfg, "aux_head", "auto")
+    if mode != "auto":
+        return mode
+    return "tied" if model.kind == "lm" else "dense"
+
+
+def init_aux(model, key, split_cfg):
+    """Build theta~(d) for splitting ``model`` at split_cfg.split_point."""
+    cfg = model.cfg
+    p = split_cfg.split_point
+    ratio = split_cfg.aux_ratio
+    k1, k2 = jax.random.split(key)
+    aux = {}
+    if model.kind == "lm":
+        acfg = scaled_lm_cfg(cfg, ratio)
+        if split_cfg.aux_clone_first_server_layer:
+            aux["block"] = T.init_block(k1, acfg, p)
+        aux["norm"] = L.init_rmsnorm(cfg.d_model, cfg.param_dtype)
+        if resolve_aux_head(model, split_cfg) == "dense":
+            aux["head"] = L.init_dense(k2, cfg.d_model, cfg.vocab_size,
+                                       param_dtype=cfg.param_dtype)
+        return aux
+
+    # vision
+    if cfg.family in ("vit", "swin"):
+        D, Hh, _ = VIT.vit_scaled_dims(cfg, ratio)
+        if split_cfg.aux_clone_first_server_layer:
+            aux["block"] = VIT.init_vit_layer(k1, cfg, max(1, p),
+                                              in_dim=cfg.d_model,
+                                              width_scale=ratio)
+        aux["head"] = CNN.init_head(k2, cfg, cfg.d_model)
+        return aux
+    in_ch = CNN.cnn_channels(cfg, p - 1) if p > 0 else cfg.in_channels
+    if split_cfg.aux_clone_first_server_layer and p < cfg.num_layers:
+        aux["block"] = CNN.init_vision_layer(k1, cfg, p, in_ch=in_ch,
+                                             width_scale=ratio)
+        out_ch = CNN.cnn_channels(cfg, p, ratio)
+    else:
+        out_ch = in_ch
+    aux["head"] = CNN.init_head(k2, cfg, out_ch)
+    return aux
+
+
+def aux_hidden(model, aux_params, activations, split_cfg, *, positions=None,
+               impl="xla"):
+    """Run the aux layer-1 clone (if present) over split activations."""
+    cfg = model.cfg
+    p = split_cfg.split_point
+    if model.kind == "lm":
+        x = activations.astype(L.dt(cfg.dtype))
+        if "block" in aux_params:
+            acfg = scaled_lm_cfg(cfg, split_cfg.aux_ratio)
+            B, S = x.shape[:2]
+            if positions is None:
+                positions = T.default_positions(cfg, B, S)
+            x, _, _ = T.block_apply(acfg, aux_params["block"], x, positions,
+                                    p, impl=impl)
+        return L.rmsnorm(aux_params["norm"], x, cfg.norm_eps, cfg.dtype)
+    x = activations.astype(L.dt(cfg.dtype))
+    if "block" in aux_params:
+        if cfg.family in ("vit", "swin"):
+            _, Hh, _ = VIT.vit_scaled_dims(cfg, split_cfg.aux_ratio)
+            x = VIT.apply_vit_layer(cfg, aux_params["block"], x, max(1, p),
+                                    heads=Hh)
+        else:
+            x = CNN.apply_vision_layer(cfg, aux_params["block"], x, p)
+    return x
+
+
+def aux_loss(model, aux_params, device_params, activations, batch, split_cfg,
+             *, positions=None, impl="xla", xent_impl="xla"):
+    """Local loss F_k^(d) (Eq. 8): aux network over the device-block
+    activations against the task labels.  Returns (loss, metrics)."""
+    from repro.core import losses
+    cfg = model.cfg
+    h = aux_hidden(model, aux_params, activations, split_cfg,
+                   positions=positions, impl=impl)
+    if model.kind == "lm":
+        if resolve_aux_head(model, split_cfg) == "dense":
+            head_w = aux_params["head"]["w"]
+        else:
+            head_w = jnp.transpose(device_params["embed"]["table"])
+        return losses.lm_loss_from_hidden(h, head_w, batch["tokens"],
+                                          softcap=cfg.final_softcap,
+                                          impl=xent_impl,
+                                          loss_mask=batch.get("loss_mask"))
+    logits = CNN.apply_head(cfg, aux_params["head"], h)
+    return losses.classification_loss(logits, batch["labels"])

@@ -1,0 +1,4 @@
+from repro.core.baselines.sfl_family import SFLTrainer, make_sfl_round_step
+from repro.core.baselines.fedavg import FedAvgTrainer
+
+__all__ = ["SFLTrainer", "make_sfl_round_step", "FedAvgTrainer"]

@@ -1,0 +1,267 @@
+"""SFL baseline systems the paper evaluates against (§5.1):
+
+* ``splitfed``   — SplitFed V1 [Thapa et al., AAAI'22]: per-client device
+  AND server blocks; end-to-end split training; both sides FedAvg'd each
+  round.
+* ``splitfedv2`` — single shared server block, updated sequentially over
+  client activation streams; device blocks FedAvg'd.
+* ``splitgp``    — SplitGP [Han et al., INFOCOM'23]: device carries a local
+  (auxiliary-like) head; loss = 0.5*global + 0.5*local; everything
+  aggregated.
+* ``scaffold``   — SplitFed + SCAFFOLD [Karimireddy et al., ICML'20]
+  control variates on the client-held blocks (this paper's extension of
+  SCAFFOLD to SFL).
+* ``pipar``      — PiPar [Zhang et al., JPDC'24]: identical *mathematics*
+  to SplitFed; pipeline-parallel overlap changes only the simulated
+  wall-clock (comm_model handles it), so it shares the splitfed step.
+
+Every iteration of these systems exchanges activations + gradients with
+the server — that is precisely the per-iteration traffic Ampere eliminates;
+comm accounting in the trainer reflects it.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (aggregation, auxiliary, comm_model, evaluate, losses,
+                        splitting, steps)
+from repro.data.pipeline import ClientData, round_batches
+from repro.models import build_model
+from repro.optim import make_schedule
+from repro.runtime.metrics import MetricsLogger
+
+_SGD = lambda par, grads, lr: jax.tree.map(
+    lambda q, g: (q.astype(jnp.float32) - lr * g.astype(jnp.float32)
+                  ).astype(q.dtype), par, grads)
+
+
+def _e2e_split_loss(model, run_cfg, dev, srv, batch, *, xent_impl="xla"):
+    cfg = model.cfg
+    p = run_cfg.split.split_point
+    inp = batch["tokens"] if model.kind == "lm" else batch["images"]
+    acts = splitting.device_forward(model, dev, inp, p)
+    out = splitting.server_forward(model, srv, acts, p, remat="none")
+    if model.kind == "lm":
+        loss, _ = losses.lm_loss_from_hidden(
+            out["hidden"], splitting.server_head_weight(srv),
+            batch["tokens"], softcap=cfg.final_softcap, impl=xent_impl)
+    else:
+        loss, _ = losses.classification_loss(out["logits"], batch["labels"])
+    return loss + out["aux"]
+
+
+def make_sfl_round_step(model, run_cfg, variant: str = "splitfed"):
+    """One federated round.  state: {"device", "server"[, "aux"]};
+    batches leaves (K, H, b, ...)."""
+    H = run_cfg.fed.local_steps
+    split_cfg = run_cfg.split
+    p = split_cfg.split_point
+
+    def joint_loss(par, batch):
+        if variant == "splitgp":
+            dev, srv, aux = par
+            g = _e2e_split_loss(model, run_cfg, dev, srv, batch)
+            inp = batch["tokens"] if model.kind == "lm" else batch["images"]
+            acts = splitting.device_forward(model, dev, inp, p)
+            l, _ = auxiliary.aux_loss(model, aux, dev, acts, batch, split_cfg)
+            return 0.5 * g + 0.5 * l
+        dev, srv = par
+        return _e2e_split_loss(model, run_cfg, dev, srv, batch)
+
+    if variant in ("splitfed", "pipar", "splitgp"):
+        def client_round(par, client_batches, lr):
+            def one(par, batch):
+                loss, grads = jax.value_and_grad(joint_loss)(par, batch)
+                return _SGD(par, grads, lr), loss
+            par, losses_h = jax.lax.scan(one, par, client_batches, length=H)
+            return par, jnp.mean(losses_h)
+
+        def round_step(state, batches, weights, lr):
+            par = ((state["device"], state["server"], state["aux"])
+                   if variant == "splitgp"
+                   else (state["device"], state["server"]))
+            par_k, loss_k = jax.vmap(client_round, in_axes=(None, 0, None))(
+                par, batches, lr)
+            agg = aggregation.fedavg_stacked(par_k, weights)
+            new_state = ({"device": agg[0], "server": agg[1], "aux": agg[2]}
+                         if variant == "splitgp"
+                         else {"device": agg[0], "server": agg[1]})
+            w = aggregation.normalize_weights(weights)
+            return new_state, {"loss": jnp.sum(loss_k * w)}
+        return round_step
+
+    if variant == "splitfedv2":
+        def round_step(state, batches, weights, lr):
+            def per_client(server, inp):
+                client_batches, w = inp
+                def one(par, batch):
+                    loss, grads = jax.value_and_grad(joint_loss)(par, batch)
+                    return _SGD(par, grads, lr), loss
+                (dev, server), losses_h = jax.lax.scan(
+                    one, (state["device"], server), client_batches, length=H)
+                return server, (dev, jnp.mean(losses_h))
+
+            server, (dev_k, loss_k) = jax.lax.scan(
+                per_client, state["server"], (batches, weights))
+            new_dev = aggregation.fedavg_stacked(dev_k, weights)
+            w = aggregation.normalize_weights(weights)
+            return ({"device": new_dev, "server": server},
+                    {"loss": jnp.sum(loss_k * w)})
+        return round_step
+
+    if variant == "scaffold":
+        def client_round(par, controls, client_batches, lr):
+            c_global, c_k = controls
+
+            def one(par, batch):
+                loss, grads = jax.value_and_grad(joint_loss)(par, batch)
+                # g <- g - c_k + c
+                grads = jax.tree.map(
+                    lambda g, ck, c: g.astype(jnp.float32) - ck + c,
+                    grads, c_k, c_global)
+                return _SGD(par, grads, lr), loss
+
+            par_new, losses_h = jax.lax.scan(one, par, client_batches,
+                                             length=H)
+            # c_k' = c_k - c + (x - y)/(H*lr)
+            c_k_new = jax.tree.map(
+                lambda ck, c, x, y: ck - c + (x.astype(jnp.float32)
+                                              - y.astype(jnp.float32))
+                / (H * lr), c_k, c_global, par, par_new)
+            return par_new, c_k_new, jnp.mean(losses_h)
+
+        def round_step(state, controls, batches, weights, lr):
+            par = (state["device"], state["server"])
+            par_k, c_k_new, loss_k = jax.vmap(
+                client_round, in_axes=(None, (None, 0), 0, None))(
+                    par, controls, batches, lr)
+            agg = aggregation.fedavg_stacked(par_k, weights)
+            w = aggregation.normalize_weights(weights)
+            # c <- c + mean_k(c_k' - c_k) * |cohort|/N  (standard SCAFFOLD)
+            frac = jnp.sum(weights > 0) / run_cfg.fed.num_clients
+            dc = jax.tree.map(
+                lambda new, old: jnp.einsum(
+                    "k,k...->...", aggregation.normalize_weights(weights),
+                    new - old[None]) * frac,
+                c_k_new, controls[0])
+            new_c = jax.tree.map(lambda c, d: c + d, controls[0], dc)
+            return ({"device": agg[0], "server": agg[1]},
+                    (new_c, c_k_new), {"loss": jnp.sum(loss_k * w)})
+        return round_step
+
+    raise ValueError(f"unknown SFL variant {variant!r}")
+
+
+class SFLTrainer:
+    """Host loop shared by all SFL-family baselines."""
+
+    def __init__(self, model, run_cfg, clients: List[ClientData], eval_data,
+                 variant: str = "splitfed", workdir: Optional[str] = None,
+                 patience: int = 15, log_echo: bool = False):
+        self.model = model
+        self.run = run_cfg
+        self.variant = variant
+        self.clients = clients
+        self.eval_data = eval_data
+        self.rng = np.random.default_rng(run_cfg.fed.seed)
+        self.log = MetricsLogger(
+            os.path.join(workdir, f"{variant}.jsonl") if workdir else None,
+            echo=log_echo)
+        self.patience = patience
+        self._round = jax.jit(make_sfl_round_step(model, run_cfg, variant))
+        self._sched = make_schedule(run_cfg.optim)
+        seq = (clients[0].dataset.arrays["tokens"].shape[1]
+               if model.kind == "lm" else 0)
+        self.sizes = comm_model.split_sizes(model, run_cfg.split, seq_len=max(seq, 1))
+        self.seq_len = seq
+        self.history = {"rounds": [], "comm_bytes": 0, "sim_time": 0.0}
+
+    def _init_state(self, key):
+        params = self.model.init(key)
+        dev, srv = splitting.split_params(self.model, params,
+                                          self.run.split.split_point)
+        state = {"device": dev, "server": srv}
+        if self.variant == "splitgp":
+            state["aux"] = auxiliary.init_aux(
+                self.model, jax.random.fold_in(key, 3), self.run.split)
+        controls = None
+        if self.variant == "scaffold":
+            zero = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                                (dev, srv))
+            c_k_all = jax.tree.map(
+                lambda x: jnp.zeros((self.run.fed.num_clients,) + x.shape,
+                                    jnp.float32), (dev, srv))
+            controls = (zero, c_k_all)
+        return state, controls
+
+    def run_rounds(self, max_rounds: int, key=None):
+        fed = self.run.fed
+        key = key if key is not None else jax.random.PRNGKey(self.run.seed)
+        state, controls = self._init_state(key)
+        stopper = evaluate.EarlyStopper(self.patience, mode="min")
+        merged_model = build_model(splitting.merged_config(self.model))
+        eval_step = evaluate.make_eval_step(merged_model)
+        K = fed.clients_per_round
+        tm = comm_model.TimeModel()
+
+        for rnd in range(max_rounds):
+            cohort = aggregation.sample_cohort(self.rng, fed, rnd)
+            ids = list(cohort["clients"])
+            w = list(cohort["weights"])
+            while len(ids) < K:
+                ids.append(ids[0])
+                w.append(0.0)
+            batches = round_batches(self.clients, ids, fed.local_steps,
+                                    fed.device_batch_size)
+            batches = {k: jnp.asarray(v) for k, v in batches.items()}
+            weights = jnp.asarray(w, jnp.float32)
+            lr = self._sched(rnd)
+            if self.variant == "scaffold":
+                c, c_k_all = controls
+                c_k_cohort = jax.tree.map(
+                    lambda x: x[np.asarray(ids)], c_k_all)
+                state, (c, c_k_cohort), metrics = self._round(
+                    state, (c, c_k_cohort), batches, weights, lr)
+                c_k_all = jax.tree.map(
+                    lambda full, upd: full.at[np.asarray(ids)].set(upd),
+                    c_k_all, c_k_cohort)
+                controls = (c, c_k_all)
+            else:
+                state, metrics = self._round(state, batches, weights, lr)
+
+            merged = splitting.merge_params(self.model, state["device"],
+                                            state["server"],
+                                            self.run.split.split_point)
+            val = evaluate.evaluate(merged_model, merged, self.eval_data,
+                                    eval_step=eval_step)
+            # per-round comm: model exchanges + per-iteration act/grad
+            iters = fed.local_steps
+            b = fed.device_batch_size
+            act_bytes = 2 * self.sizes.act_per_sample * b * iters
+            model_bytes = 2 * (self.sizes.device
+                               + (self.sizes.aux if self.variant == "splitgp"
+                                  else 0))
+            if self.variant == "scaffold":
+                model_bytes *= 2
+            self.history["comm_bytes"] += len(cohort["clients"]) * (
+                act_bytes + model_bytes)
+            n_round_samples = b * iters
+            t = comm_model.epoch_time(
+                "pipar" if self.variant == "pipar" else "splitfed",
+                self.model, self.run.split, tm, n_samples=n_round_samples,
+                batch_size=b, seq_len=self.seq_len, sizes=self.sizes)
+            self.history["sim_time"] += t
+            rec = {"round": rnd, "loss": float(metrics["loss"]),
+                   "val_loss": val["loss"], "val_acc": val["acc"]}
+            self.history["rounds"].append(rec)
+            self.log.log(variant=self.variant, **rec)
+            if stopper.update(val["loss"]):
+                break
+        return {"state": state, "history": self.history,
+                "merged_params": merged}

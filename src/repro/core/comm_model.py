@@ -1,0 +1,211 @@
+"""Analytic communication/computation cost model (paper §4.2, Eqs. 5, 27-31)
+plus the wall-time simulator used to reproduce Tables 1/5 and Figures 3/6/8/9.
+
+All byte counts are *exact* — derived from abstract parameter/activation
+shapes (jax.eval_shape; nothing is allocated), so the model scales from the
+paper's CNNs to the 398B assigned archs.
+
+Hardware constants default to the paper's testbed (Jetson Nano devices,
+50 Mbps device-server links, A6000 server); the launchers override them
+with TPU-pod numbers where relevant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core import auxiliary
+
+
+# Paper testbed constants
+DEVICE_GFLOPS = 236.0        # Jetson Nano fp16 ~ 472 GFLOPS peak; ~50% util
+SERVER_GFLOPS = 75_000.0     # A6000 tensor-core sustained
+BANDWIDTH_BPS = 50e6 / 8.0   # 50 Mbps -> bytes/s
+DTYPE_BYTES = 4              # paper transfers fp32
+
+
+def tree_bytes(tree) -> int:
+    return int(sum(int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+                   for l in jax.tree.leaves(tree)))
+
+
+def abstract_params(model):
+    return jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitSizes:
+    """Byte sizes for a split at p (the s^(d) / s^(aux) / s^(s) / s^(act)
+    of Table 2), plus per-layer parameter sizes for the split-point sweep."""
+    device: int              # s^(d)  — device block params (incl. embedding)
+    aux: int                 # s^(aux)
+    server: int              # s^(s)
+    act_per_sample: int      # activation bytes for ONE sample
+    per_layer: tuple         # parameter bytes of each layer
+    head: int                # output head + final norm bytes (server side)
+    embed: int               # embedding bytes (device side, LM only)
+
+
+def split_sizes(model, split_cfg, *, seq_len: int = 0,
+                act_dtype_bytes: Optional[int] = None) -> SplitSizes:
+    from repro.core import splitting
+    p = split_cfg.split_point
+    params = abstract_params(model)
+    dev, srv = jax.eval_shape(
+        lambda pp: splitting.split_params(model, pp, p), params)
+    aux = jax.eval_shape(
+        lambda k: auxiliary.init_aux(model, k, split_cfg),
+        jax.random.PRNGKey(0))
+
+    cfg = model.cfg
+    if model.kind == "lm":
+        per_layer = []
+        P = cfg.pattern_period
+        for i in range(cfg.num_layers):
+            lay = jax.eval_shape(
+                lambda pp, i=i: splitting.loose_layer(pp["blocks"], i, P),
+                params)
+            per_layer.append(tree_bytes(lay))
+        embed = tree_bytes(params["embed"])
+        head = tree_bytes({k: params[k] for k in ("final_norm", "head")
+                           if k in params})
+        act_elems = seq_len * cfg.d_model
+        ab = act_dtype_bytes or DTYPE_BYTES
+        act = act_elems * ab + seq_len * 4      # activations + token labels
+    else:
+        per_layer = [tree_bytes(params["layers"][i])
+                     for i in range(cfg.num_layers)]
+        embed = 0
+        head = tree_bytes(params["head"])
+        spec = model.activation_spec(1, split_point=p, dtype="float32")
+        ab = act_dtype_bytes or DTYPE_BYTES
+        act = int(np.prod(spec.shape)) * ab + 4  # + int label
+
+    return SplitSizes(
+        device=tree_bytes(dev), aux=tree_bytes(aux), server=tree_bytes(srv),
+        act_per_sample=act, per_layer=tuple(per_layer), head=head,
+        embed=embed)
+
+
+# ---------------------------------------------------------------------------
+# Communication volume per algorithm (per device, over training) — Eqs 27-31
+# ---------------------------------------------------------------------------
+
+
+def comm_volume(algo: str, sizes: SplitSizes, *, epochs: int,
+                n_samples: int, device_epochs: Optional[int] = None,
+                server_epochs: Optional[int] = None,
+                act_compress: float = 1.0) -> int:
+    """Total device<->server bytes for one device.
+
+    ``epochs`` = N for iterative algorithms; Ampere uses
+    ``device_epochs`` (N^(d)) for model exchanges and sends activations
+    once.  ``act_compress`` < 1 models activation quantization.
+    """
+    s_act_total = int(sizes.act_per_sample * n_samples * act_compress)
+    if algo == "fedavg":
+        s_full = sizes.device + sizes.server
+        return 2 * epochs * s_full
+    if algo in ("splitfed", "splitfedv2", "pipar"):
+        return 2 * epochs * (sizes.device + s_act_total)
+    if algo == "scaffold":
+        # control variates double the model exchange
+        return 2 * epochs * (2 * sizes.device + s_act_total)
+    if algo == "splitgp":
+        # device also carries (and exchanges) a personal head ~ aux-sized
+        return 2 * epochs * (sizes.device + sizes.aux + s_act_total)
+    if algo == "ampere":
+        nd = device_epochs if device_epochs is not None else epochs
+        return 2 * nd * (sizes.device + sizes.aux) + s_act_total
+    raise ValueError(f"unknown algo {algo!r}")
+
+
+def comm_rounds(algo: str, *, epochs: int, iters_per_epoch: int,
+                device_epochs: Optional[int] = None) -> int:
+    """Transfer events per device (Table 1 semantics: every model /
+    activation-batch / gradient-batch transfer is one round)."""
+    if algo == "fedavg":
+        return 2 * epochs
+    if algo in ("splitfed", "splitfedv2", "pipar", "scaffold", "splitgp"):
+        return 2 * epochs + 2 * epochs * iters_per_epoch
+    if algo == "ampere":
+        nd = device_epochs if device_epochs is not None else epochs
+        return 2 * nd + 1
+    raise ValueError(f"unknown algo {algo!r}")
+
+
+# ---------------------------------------------------------------------------
+# On-device computation (Fig. 9) and wall-time (Fig. 8) models
+# ---------------------------------------------------------------------------
+
+
+def device_flops_per_sample(model, split_cfg, algo: str, *,
+                            seq_len: int = 0) -> float:
+    """Training FLOPs executed ON THE DEVICE per sample (fwd+bwd ~ 3x fwd).
+
+    LM: 6 * params_on_device per token.  Vision: 6 * params_on_device as a
+    dense proxy (conv reuse makes this a lower bound; relative comparisons
+    across algorithms — which is what Fig. 9 reports — are unaffected).
+    """
+    sizes = split_sizes(model, split_cfg, seq_len=max(seq_len, 1))
+    dev_params = sizes.device / 4            # fp32 bytes -> param count
+    aux_params = sizes.aux / 4
+    tokens = seq_len if model.kind == "lm" else 1
+    if algo == "fedavg":
+        total = (sizes.device + sizes.server) / 4
+        return 6.0 * total * tokens
+    if algo == "ampere":
+        return 6.0 * (dev_params + aux_params) * tokens
+    if algo == "splitgp":
+        return 6.0 * (dev_params + aux_params) * tokens
+    # splitfed / pipar / scaffold: device block only
+    return 6.0 * dev_params * tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class TimeModel:
+    device_gflops: float = DEVICE_GFLOPS
+    server_gflops: float = SERVER_GFLOPS
+    bandwidth: float = BANDWIDTH_BPS
+    speed_factor: float = 1.0     # straggler group scaling
+
+
+def epoch_time(algo: str, model, split_cfg, tm: TimeModel, *,
+               n_samples: int, batch_size: int, seq_len: int = 0,
+               sizes: Optional[SplitSizes] = None) -> float:
+    """Simulated wall-clock seconds for ONE epoch on one device."""
+    sizes = sizes or split_sizes(model, split_cfg, seq_len=max(seq_len, 1))
+    fl_dev = device_flops_per_sample(model, split_cfg, algo, seq_len=seq_len)
+    t_dev = fl_dev * n_samples / (tm.device_gflops * 1e9 * tm.speed_factor)
+    srv_params = sizes.server / 4
+    tokens = seq_len if model.kind == "lm" else 1
+    t_srv = 6.0 * srv_params * tokens * n_samples / (tm.server_gflops * 1e9)
+    t_model_x = 2 * (sizes.device + (sizes.aux if algo in ("ampere", "splitgp")
+                                     else 0)) / tm.bandwidth
+    t_act = 2 * sizes.act_per_sample * n_samples / tm.bandwidth
+
+    if algo == "fedavg":
+        t_full = 6.0 * (sizes.device + sizes.server) / 4 * tokens * n_samples \
+            / (tm.device_gflops * 1e9 * tm.speed_factor)
+        return t_full + 2 * (sizes.device + sizes.server) / tm.bandwidth
+    if algo == "ampere":
+        # device epoch: local compute + model exchange only
+        return t_dev + t_model_x
+    if algo == "pipar":
+        # overlapped: per-iteration time ~ max of the two pipelines
+        return max(t_dev + t_srv, t_act) + t_model_x
+    # splitfed / scaffold / splitgp: strictly sequential per iteration
+    extra = t_model_x if algo != "scaffold" else 2 * t_model_x
+    return t_dev + t_srv + t_act + extra
+
+
+def ampere_server_epoch_time(model, split_cfg, tm: TimeModel, *,
+                             n_samples: int, seq_len: int = 0,
+                             sizes: Optional[SplitSizes] = None) -> float:
+    sizes = sizes or split_sizes(model, split_cfg, seq_len=max(seq_len, 1))
+    tokens = seq_len if model.kind == "lm" else 1
+    return 6.0 * (sizes.server / 4) * tokens * n_samples / (tm.server_gflops * 1e9)

@@ -1,0 +1,53 @@
+"""Loss functions shared by Ampere and the SFL baselines."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.xent import ops as xent_ops
+
+
+def classification_loss(logits, labels):
+    """Softmax CE for the vision path.  logits (B, C), labels (B,) int32."""
+    logf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logf, axis=-1)
+    corr = jnp.take_along_axis(logf, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - corr)
+    acc = jnp.mean((jnp.argmax(logf, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "acc": acc}
+
+
+def lm_loss_from_hidden(hidden, head_w, tokens, *, softcap: float = 0.0,
+                        impl: str = "xla", loss_mask=None):
+    """Next-token CE computed *from the final hidden states* via the fused
+    blockwise xent op (logits are never materialized).
+
+    hidden: (B, S, D) post-final-norm; head_w: (D, V); tokens: (B, S).
+    Position t predicts token t+1; the last position is masked out.
+    """
+    B, S, D = hidden.shape
+    h = hidden[:, :-1].reshape(B * (S - 1), D)
+    labels = tokens[:, 1:].reshape(B * (S - 1))
+    if loss_mask is None:
+        mask = jnp.ones((B * (S - 1),), jnp.float32)
+    else:
+        mask = loss_mask[:, 1:].reshape(B * (S - 1)).astype(jnp.float32)
+    loss, per_token = xent_ops.cross_entropy(h, head_w, labels, mask,
+                                             softcap=softcap, impl=impl)
+    return loss, {"loss": loss}
+
+
+def lm_loss_from_logits(logits, tokens, loss_mask=None):
+    """Next-token CE from materialized logits (small-scale / smoke path)."""
+    logf = logits[:, :-1].astype(jnp.float32)
+    labels = tokens[:, 1:]
+    lse = jax.nn.logsumexp(logf, axis=-1)
+    corr = jnp.take_along_axis(logf, labels[..., None], axis=-1)[..., 0]
+    per = lse - corr
+    if loss_mask is None:
+        mask = jnp.ones_like(per)
+    else:
+        mask = loss_mask[:, 1:].astype(jnp.float32)
+    loss = jnp.sum(per * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss}

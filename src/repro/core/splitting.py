@@ -1,0 +1,186 @@
+"""Split-point machinery (Ampere §3.2.1).
+
+Splits a model at layer ``p`` into a *device block* (embedding + layers
+[0, p)) and a *server block* (layers [p, L) + final norm + head), provides
+the forward functions of each half, and re-merges the halves for
+end-to-end evaluation/serving.
+
+LM parameter trees are period-stacked (see models/transformer.py); the
+device block (p is small — the paper's optimum is p=1) is carried as a
+list of *loose* per-layer trees, while the server block keeps the stacked
+representation for the complete trailing repetitions plus loose layers for
+the partial leading period — so the server training step still scans.
+
+Tied-embedding archs: the server must own an output head after the split
+(the embedding lives on the device), so ``split_params`` materializes an
+untied head from the tied table at split time; ``merged_config`` flips
+``tie_embeddings`` off accordingly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def _is_lm(model) -> bool:
+    return model.kind == "lm"
+
+
+def loose_layer(blocks, layer_idx: int, period: int):
+    r, j = divmod(layer_idx, period)
+    return jax.tree.map(lambda a: a[r], blocks[f"pos{j}"])
+
+
+# ---------------------------------------------------------------------------
+# Split / merge
+# ---------------------------------------------------------------------------
+
+
+def split_params(model, params, p: int):
+    cfg = model.cfg
+    if not _is_lm(model):
+        device = {"layers": list(params["layers"][:p])}
+        server = {"layers": list(params["layers"][p:]), "head": params["head"]}
+        return device, server
+
+    P = cfg.pattern_period
+    R = cfg.num_layers // P
+    r0 = -(-p // P)  # first complete repetition owned by the server
+    device = {
+        "embed": params["embed"],
+        "layers": [loose_layer(params["blocks"], i, P) for i in range(p)],
+    }
+    server = {
+        "layers_head": [loose_layer(params["blocks"], i, P)
+                        for i in range(p, min(r0 * P, cfg.num_layers))],
+        "blocks": {f"pos{j}": jax.tree.map(lambda a: a[r0:R],
+                                           params["blocks"][f"pos{j}"])
+                   for j in range(P)} if r0 < R else None,
+        "final_norm": params["final_norm"],
+    }
+    if cfg.tie_embeddings:
+        server["head"] = {"w": jnp.transpose(params["embed"]["table"])}
+    else:
+        server["head"] = params["head"]
+    return device, server
+
+
+def merged_config(model):
+    """Config of the merged (device+server) model: tied archs become untied
+    because the server head was materialized at split time."""
+    cfg = model.cfg
+    if _is_lm(model) and cfg.tie_embeddings:
+        return dataclasses.replace(cfg, tie_embeddings=False)
+    return cfg
+
+
+def merge_params(model, device, server, p: int):
+    """Re-assemble a full parameter tree from the two halves."""
+    cfg = model.cfg
+    if not _is_lm(model):
+        return {"layers": list(device["layers"]) + list(server["layers"]),
+                "head": server["head"]}
+    P = cfg.pattern_period
+    R = cfg.num_layers // P
+    r0 = -(-p // P)
+
+    def layer_at(i):
+        if i < p:
+            return device["layers"][i]
+        if i < r0 * P:
+            return server["layers_head"][i - p]
+        r, j = divmod(i, P)
+        return jax.tree.map(lambda a: a[r - r0], server["blocks"][f"pos{j}"])
+
+    blocks = {}
+    for j in range(P):
+        per_rep = [layer_at(r * P + j) for r in range(R)]
+        blocks[f"pos{j}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep)
+    return {"embed": device["embed"], "blocks": blocks,
+            "final_norm": server["final_norm"], "head": server["head"]}
+
+
+# ---------------------------------------------------------------------------
+# Half-model forwards
+# ---------------------------------------------------------------------------
+
+
+def device_forward(model, device_params, inputs, p: int, *, positions=None,
+                   impl="xla", remat: str = "none"):
+    """Embedding + layers [0, p) -> activations xi (the one-shot payload)."""
+    cfg = model.cfg
+    if not _is_lm(model):
+        x = inputs
+        from repro.models import cnn as CNN
+        from repro.models import vit as VIT
+        for i in range(p):
+            if cfg.family in ("vit", "swin"):
+                x = VIT.apply_vit_layer(cfg, device_params["layers"][i], x, i)
+            else:
+                x = CNN.apply_vision_layer(cfg, device_params["layers"][i], x, i)
+        return x
+
+    B, S = inputs.shape
+    x = L.embed(device_params["embed"], inputs, cfg.dtype,
+                multiplier=cfg.embedding_multiplier)
+    if positions is None:
+        positions = T.default_positions(cfg, B, S)
+    for i in range(p):
+        fn = T.checkpointed_block_apply if remat == "block" else T.block_apply
+        x, _, _ = fn(cfg, device_params["layers"][i], x, positions, i,
+                     impl=impl)
+    return x
+
+
+def server_forward(model, server_params, activations, p: int, *,
+                   positions=None, impl="xla", scan=True, remat="block",
+                   return_logits=True):
+    """Layers [p, L) + final norm (+ head weight exposed separately)."""
+    cfg = model.cfg
+    if not _is_lm(model):
+        x = activations.astype(L.dt(cfg.dtype))
+        from repro.models import cnn as CNN
+        from repro.models import vit as VIT
+        n_server = len(server_params["layers"])
+        for k in range(n_server):
+            i = p + k
+            if cfg.family in ("vit", "swin"):
+                x = VIT.apply_vit_layer(cfg, server_params["layers"][k], x, i)
+            else:
+                x = CNN.apply_vision_layer(cfg, server_params["layers"][k], x, i)
+        logits = CNN.apply_head(cfg, server_params["head"], x) \
+            if return_logits else None
+        return {"hidden": x, "logits": logits,
+                "aux": jnp.zeros((), jnp.float32)}
+
+    P = cfg.pattern_period
+    r0 = -(-p // P)
+    B, S = activations.shape[:2]
+    x = activations.astype(L.dt(cfg.dtype))
+    if positions is None:
+        positions = T.default_positions(cfg, B, S)
+    aux_total = jnp.zeros((), jnp.float32)
+    for k, lp in enumerate(server_params["layers_head"]):
+        i = p + k
+        fn = T.checkpointed_block_apply if remat == "block" else T.block_apply
+        x, _, aux = fn(cfg, lp, x, positions, i, impl=impl)
+        aux_total = aux_total + aux
+    if server_params["blocks"] is not None:
+        n_rel = cfg.num_layers - r0 * P
+        x, _, aux = T.run_blocks(cfg, server_params["blocks"], x, positions,
+                                 lo=0, hi=n_rel, impl=impl, scan=scan,
+                                 remat=remat)
+        aux_total = aux_total + aux
+    h = L.rmsnorm(server_params["final_norm"], x, cfg.norm_eps, cfg.dtype)
+    return {"hidden": h, "logits": None, "aux": aux_total}
+
+
+def server_head_weight(server_params):
+    return server_params["head"]["w"]

@@ -1,0 +1,263 @@
+"""Jittable training / serving steps.
+
+These are the functions the launchers ``jax.jit(...).lower().compile()``
+for the production meshes — the multi-pod dry-run and the roofline both
+read from here.
+
+Ampere decomposes training into two steps (never active simultaneously —
+that is the point of UIT):
+
+* :func:`make_device_round_step` — one federated round of the device phase:
+  every participating client runs H local-SGD iterations on
+  (device block + auxiliary network) starting from the global params, then
+  the round ends with weighted FedAvg across the client axis (Eq. 9+10).
+  Clients are vmapped over a leading axis that the launcher shards across
+  the DP mesh axes, so per-client local SGD is embarrassingly parallel and
+  the aggregation is one weighted psum — communication-wise this is
+  *exactly* local SGD with period H.
+
+* :func:`make_server_train_step` — one step of the centralized server phase
+  over consolidated activations (Eq. 11+12): a standard DP x TP training
+  step; >95% of total FLOPs live here for p=1, so this is the
+  roofline-bearing graph.
+
+Baselines / serving:
+
+* :func:`make_e2e_train_step`    — end-to-end step (FL / SplitFed-V2
+  semantics under immediate aggregation; also the non-split reference).
+* :func:`make_prefill_step` / :func:`make_decode_step` — serving graphs
+  for the decode_* input shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation, auxiliary, losses, splitting
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.optim import make_optimizer, make_schedule, clip_by_global_norm
+from repro.sharding import shard
+
+
+def _device_batch_slice(batch, idx):
+    return jax.tree.map(lambda a: a[idx], batch)
+
+
+# ---------------------------------------------------------------------------
+# Ampere device phase
+# ---------------------------------------------------------------------------
+
+
+def make_device_round_step(model, run_cfg, *, impl="xla", xent_impl="xla"):
+    split_cfg = run_cfg.split
+    p = split_cfg.split_point
+    H = run_cfg.fed.local_steps
+
+    def local_loss(par, batch):
+        device_params, aux_params = par
+        if model.kind == "lm":
+            acts = splitting.device_forward(model, device_params,
+                                            batch["tokens"], p, impl=impl)
+        else:
+            acts = splitting.device_forward(model, device_params,
+                                            batch["images"], p, impl=impl)
+        loss, m = auxiliary.aux_loss(model, aux_params, device_params, acts,
+                                     batch, split_cfg, impl=impl,
+                                     xent_impl=xent_impl)
+        return loss
+
+    def client_round(device_params, aux_params, client_batches, lr):
+        """H local SGD iterations on one client (Eq. 9)."""
+        def one_step(par, batch):
+            loss, grads = jax.value_and_grad(local_loss)(par, batch)
+            new_par = jax.tree.map(
+                lambda q, g: (q.astype(jnp.float32)
+                              - lr * g.astype(jnp.float32)).astype(q.dtype),
+                par, grads)
+            return new_par, loss
+
+        from repro.analysis import scan_unroll
+        (device_params, aux_params), losses_h = jax.lax.scan(
+            one_step, (device_params, aux_params), client_batches, length=H,
+            unroll=scan_unroll(H))
+        return device_params, aux_params, jnp.mean(losses_h)
+
+    def device_round_step(state, batches, weights, lr):
+        """state: {"device":..., "aux":...}; batches leaves (K, H, b, ...);
+        weights: (K,) aggregation weights (zeros = dropped client)."""
+        dev_k, aux_k, loss_k = jax.vmap(
+            client_round, in_axes=(None, None, 0, None))(
+                state["device"], state["aux"], batches, lr)
+        new_device = aggregation.fedavg_stacked(dev_k, weights)
+        new_aux = aggregation.fedavg_stacked(aux_k, weights)
+        w = aggregation.normalize_weights(weights)
+        metrics = {"loss": jnp.sum(loss_k * w)}
+        return {"device": new_device, "aux": new_aux}, metrics
+
+    return device_round_step
+
+
+# ---------------------------------------------------------------------------
+# Ampere server phase
+# ---------------------------------------------------------------------------
+
+
+def make_server_train_step(model, run_cfg, *, impl="xla", xent_impl="xla",
+                           grad_shardings=None):
+    """``grad_shardings``: optional NamedSharding tree matching the server
+    params; constraining the gradients to the parameter sharding right at
+    the grad boundary makes SPMD materialize them as a reduce-scatter in
+    the backward dtype instead of a full-precision all-reduce deferred to
+    the optimizer use-site (measured 2-4x collective reduction on ZeRO
+    configs)."""
+    cfg = model.cfg
+    p = run_cfg.split.split_point
+    opt = make_optimizer(run_cfg.optim)
+    sched = make_schedule(run_cfg.optim)
+    scan = run_cfg.sharding.scan_layers
+    remat = run_cfg.sharding.remat
+
+    def loss_fn(server_params, batch):
+        acts = batch["acts"]
+        if run_cfg.split.quantize_activations:
+            from repro.runtime import compression
+            acts = compression.dequantize_int8(acts, batch["acts_scale"])
+        out = splitting.server_forward(model, server_params, acts, p,
+                                       impl=impl, scan=scan, remat=remat)
+        if model.kind == "lm":
+            head_w = splitting.server_head_weight(server_params)
+            loss, m = losses.lm_loss_from_hidden(
+                out["hidden"], head_w, batch["tokens"],
+                softcap=cfg.final_softcap, impl=xent_impl,
+                loss_mask=batch.get("loss_mask"))
+        else:
+            loss, m = losses.classification_loss(out["logits"],
+                                                 batch["labels"])
+        return loss + out["aux"], m
+
+    def server_train_step(state, batch):
+        (loss, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["server"], batch)
+        if run_cfg.optim.grad_dtype:
+            gd = jnp.dtype(run_cfg.optim.grad_dtype)
+            grads = jax.tree.map(lambda g: g.astype(gd), grads)
+        if grad_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        if run_cfg.optim.grad_clip:
+            grads, _ = clip_by_global_norm(grads, run_cfg.optim.grad_clip)
+        lr = sched(state["step"])
+        new_params, new_opt = opt.update(grads, state["opt"],
+                                         state["server"], lr)
+        new_state = {"server": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        m = dict(m, lr=lr)
+        return new_state, m
+
+    return server_train_step
+
+
+def init_server_state(model, run_cfg, server_params):
+    opt = make_optimizer(run_cfg.optim)
+    return {"server": server_params, "opt": opt.init(server_params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# End-to-end baseline step (FL / SplitFed-V2-like)
+# ---------------------------------------------------------------------------
+
+
+def _lm_hidden_and_loss(cfg, params, tokens, *, impl, xent_impl, scan, remat,
+                        loss_mask=None):
+    out = T.forward(cfg, params, tokens, impl=impl, scan=scan, remat=remat,
+                    return_logits=False)
+    h = L.rmsnorm(params["final_norm"], out["hidden"], cfg.norm_eps, cfg.dtype)
+    head_w = T.head_weight(cfg, params)
+    loss, m = losses.lm_loss_from_hidden(h, head_w, tokens,
+                                         softcap=cfg.final_softcap,
+                                         impl=xent_impl, loss_mask=loss_mask)
+    return loss + out["aux"], m
+
+
+def make_e2e_train_step(model, run_cfg, *, impl="xla", xent_impl="xla"):
+    cfg = model.cfg
+    opt = make_optimizer(run_cfg.optim)
+    sched = make_schedule(run_cfg.optim)
+    scan = run_cfg.sharding.scan_layers
+    remat = run_cfg.sharding.remat
+
+    def loss_fn(params, batch):
+        if model.kind == "lm":
+            return _lm_hidden_and_loss(cfg, params, batch["tokens"],
+                                       impl=impl, xent_impl=xent_impl,
+                                       scan=scan, remat=remat,
+                                       loss_mask=batch.get("loss_mask"))
+        out = model.apply(params, batch["images"], remat=remat)
+        loss, m = losses.classification_loss(out["logits"], batch["labels"])
+        return loss + out["aux"], m
+
+    def e2e_train_step(state, batch):
+        (loss, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"], batch)
+        if run_cfg.optim.grad_clip:
+            grads, _ = clip_by_global_norm(grads, run_cfg.optim.grad_clip)
+        lr = sched(state["step"])
+        new_params, new_opt = opt.update(grads, state["opt"],
+                                         state["params"], lr)
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}, dict(m, lr=lr))
+
+    return e2e_train_step
+
+
+def init_e2e_state(model, run_cfg, params):
+    opt = make_optimizer(run_cfg.optim)
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(model, run_cfg, *, impl="xla"):
+    cfg = model.cfg
+    scan = run_cfg.sharding.scan_layers
+
+    def prefill_step(params, tokens, caches):
+        """Fill the KV caches for the prompt; return last-position logits.
+
+        Logits are computed for the LAST position only — materializing
+        (B, S, V) for a 32k prompt would be hundreds of GB."""
+        out = T.forward(cfg, params, tokens, caches=caches, cache_index=0,
+                        impl=impl, scan=scan, remat="none",
+                        return_logits=False)
+        h = L.rmsnorm(params["final_norm"], out["hidden"][:, -1:],
+                      cfg.norm_eps, cfg.dtype)
+        if cfg.tie_embeddings:
+            logits = L.unembed(params["embed"], h, cfg.dtype)
+        else:
+            logits = L.dense(params["head"], h, cfg.dtype)
+        logits = L.softcap(logits, cfg.final_softcap)
+        return logits[:, 0], out["caches"]
+
+    return prefill_step
+
+
+def make_decode_step(model, run_cfg, *, impl="xla", scan: bool = False):
+    cfg = model.cfg
+
+    def decode_step(params, caches, token, index):
+        """One decode step: token (B, 1) at position ``index``."""
+        out = T.forward(cfg, params, token, caches=caches, cache_index=index,
+                        impl=impl, scan=scan, remat="none")
+        next_token = jnp.argmax(out["logits"][:, -1], axis=-1)
+        return next_token, out["logits"][:, -1], out["caches"]
+
+    return decode_step

@@ -1,0 +1,273 @@
+"""Unidirectional Inter-Block Training — the Ampere orchestrator
+(paper §3.3, Algorithm 1).
+
+Five steps (Fig. 5):
+  1  initialize theta on the server
+  2  split into device/server blocks, generate the auxiliary network
+  3  federated device-phase rounds: cohort sampling (w/ dropout + straggler
+     policy), H local-SGD iterations per client, weighted FedAvg —
+     early-stopped on the auxiliary validation metric
+  4  one-shot activation generation from the *converged* device block,
+     uploaded asynchronously into the consolidation store
+  5  centralized server-phase training on the consolidated set 𝒜, training
+     begins as soon as the first shard lands (streaming mode) —
+     early-stopped on merged-model validation
+
+Fault tolerance: every phase checkpoints through
+:class:`repro.runtime.checkpoint.Checkpointer` with a round journal; a
+restarted run resumes from (phase, round/epoch) — exercised by the tests.
+
+This driver runs at any scale; CPU experiments use smoke configs, the pod
+launcher reuses the same jitted steps (core/steps.py) under the production
+mesh.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, auxiliary, comm_model, evaluate, splitting, steps
+from repro.data.activation_store import ActivationStore
+from repro.data.pipeline import ClientData, round_batches
+from repro.models import build_model
+from repro.optim import make_schedule
+from repro.runtime.checkpoint import Checkpointer
+from repro.runtime.fault_tolerance import RoundJournal
+from repro.runtime.metrics import MetricsLogger
+
+
+class AmpereTrainer:
+    def __init__(self, model, run_cfg, clients: List[ClientData],
+                 eval_data, workdir: Optional[str] = None,
+                 patience: int = 15, log_echo: bool = False,
+                 consolidate: bool = True):
+        self.model = model
+        self.run = run_cfg
+        self.clients = clients
+        self.eval_data = eval_data
+        self.workdir = workdir
+        self.patience = patience
+        self.consolidate = consolidate
+        self.rng = np.random.default_rng(run_cfg.fed.seed)
+        self.log = MetricsLogger(
+            os.path.join(workdir, "metrics.jsonl") if workdir else None,
+            echo=log_echo)
+        self.ckpt = Checkpointer(os.path.join(workdir, "ckpt")) if workdir \
+            else None
+        self.journal = RoundJournal(os.path.join(workdir, "journal.jsonl")) \
+            if workdir else None
+        self.history = {"device": [], "server": [], "comm_bytes": 0,
+                        "sim_time": 0.0}
+
+        # step functions
+        self._device_round = jax.jit(steps.make_device_round_step(model, run_cfg))
+        self._server_step = jax.jit(steps.make_server_train_step(model, run_cfg))
+        self._sched = make_schedule(run_cfg.optim)
+
+        # sizes for comm accounting
+        seq = self._seq_len()
+        self.sizes = comm_model.split_sizes(model, run_cfg.split, seq_len=seq)
+
+    # ------------------------------------------------------------------
+    def _seq_len(self) -> int:
+        if self.model.kind != "lm":
+            return 0
+        return int(self.clients[0].dataset.arrays["tokens"].shape[1])
+
+    def _init_states(self, key):
+        params = self.model.init(key)
+        p = self.run.split.split_point
+        dev, srv = splitting.split_params(self.model, params, p)
+        aux = auxiliary.init_aux(self.model, jax.random.fold_in(key, 7),
+                                 self.run.split)
+        return dev, srv, aux
+
+    # ------------------------------------------------------------------
+    # Phase 3: federated device training
+    # ------------------------------------------------------------------
+    def run_device_phase(self, dev_state, max_rounds: Optional[int] = None):
+        fed = self.run.fed
+        K = fed.clients_per_round
+        stopper = evaluate.EarlyStopper(self.patience, mode="min")
+        aux_eval = self._make_aux_eval()
+        start_round = 0
+        if self.ckpt is not None:
+            tree, meta = self.ckpt.restore()
+            if tree is not None and meta.get("phase") == "device":
+                dev_state = tree
+                start_round = meta["round"] + 1
+
+        rounds = max_rounds if max_rounds is not None else fed.device_epochs
+        for rnd in range(start_round, rounds):
+            cohort = aggregation.sample_cohort(self.rng, fed, rnd)
+            ids = list(cohort["clients"])
+            w = list(cohort["weights"])
+            while len(ids) < K:           # pad dropped slots, weight 0
+                ids.append(ids[0])
+                w.append(0.0)
+            batches = round_batches(self.clients, ids, fed.local_steps,
+                                    fed.device_batch_size)
+            batches = {k: jnp.asarray(v) for k, v in batches.items()}
+            lr = self._sched(rnd)
+            dev_state, metrics = self._device_round(
+                dev_state, batches, jnp.asarray(w, jnp.float32), lr)
+            val = aux_eval(dev_state)
+            self.history["device"].append(
+                {"round": rnd, "loss": float(metrics["loss"]), **val})
+            self.history["sim_time"] += cohort["round_time"]
+            self.history["comm_bytes"] += 2 * len(cohort["clients"]) * (
+                self.sizes.device + self.sizes.aux)
+            self.log.log(phase="device", round=rnd,
+                         loss=float(metrics["loss"]), **val,
+                         dropped=len(cohort["dropped"]))
+            if self.ckpt is not None and self.run.checkpoint_every and \
+                    rnd % self.run.checkpoint_every == 0:
+                self.ckpt.save_async(rnd, dev_state,
+                                     {"phase": "device", "round": rnd})
+                self.journal.append({"phase": "device", "round": rnd})
+            if stopper.update(val["val_loss"]):
+                break
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return dev_state
+
+    def _make_aux_eval(self):
+        model, run = self.model, self.run
+        p = run.split.split_point
+
+        @jax.jit
+        def step(dev_state, batch):
+            inp = batch["tokens"] if model.kind == "lm" else batch["images"]
+            acts = splitting.device_forward(model, dev_state["device"], inp, p)
+            loss, m = auxiliary.aux_loss(model, dev_state["aux"],
+                                         dev_state["device"], acts, batch,
+                                         run.split)
+            return loss, m.get("acc", jnp.zeros(()))
+
+        def eval_fn(dev_state, max_batches: int = 8, batch_size: int = 64):
+            n = len(self.eval_data)
+            ls, accs = [], []
+            bs = min(batch_size, n)
+            for s in range(0, min(n, max_batches * bs) - bs + 1, bs):
+                idx = np.arange(s, s + bs)
+                batch = {k: jnp.asarray(v[idx])
+                         for k, v in self.eval_data.arrays.items()}
+                loss, acc = step(dev_state, batch)
+                ls.append(float(loss))
+                accs.append(float(acc))
+            return {"val_loss": float(np.mean(ls)),
+                    "val_acc": float(np.mean(accs))}
+        return eval_fn
+
+    # ------------------------------------------------------------------
+    # Phase 4: one-shot activation generation + upload
+    # ------------------------------------------------------------------
+    def generate_activations(self, dev_state, store: ActivationStore,
+                             batch_size: int = 64):
+        model, run = self.model, self.run
+        p = run.split.split_point
+
+        @jax.jit
+        def fwd(device_params, inp):
+            return splitting.device_forward(model, device_params, inp, p)
+
+        store.start_writer()
+        for client in self.clients:
+            arrays = client.dataset.arrays
+            n = len(client.dataset)
+            for s in range(0, n, batch_size):
+                idx = np.arange(s, min(s + batch_size, n))
+                if model.kind == "lm":
+                    inp = jnp.asarray(arrays["tokens"][idx])
+                    shard = {"acts": np.asarray(fwd(dev_state["device"], inp),
+                                                np.float32),
+                             "tokens": arrays["tokens"][idx]}
+                else:
+                    inp = jnp.asarray(arrays["images"][idx])
+                    shard = {"acts": np.asarray(fwd(dev_state["device"], inp),
+                                                np.float32),
+                             "labels": arrays["labels"][idx]}
+                store.submit(client.client_id, shard)
+        store.finish()
+        self.history["comm_bytes"] += store.bytes_received
+        self.history["sim_time"] += store.bytes_received / comm_model.BANDWIDTH_BPS
+        self.log.log(phase="transfer", bytes=store.bytes_received)
+        return store
+
+    # ------------------------------------------------------------------
+    # Phase 5: centralized server training on the consolidated set
+    # ------------------------------------------------------------------
+    def run_server_phase(self, dev_state, srv_params, store: ActivationStore,
+                         max_epochs: Optional[int] = None):
+        run = self.run
+        srv_state = steps.init_server_state(self.model, run, srv_params)
+        start_epoch = 0
+        if self.ckpt is not None:
+            tree, meta = self.ckpt.restore()
+            if tree is not None and meta.get("phase") == "server":
+                srv_state = tree
+                start_epoch = meta["epoch"] + 1
+        stopper = evaluate.EarlyStopper(self.patience, mode="min")
+        merged_model = build_model(splitting.merged_config(self.model))
+        eval_step = evaluate.make_eval_step(merged_model)
+        epochs = max_epochs if max_epochs is not None else run.fed.server_epochs
+
+        p = run.split.split_point
+        for epoch in range(start_epoch, epochs):
+            ls = []
+            for batch in store.batches(run.fed.server_batch_size, epochs=1):
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                srv_state, m = self._server_step(srv_state, batch)
+                ls.append(float(m["loss"]))
+            merged = splitting.merge_params(self.model, dev_state["device"],
+                                            srv_state["server"], p)
+            val = evaluate.evaluate(merged_model, merged, self.eval_data,
+                                    eval_step=eval_step)
+            self.history["server"].append(
+                {"epoch": epoch, "loss": float(np.mean(ls)),
+                 "val_loss": val["loss"], "val_acc": val["acc"]})
+            self.history["sim_time"] += comm_model.ampere_server_epoch_time(
+                self.model, run.split, comm_model.TimeModel(),
+                n_samples=store.num_samples(), seq_len=self._seq_len(),
+                sizes=self.sizes)
+            self.log.log(phase="server", epoch=epoch,
+                         loss=float(np.mean(ls)), **{f"val_{k}": v
+                                                     for k, v in val.items()})
+            if self.ckpt is not None and run.checkpoint_every and \
+                    epoch % run.checkpoint_every == 0:
+                self.ckpt.save_async(10_000 + epoch, srv_state,
+                                     {"phase": "server", "epoch": epoch})
+                self.journal.append({"phase": "server", "epoch": epoch})
+            if stopper.update(val["loss"]):
+                break
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return srv_state
+
+    # ------------------------------------------------------------------
+    def run_all(self, key=None, max_device_rounds=None, max_server_epochs=None,
+                store: Optional[ActivationStore] = None):
+        key = key if key is not None else jax.random.PRNGKey(self.run.seed)
+        dev, srv, aux = self._init_states(key)
+        dev_state = {"device": dev, "aux": aux}
+        dev_state = self.run_device_phase(dev_state, max_device_rounds)
+        store = store or ActivationStore(
+            directory=(os.path.join(self.workdir, "acts")
+                       if self.workdir else None),
+            consolidated=self.consolidate,
+            quantize_int8=self.run.split.quantize_activations,
+            seed=self.run.seed)
+        self.generate_activations(dev_state, store)
+        srv_state = self.run_server_phase(dev_state, srv, store,
+                                          max_server_epochs)
+        merged = splitting.merge_params(self.model, dev_state["device"],
+                                        srv_state["server"],
+                                        self.run.split.split_point)
+        return {"device_state": dev_state, "server_state": srv_state,
+                "merged_params": merged, "history": self.history}

@@ -1,0 +1,20 @@
+from repro.data.activation_store import ActivationStore, load_store
+from repro.data.partition import (
+    class_histogram,
+    dirichlet_partition,
+    heterogeneity_index,
+)
+from repro.data.pipeline import ClientData, Prefetcher, federate, round_batches
+from repro.data.synthetic import (
+    Dataset,
+    make_dataset_for_model,
+    make_lm_dataset,
+    make_vision_dataset,
+)
+
+__all__ = [
+    "ActivationStore", "load_store", "ClientData", "Prefetcher", "federate",
+    "round_batches", "Dataset", "make_dataset_for_model", "make_lm_dataset",
+    "make_vision_dataset", "dirichlet_partition", "class_histogram",
+    "heterogeneity_index",
+]

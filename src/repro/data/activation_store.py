@@ -1,0 +1,189 @@
+"""Activation consolidation store (Ampere §3.2.3 + Algorithm 1 lines 16-19).
+
+The server runs two asynchronous subprocesses: one *stores* incoming client
+activation shards, the other *loads* batches for server-block training —
+training starts as soon as the first shard lands, never waiting for the
+full consolidation.
+
+Modes:
+* ``consolidated=True``  (Ampere)   — one unified pool 𝒜; batches are
+  sampled across all clients' activations.
+* ``consolidated=False`` (ablation) — per-client pools; the trainer holds
+  K server blocks, each fed from one client's pool, aggregated like SFL
+  (Fig. 11's "w/o consolidation" arm).
+
+Backends: in-memory (CPU experiments) or disk shards
+(``<dir>/client_<k>_<i>.npz``, atomic rename) with optional int8
+quantization of the payload (beyond-paper, cuts the one-shot transfer 4x
+vs fp32 — accounted in the comm model).
+"""
+
+from __future__ import annotations
+
+import os
+import queue
+import threading
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class ActivationStore:
+    def __init__(self, directory: Optional[str] = None,
+                 consolidated: bool = True, quantize_int8: bool = False,
+                 seed: int = 0):
+        self.dir = directory
+        self.consolidated = consolidated
+        self.quantize = quantize_int8
+        self.rng = np.random.default_rng(seed)
+        self._mem: Dict[int, List[dict]] = {}
+        self._lock = threading.Lock()
+        self._q: "queue.Queue" = queue.Queue()
+        self._writer: Optional[threading.Thread] = None
+        self._closed = threading.Event()
+        self.bytes_received = 0
+        if directory:
+            os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    # Subprocess 1: receive & store
+    # ------------------------------------------------------------------
+    def start_writer(self):
+        if self._writer is None:
+            self._writer = threading.Thread(target=self._writer_loop,
+                                            daemon=True)
+            self._writer.start()
+
+    def _writer_loop(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                break
+            self._store(*item)
+
+    def submit(self, client_id: int, shard: dict):
+        """Async upload path (used with start_writer)."""
+        self._q.put((client_id, shard))
+
+    def finish(self):
+        if self._writer is not None:
+            self._q.put(None)
+            self._writer.join()
+            self._writer = None
+        self._closed.set()
+
+    def add(self, client_id: int, shard: dict):
+        """Synchronous upload (tests / simple drivers)."""
+        self._store(client_id, shard)
+
+    def _store(self, client_id: int, shard: dict):
+        shard = dict(shard)
+        acts = np.asarray(shard["acts"])
+        if self.quantize:
+            scale = np.abs(acts).max(axis=-1, keepdims=True) / 127.0
+            scale = np.maximum(scale, 1e-12)
+            q = np.clip(np.round(acts / scale), -127, 127).astype(np.int8)
+            shard["acts"] = q
+            shard["acts_scale"] = scale.astype(np.float32)
+            nbytes = q.nbytes + shard["acts_scale"].nbytes
+        else:
+            shard["acts"] = acts.astype(np.float32)
+            nbytes = shard["acts"].nbytes
+        nbytes += sum(np.asarray(v).nbytes for k, v in shard.items()
+                      if k not in ("acts", "acts_scale"))
+        with self._lock:
+            self._mem.setdefault(int(client_id), []).append(shard)
+            self.bytes_received += nbytes
+        if self.dir:
+            i = len(self._mem[int(client_id)]) - 1
+            tmp = os.path.join(self.dir, f".tmp_{client_id}_{i}.npz")
+            final = os.path.join(self.dir, f"client_{client_id}_{i}.npz")
+            np.savez(tmp, **shard)
+            os.replace(tmp, final)
+
+    # ------------------------------------------------------------------
+    # Subprocess 2: load for training
+    # ------------------------------------------------------------------
+    def _pool(self, client_id: Optional[int] = None) -> dict:
+        with self._lock:
+            if client_id is None:
+                shards = [s for lst in self._mem.values() for s in lst]
+            else:
+                shards = list(self._mem.get(int(client_id), []))
+        if not shards:
+            return {}
+        keys = shards[0].keys()
+        return {k: np.concatenate([s[k] for s in shards]) for k in keys}
+
+    def num_samples(self, client_id: Optional[int] = None) -> int:
+        with self._lock:
+            if client_id is None:
+                return sum(len(s["acts"]) for lst in self._mem.values()
+                           for s in lst)
+            return sum(len(s["acts"]) for s in self._mem.get(int(client_id), []))
+
+    def clients(self) -> List[int]:
+        with self._lock:
+            return sorted(self._mem)
+
+    def _dequant(self, batch: dict) -> dict:
+        if "acts_scale" in batch:
+            batch = dict(batch)
+            batch["acts"] = (batch["acts"].astype(np.float32)
+                             * batch["acts_scale"])
+            del batch["acts_scale"]
+        return batch
+
+    def batches(self, batch_size: int, epochs: int = 1,
+                client_id: Optional[int] = None, dequantize: bool = True):
+        """Yield shuffled batches over the (consolidated or per-client)
+        pool for ``epochs`` passes."""
+        pool = self._pool(None if self.consolidated and client_id is None
+                          else client_id)
+        if not pool:
+            return
+        n = len(pool["acts"])
+        for _ in range(epochs):
+            order = self.rng.permutation(n)
+            for s in range(0, n - batch_size + 1, batch_size):
+                idx = order[s:s + batch_size]
+                b = {k: v[idx] for k, v in pool.items()}
+                yield self._dequant(b) if dequantize else b
+
+    def streaming_batches(self, batch_size: int, poll: float = 0.01,
+                          dequantize: bool = True):
+        """Train-while-receiving: yields batches from whatever has arrived
+        so far; completes one final full epoch after ``finish()``."""
+        import time
+        seen_cycle = 0
+        while True:
+            pool = self._pool()
+            n = len(pool.get("acts", ()))
+            if n >= batch_size:
+                order = self.rng.permutation(n)
+                for s in range(0, n - batch_size + 1, batch_size):
+                    idx = order[s:s + batch_size]
+                    b = {k: v[idx] for k, v in pool.items()}
+                    yield self._dequant(b) if dequantize else b
+                seen_cycle += 1
+            if self._closed.is_set():
+                if n >= batch_size:
+                    return
+                if seen_cycle:
+                    return
+            time.sleep(poll)
+
+
+def load_store(directory: str, consolidated: bool = True,
+               seed: int = 0) -> ActivationStore:
+    """Rebuild a store from disk shards (server restart path)."""
+    st = ActivationStore(directory=None, consolidated=consolidated, seed=seed)
+    for fname in sorted(os.listdir(directory)):
+        if not fname.startswith("client_") or not fname.endswith(".npz"):
+            continue
+        client_id = int(fname.split("_")[1])
+        with np.load(os.path.join(directory, fname)) as z:
+            shard = {k: z[k] for k in z.files}
+        with st._lock:
+            st._mem.setdefault(client_id, []).append(shard)
+    return st

@@ -1,0 +1,102 @@
+"""Batching / feeding pipeline.
+
+* :class:`ClientData` — one client's shard with an infinite shuffled batch
+  stream (numpy-side; device transfer happens at the jit boundary).
+* :func:`federate` — dataset -> Dirichlet-partitioned list of ClientData.
+* :func:`round_batches` — stack (K, H, b, ...) arrays for
+  ``device_round_step`` from a sampled cohort.
+* :class:`Prefetcher` — background-thread prefetch of host batches so the
+  accelerator step overlaps with batch assembly (the server phase's
+  Algorithm-1 subprocess 2).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import List, Optional
+
+import numpy as np
+
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import Dataset
+
+
+class ClientData:
+    def __init__(self, dataset: Dataset, client_id: int, seed: int = 0):
+        self.dataset = dataset
+        self.client_id = client_id
+        self.rng = np.random.default_rng(seed * 100003 + client_id)
+        self._order = np.arange(len(dataset))
+        self._cursor = len(dataset)  # force shuffle on first use
+
+    def __len__(self):
+        return len(self.dataset)
+
+    def next_batch(self, batch_size: int) -> dict:
+        n = len(self.dataset)
+        take = []
+        need = batch_size
+        while need > 0:
+            if self._cursor >= n:
+                self.rng.shuffle(self._order)
+                self._cursor = 0
+            got = min(need, n - self._cursor)
+            take.append(self._order[self._cursor:self._cursor + got])
+            self._cursor += got
+            need -= got
+        idx = np.concatenate(take)
+        return {k: v[idx] for k, v in self.dataset.arrays.items()}
+
+    def batches(self, batch_size: int, steps: int) -> dict:
+        """(steps, b, ...) stacked batches."""
+        bs = [self.next_batch(batch_size) for _ in range(steps)]
+        return {k: np.stack([b[k] for b in bs]) for k in bs[0]}
+
+
+def federate(dataset: Dataset, num_clients: int, alpha: float,
+             seed: int = 0) -> List[ClientData]:
+    rng = np.random.default_rng(seed)
+    parts = dirichlet_partition(dataset.labels, num_clients, alpha, rng)
+    return [ClientData(dataset.subset(ix), k, seed) for k, ix in enumerate(parts)]
+
+
+def round_batches(clients: List[ClientData], cohort_ids, local_steps: int,
+                  batch_size: int) -> dict:
+    """(K, H, b, ...) stacked batches for one federated round."""
+    per_client = [clients[int(c)].batches(batch_size, local_steps)
+                  for c in cohort_ids]
+    return {k: np.stack([pc[k] for pc in per_client])
+            for k in per_client[0]}
+
+
+class Prefetcher:
+    """Runs ``producer()`` in a background thread, buffering up to ``depth``
+    batches; iteration yields until the producer raises StopIteration."""
+
+    _DONE = object()
+
+    def __init__(self, producer_iter, depth: int = 2):
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.error: Optional[BaseException] = None
+
+        def run():
+            try:
+                for item in producer_iter:
+                    self.q.put(item)
+            except BaseException as e:  # propagate to consumer
+                self.error = e
+            finally:
+                self.q.put(self._DONE)
+
+        self.thread = threading.Thread(target=run, daemon=True)
+        self.thread.start()
+
+    def __iter__(self):
+        while True:
+            item = self.q.get()
+            if item is self._DONE:
+                if self.error is not None:
+                    raise self.error
+                return
+            yield item

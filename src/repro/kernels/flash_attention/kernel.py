@@ -1,0 +1,297 @@
+"""Pallas TPU flash attention (FA-2 schedule), forward + backward.
+
+TPU adaptation notes (vs the CUDA algorithm):
+* tiles are MXU-aligned (block_q x block_k multiples of 128; head_dim is
+  kept whole per tile — 64..256 fits VMEM comfortably);
+* the kv-block loop is the *innermost grid dimension* — TPU grids execute
+  sequentially per core, so the (m, l, acc) running statistics live in VMEM
+  scratch that persists across grid steps (the Pallas-TPU idiom replacing
+  FA's per-CTA shared-memory loop);
+* GQA never materializes repeated K/V: the kv BlockSpec index_map folds the
+  q-head -> kv-head mapping (bh // group) so each kv tile is fetched once
+  per group from HBM;
+* causal/sliding-window masks are computed from block-relative iota and
+  applied in-register; softcap (gemma2) is fused into the score tile.
+
+Layouts:  q, o: (BH, S, hd) with BH = B * Hkv * G (kv-major: bh // G is the
+kv head); k, v: (BKV, Skv, hd) with BKV = B * Hkv.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mask(iq, ik, bq, bk, *, causal, window, kv_len):
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    m = k_pos < kv_len
+    if causal:
+        m &= q_pos >= k_pos
+    if window:
+        m &= (q_pos - k_pos) < window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_sc, l_sc, acc_sc, *,
+                causal, window, softcap, scale, kv_len, nk):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+    bq, hd = q_ref.shape[1], q_ref.shape[2]
+    bk = k_ref.shape[1]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = _mask(iq, ik, bq, bk, causal=causal, window=window, kv_len=kv_len)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)
+    acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_sc[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _final():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0] = (acc_sc[...] / l).astype(o_ref.dtype)
+        lse_ref[0] = (m_sc[...] + jnp.log(l))[:, 0]
+
+
+def flash_fwd(q, k, v, *, group: int, causal: bool, window: int,
+              softcap: float, scale: float, kv_len: int,
+              block_q: int = 128, block_k: int = 128, interpret=None):
+    """q: (BH, Sq, hd); k, v: (BKV, Skv, hd).  Sq, Skv padded to blocks."""
+    BH, Sq, hd = q.shape
+    BKV, Skv = k.shape[0], k.shape[1]
+    bq, bk = min(block_q, Sq), min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0
+    nq, nk = Sq // bq, Skv // bk
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    kern = functools.partial(_fwd_kernel, causal=causal, window=window,
+                             softcap=softcap, scale=scale, kv_len=kv_len,
+                             nk=nk)
+    o, lse = pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, hd),
+                         lambda bh, iq, ik, g=group: (bh // g, ik, 0)),
+            pl.BlockSpec((1, bk, hd),
+                         lambda bh, iq, ik, g=group: (bh // g, ik, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bq), lambda bh, iq, ik: (bh, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Sq, hd), jnp.float32),
+            jax.ShapeDtypeStruct((BH, Sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward: dq  (grid: bh, iq, ik — kv innermost, dq accumulates in scratch)
+# ---------------------------------------------------------------------------
+
+
+def _recompute_p(q, k, iq, ik, bq, bk, *, causal, window, softcap, scale,
+                 kv_len, lse):
+    """Recompute the probability tile and the softcap chain factor."""
+    s_raw = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    if softcap:
+        s = jnp.tanh(s_raw / softcap) * softcap
+        dchain = 1.0 - jnp.square(s / softcap)     # d softcap / d s_raw
+    else:
+        s = s_raw
+        dchain = jnp.ones_like(s)
+    mask = _mask(iq, ik, bq, bk, causal=causal, window=window, kv_len=kv_len)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - lse)
+    p = jnp.where(mask, p, 0.0)
+    return p, dchain
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               dq_sc, *, causal, window, softcap, scale, kv_len, nk):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+    bq, hd = q_ref.shape[1], q_ref.shape[2]
+    bk = k_ref.shape[1]
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_sc[...] = jnp.zeros_like(dq_sc)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0][:, None]
+    delta = delta_ref[0][:, None]
+
+    p, dchain = _recompute_p(q, k, iq, ik, bq, bk, causal=causal,
+                             window=window, softcap=softcap, scale=scale,
+                             kv_len=kv_len, lse=lse)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta) * dchain * scale
+    dq_sc[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _final():
+        dq_ref[0] = dq_sc[...].astype(dq_ref.dtype)
+
+
+def flash_bwd_dq(q, k, v, do, lse, delta, *, group, causal, window, softcap,
+                 scale, kv_len, block_q=128, block_k=128, interpret=None):
+    BH, Sq, hd = q.shape
+    Skv = k.shape[1]
+    bq, bk = min(block_q, Sq), min(block_k, Skv)
+    nq, nk = Sq // bq, Skv // bk
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kern = functools.partial(_dq_kernel, causal=causal, window=window,
+                             softcap=softcap, scale=scale, kv_len=kv_len,
+                             nk=nk)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, iq, ik, g=group: (bh // g, ik, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, iq, ik, g=group: (bh // g, ik, 0)),
+            pl.BlockSpec((1, bq, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bq), lambda bh, iq, ik: (bh, iq)),
+            pl.BlockSpec((1, bq), lambda bh, iq, ik: (bh, iq)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+
+# ---------------------------------------------------------------------------
+# Backward: dk, dv  (grid: bkv, ik, g, iq — dk/dv tiles stay resident while
+# all group members and q blocks accumulate into them)
+# ---------------------------------------------------------------------------
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_sc, dv_sc, *, causal, window, softcap,
+                scale, kv_len, group, nq):
+    ik, g, iq = pl.program_id(1), pl.program_id(2), pl.program_id(3)
+    bq, hd = q_ref.shape[1], q_ref.shape[2]
+    bk = k_ref.shape[1]
+
+    @pl.when(jnp.logical_and(g == 0, iq == 0))
+    def _init():
+        dk_sc[...] = jnp.zeros_like(dk_sc)
+        dv_sc[...] = jnp.zeros_like(dv_sc)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0][:, None]
+    delta = delta_ref[0][:, None]
+
+    p, dchain = _recompute_p(q, k, iq, ik, bq, bk, causal=causal,
+                             window=window, softcap=softcap, scale=scale,
+                             kv_len=kv_len, lse=lse)
+    # dv += p^T @ do
+    dv_sc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta) * dchain * scale
+    # dk += ds^T @ q
+    dk_sc[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(g == group - 1, iq == nq - 1))
+    def _final():
+        dk_ref[0] = dk_sc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_sc[...].astype(dv_ref.dtype)
+
+
+def flash_bwd_dkv(q, k, v, do, lse, delta, *, group, causal, window, softcap,
+                  scale, kv_len, block_q=128, block_k=128, interpret=None):
+    BH, Sq, hd = q.shape
+    BKV, Skv = k.shape[0], k.shape[1]
+    bq, bk = min(block_q, Sq), min(block_k, Skv)
+    nq, nk = Sq // bq, Skv // bk
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kern = functools.partial(_dkv_kernel, causal=causal, window=window,
+                             softcap=softcap, scale=scale, kv_len=kv_len,
+                             group=group, nq=nq)
+    g = group
+    return pl.pallas_call(
+        kern,
+        grid=(BKV, nk, g, nq),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd),
+                         lambda bkv, ik, gg, iq, g=g: (bkv * g + gg, iq, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bkv, ik, gg, iq: (bkv, ik, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bkv, ik, gg, iq: (bkv, ik, 0)),
+            pl.BlockSpec((1, bq, hd),
+                         lambda bkv, ik, gg, iq, g=g: (bkv * g + gg, iq, 0)),
+            pl.BlockSpec((1, bq),
+                         lambda bkv, ik, gg, iq, g=g: (bkv * g + gg, iq)),
+            pl.BlockSpec((1, bq),
+                         lambda bkv, ik, gg, iq, g=g: (bkv * g + gg, iq)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, hd), lambda bkv, ik, gg, iq: (bkv, ik, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bkv, ik, gg, iq: (bkv, ik, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BKV, Skv, hd), jnp.float32),
+            jax.ShapeDtypeStruct((BKV, Skv, hd), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bk, hd), jnp.float32),
+            pltpu.VMEM((bk, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)

@@ -1,0 +1,93 @@
+"""jit'd public wrapper for the Pallas flash attention with a custom VJP.
+
+Public layout matches the model code: q (B, S, Hkv, G, hd); k, v
+(B, Skv, Hkv, hd).  Handles padding to block multiples and the layout
+reshape to the kernel's (BH, S, hd) / (BKV, Skv, hd) views.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q, k, v, causal=True, window=0, softcap=0.0, scale=1.0,
+                    block_q=128, block_k=128):
+    """Returns (B, S, Hkv, G, hd) fp32 attention output."""
+    o, _ = _fwd(q, k, v, causal, window, softcap, scale, block_q, block_k)
+    return o
+
+
+def _fwd(q, k, v, causal, window, softcap, scale, block_q, block_k):
+    B, S, Hkv, G, hd = q.shape
+    Skv = k.shape[1]
+    qk = jnp.transpose(q, (0, 2, 3, 1, 4)).reshape(B * Hkv * G, S, hd)
+    kk = jnp.transpose(k, (0, 2, 1, 3)).reshape(B * Hkv, Skv, hd)
+    vk = jnp.transpose(v, (0, 2, 1, 3)).reshape(B * Hkv, Skv, hd)
+    bq = min(block_q, max(8, S))
+    bk = min(block_k, max(8, Skv))
+    qp = _pad_to(qk, 1, bq)
+    kp = _pad_to(kk, 1, bk)
+    vp = _pad_to(vk, 1, bk)
+    o, lse = K.flash_fwd(qp, kp, vp, group=G, causal=causal, window=window,
+                         softcap=softcap, scale=scale, kv_len=Skv,
+                         block_q=bq, block_k=bk)
+    o = o[:, :S].reshape(B, Hkv, G, S, hd).transpose(0, 3, 1, 2, 4)
+    lse = lse[:, :S].reshape(B, Hkv, G, S).transpose(0, 3, 1, 2)
+    return o, lse
+
+
+def _vjp_fwd(q, k, v, causal, window, softcap, scale, block_q, block_k):
+    o, lse = _fwd(q, k, v, causal, window, softcap, scale, block_q, block_k)
+    return o, (q, k, v, o, lse)
+
+
+def _vjp_bwd(causal, window, softcap, scale, block_q, block_k, res, do):
+    q, k, v, o, lse = res
+    B, S, Hkv, G, hd = q.shape
+    Skv = k.shape[1]
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    def to_q_layout(x):
+        return jnp.transpose(x, (0, 2, 3, 1, 4)).reshape(B * Hkv * G, S, hd)
+
+    def to_kv_layout(x):
+        return jnp.transpose(x, (0, 2, 1, 3)).reshape(B * Hkv, Skv, hd)
+
+    bq = min(block_q, max(8, S))
+    bk = min(block_k, max(8, Skv))
+    qk = _pad_to(to_q_layout(q), 1, bq)
+    kk = _pad_to(to_kv_layout(k), 1, bk)
+    vk = _pad_to(to_kv_layout(v), 1, bk)
+    dok = _pad_to(to_q_layout(do.astype(jnp.float32)), 1, bq)
+    lsek = _pad_to(
+        jnp.transpose(lse, (0, 2, 3, 1)).reshape(B * Hkv * G, S), 1, bq)
+    deltak = _pad_to(
+        jnp.transpose(delta, (0, 2, 3, 1)).reshape(B * Hkv * G, S), 1, bq)
+
+    common = dict(group=G, causal=causal, window=window, softcap=softcap,
+                  scale=scale, kv_len=Skv, block_q=bq, block_k=bk)
+    dq = K.flash_bwd_dq(qk, kk, vk, dok, lsek, deltak, **common)
+    dk, dv = K.flash_bwd_dkv(qk, kk, vk, dok, lsek, deltak, **common)
+
+    dq = dq[:, :S].reshape(B, Hkv, G, S, hd).transpose(0, 3, 1, 2, 4)
+    dk = dk[:, :Skv].reshape(B, Hkv, Skv, hd).transpose(0, 2, 1, 3)
+    dv = dv[:, :Skv].reshape(B, Hkv, Skv, hd).transpose(0, 2, 1, 3)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)

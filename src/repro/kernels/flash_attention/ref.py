@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for flash attention (quadratic, materializes scores)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0, scale=1.0):
+    """q: (B, S, Hkv, G, hd); k, v: (B, Skv, Hkv, hd).  fp32 output.
+
+    Also returns the row logsumexp (B, S, Hkv, G) — the forward residual
+    the Pallas backward consumes.
+    """
+    B, S, Hkv, G, hd = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bsngd,bcnd->bsngc", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = jnp.arange(S)
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((S, Skv), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bsngc,bcnd->bsngd", p, v.astype(jnp.float32)) \
+        / jnp.maximum(l, 1e-30)[..., None]
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return o, lse

@@ -1,0 +1,35 @@
+"""jit'd wrapper for the SSD intra-chunk kernel.
+
+Differentiable: the custom VJP recomputes through the pure-jnp oracle — the
+Pallas kernel accelerates the (memory- and MXU-bound) forward; the backward
+reuses XLA's fused gradient of the quadratic dual form.  (A fully fused
+backward kernel is a recorded §Perf follow-up; the forward dominates during
+serving/prefill which is where this kernel sits on the roofline.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_chunk.kernel import ssd_intra_pallas
+from repro.kernels.ssd_chunk.ref import ssd_intra_ref
+
+
+@jax.custom_vjp
+def ssd_intra(xf, dtf, a_cum, Bf, Cf):
+    return ssd_intra_pallas(xf, dtf, a_cum, Bf, Cf)
+
+
+def _fwd(xf, dtf, a_cum, Bf, Cf):
+    out = ssd_intra_pallas(xf, dtf, a_cum, Bf, Cf)
+    return out, (xf, dtf, a_cum, Bf, Cf)
+
+
+def _bwd(res, cots):
+    _, vjp = jax.vjp(ssd_intra_ref, *res)
+    return vjp(cots)
+
+
+ssd_intra.defvjp(_fwd, _bwd)

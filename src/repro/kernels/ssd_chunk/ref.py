@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel (quadratic dual form)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_intra_ref(xf, dtf, a_cum, Bf, Cf):
+    """Intra-chunk outputs + per-chunk state contributions.
+
+    xf:  (B, nc, Q, H, P)   — per-head inputs (fp32)
+    dtf: (B, nc, Q, H)      — timestep
+    a_cum: (B, nc, Q, H)    — inclusive cumsum of dt*A within the chunk
+    Bf, Cf: (B, nc, Q, N)   — shared input/output projections (ngroups=1)
+
+    Returns:
+      y_intra: (B, nc, Q, H, P)
+      S_chunk: (B, nc, H, P, N)
+    """
+    Q = xf.shape[2]
+    seg = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]
+    tril = jnp.tril(jnp.ones((Q, Q), bool))
+    Ldec = jnp.exp(jnp.where(tril[None, None, :, :, None], seg, -jnp.inf))
+    cb = jnp.einsum("bcqn,bckn->bcqk", Cf, Bf)
+    att = cb[..., None] * Ldec * dtf[:, :, None, :, :]
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", att, xf)
+    a_total = a_cum[:, :, -1, :]
+    wj = jnp.exp(a_total[:, :, None, :] - a_cum) * dtf
+    S_chunk = jnp.einsum("bcqh,bcqn,bcqhp->bchpn", wj, Bf, xf)
+    return y_intra, S_chunk

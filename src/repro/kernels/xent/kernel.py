@@ -1,0 +1,264 @@
+"""Pallas TPU fused cross-entropy over huge vocabularies.
+
+Never materializes the (T, V) logit matrix in HBM: the vocabulary is tiled
+(grid dim v innermost); a VMEM scratch carries the online (max, sumexp,
+correct-logit) statistics per token tile, exactly like flash attention's
+row statistics.  Backward recomputes each logit tile from (h, W, lse) — a
+remat-in-kernel scheme — and accumulates dH (grid t, v) and dW (grid v, t)
+into resident VMEM tiles.
+
+VMEM budget: tiles are (bt, D) for hidden and (D, bv) for the weight —
+``pick_blocks`` chooses bt/bv so both fit ~12 MB; supports gemma2's
+final-logit softcap with the exact tanh chain rule.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def pick_blocks(D: int, vmem_budget: int = 12 * 2 ** 20):
+    """(bt, bv) such that (bt*D + D*bv + bt*D) * 4 bytes fits the budget."""
+    for bt, bv in ((256, 512), (128, 256), (64, 128), (32, 128), (16, 128),
+                   (8, 128)):
+        if (bt * D * 2 + D * bv) * 4 <= vmem_budget:
+            return bt, bv
+    return 8, 128
+
+
+def _logits_tile(h, w, labels, iv, bv, V, softcap):
+    """Returns (capped logits, dchain, onehot, valid) for one (bt,bv) tile."""
+    z = jax.lax.dot_general(h, w, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if softcap:
+        s = jnp.tanh(z / softcap) * softcap
+        dchain = 1.0 - jnp.square(s / softcap)
+    else:
+        s, dchain = z, None
+    ids = iv * bv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = ids < V
+    onehot = (ids == labels[:, None]).astype(jnp.float32)
+    s = jnp.where(valid, s, NEG_INF)
+    return s, dchain, onehot, valid
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(h_ref, w_ref, lab_ref, loss_ref, lse_ref,
+                m_sc, l_sc, c_sc, *, V, softcap, nv):
+    iv = pl.program_id(1)
+    bv = w_ref.shape[1]
+
+    @pl.when(iv == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        c_sc[...] = jnp.zeros_like(c_sc)
+
+    h = h_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    labels = lab_ref[...]
+    s, _, onehot, _ = _logits_tile(h, w, labels, iv, bv, V, softcap)
+
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    l_sc[...] = l_sc[...] * jnp.exp(m_prev - m_new) + jnp.sum(
+        jnp.exp(s - m_new), axis=1, keepdims=True)
+    c_sc[...] += jnp.sum(jnp.where(onehot > 0, s, 0.0), axis=1, keepdims=True)
+    m_sc[...] = m_new
+
+    @pl.when(iv == nv - 1)
+    def _final():
+        lse = m_sc[...] + jnp.log(jnp.maximum(l_sc[...], 1e-30))
+        loss_ref[...] = (lse - c_sc[...])[:, 0]
+        lse_ref[...] = lse[:, 0]
+
+
+def xent_fwd(h, w, labels, *, softcap=0.0, block_t=None, block_v=None,
+             interpret=None):
+    T, D = h.shape
+    V = w.shape[1]
+    bt0, bv0 = pick_blocks(D)
+    bt = block_t or bt0
+    bv = block_v or bv0
+    bt = min(bt, T) if T % min(bt, T) == 0 else bt
+    padT = (-T) % bt
+    padV = (-V) % bv
+    hp = jnp.pad(h, ((0, padT), (0, 0))) if padT else h
+    labp = jnp.pad(labels, (0, padT)) if padT else labels
+    wp = jnp.pad(w, ((0, 0), (0, padV))) if padV else w
+    Tp, Vp = T + padT, V + padV
+    nt, nv = Tp // bt, Vp // bv
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    kern = functools.partial(_fwd_kernel, V=V, softcap=softcap, nv=nv)
+    loss, lse = pl.pallas_call(
+        kern,
+        grid=(nt, nv),
+        in_specs=[
+            pl.BlockSpec((bt, D), lambda it, iv: (it, 0)),
+            pl.BlockSpec((D, bv), lambda it, iv: (0, iv)),
+            pl.BlockSpec((bt,), lambda it, iv: (it,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt,), lambda it, iv: (it,)),
+            pl.BlockSpec((bt,), lambda it, iv: (it,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Tp,), jnp.float32),
+            jax.ShapeDtypeStruct((Tp,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bt, 1), jnp.float32),
+            pltpu.VMEM((bt, 1), jnp.float32),
+            pltpu.VMEM((bt, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(hp, wp, labp)
+    return loss[:T], lse[:T]
+
+
+# ---------------------------------------------------------------------------
+# Backward
+# ---------------------------------------------------------------------------
+
+
+def _dh_kernel(h_ref, w_ref, lab_ref, lse_ref, g_ref, dh_ref, dh_sc, *,
+               V, softcap, nv):
+    iv = pl.program_id(1)
+    bv = w_ref.shape[1]
+
+    @pl.when(iv == 0)
+    def _init():
+        dh_sc[...] = jnp.zeros_like(dh_sc)
+
+    h = h_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    s, dchain, onehot, valid = _logits_tile(h, w, lab_ref[...], iv, bv, V,
+                                            softcap)
+    p = jnp.exp(s - lse_ref[...][:, None])
+    p = jnp.where(valid, p, 0.0)
+    dlog = (p - onehot) * g_ref[...][:, None]
+    if dchain is not None:
+        dlog = dlog * dchain
+    dh_sc[...] += jax.lax.dot_general(dlog, w, (((1,), (1,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+
+    @pl.when(iv == nv - 1)
+    def _final():
+        dh_ref[...] = dh_sc[...].astype(dh_ref.dtype)
+
+
+def _dw_kernel(h_ref, w_ref, lab_ref, lse_ref, g_ref, dw_ref, dw_sc, *,
+               V, softcap, nt):
+    iv, it = pl.program_id(0), pl.program_id(1)
+    bv = w_ref.shape[1]
+
+    @pl.when(it == 0)
+    def _init():
+        dw_sc[...] = jnp.zeros_like(dw_sc)
+
+    h = h_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    s, dchain, onehot, valid = _logits_tile(h, w, lab_ref[...], iv, bv, V,
+                                            softcap)
+    p = jnp.exp(s - lse_ref[...][:, None])
+    p = jnp.where(valid, p, 0.0)
+    dlog = (p - onehot) * g_ref[...][:, None]
+    if dchain is not None:
+        dlog = dlog * dchain
+    dw_sc[...] += jax.lax.dot_general(h, dlog, (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+
+    @pl.when(it == nt - 1)
+    def _final():
+        dw_ref[...] = dw_sc[...].astype(dw_ref.dtype)
+
+
+def xent_bwd(h, w, labels, lse, g, *, softcap=0.0, block_t=None,
+             block_v=None, interpret=None):
+    T, D = h.shape
+    V = w.shape[1]
+    bt0, bv0 = pick_blocks(D)
+    bt = block_t or bt0
+    bv = block_v or bv0
+    padT = (-T) % bt
+    padV = (-V) % bv
+    hp = jnp.pad(h, ((0, padT), (0, 0))) if padT else h
+    labp = jnp.pad(labels, (0, padT)) if padT else labels
+    lsep = jnp.pad(lse, (0, padT)) if padT else lse
+    gp = jnp.pad(g, (0, padT)) if padT else g
+    wp = jnp.pad(w, ((0, 0), (0, padV))) if padV else w
+    Tp, Vp = T + padT, V + padV
+    nt, nv = Tp // bt, Vp // bv
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    dh = pl.pallas_call(
+        functools.partial(_dh_kernel, V=V, softcap=softcap, nv=nv),
+        grid=(nt, nv),
+        in_specs=[
+            pl.BlockSpec((bt, D), lambda it, iv: (it, 0)),
+            pl.BlockSpec((D, bv), lambda it, iv: (0, iv)),
+            pl.BlockSpec((bt,), lambda it, iv: (it,)),
+            pl.BlockSpec((bt,), lambda it, iv: (it,)),
+            pl.BlockSpec((bt,), lambda it, iv: (it,)),
+        ],
+        out_specs=pl.BlockSpec((bt, D), lambda it, iv: (it, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, D), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bt, D), jnp.float32)],
+        interpret=interpret,
+    )(hp, wp, labp, lsep, gp)
+
+    dw = pl.pallas_call(
+        functools.partial(_dw_kernel, V=V, softcap=softcap, nt=nt),
+        grid=(nv, nt),
+        in_specs=[
+            pl.BlockSpec((bt, D), lambda iv, it: (it, 0)),
+            pl.BlockSpec((D, bv), lambda iv, it: (0, iv)),
+            pl.BlockSpec((bt,), lambda iv, it: (it,)),
+            pl.BlockSpec((bt,), lambda iv, it: (it,)),
+            pl.BlockSpec((bt,), lambda iv, it: (it,)),
+        ],
+        out_specs=pl.BlockSpec((D, bv), lambda iv, it: (0, iv)),
+        out_shape=jax.ShapeDtypeStruct((D, Vp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((D, bv), jnp.float32)],
+        interpret=interpret,
+    )(hp, wp, labp, lsep, gp)
+    return dh[:T], dw[:, :V]
+
+
+# ---------------------------------------------------------------------------
+# custom-vjp public entry
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_xent_pallas(h, w, labels, softcap=0.0):
+    loss, _ = xent_fwd(h, w, labels, softcap=softcap)
+    return loss
+
+
+def _f(h, w, labels, softcap):
+    loss, lse = xent_fwd(h, w, labels, softcap=softcap)
+    return loss, (h, w, labels, lse)
+
+
+def _b(softcap, res, g):
+    h, w, labels, lse = res
+    dh, dw = xent_bwd(h, w, labels, lse, g, softcap=softcap)
+    return dh.astype(h.dtype), dw.astype(w.dtype), None
+
+
+fused_xent_pallas.defvjp(lambda h, w, l, softcap=0.0: _f(h, w, l, softcap), _b)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused cross-entropy op.
+
+Materializes the full (T, V) logits — only usable at test scale; the ops
+paths (blockwise XLA / Pallas) must match this to tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy_ref(hidden, w, labels, mask=None, softcap: float = 0.0):
+    """hidden: (T, D); w: (D, V); labels: (T,) int32; mask: (T,) or None.
+
+    Returns (mean_loss, per_token_loss).
+    """
+    logits = jnp.einsum("td,dv->tv", hidden.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    correct = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    per_token = lse - correct
+    if mask is None:
+        mask = jnp.ones_like(per_token)
+    mask = mask.astype(jnp.float32)
+    loss = jnp.sum(per_token * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, per_token

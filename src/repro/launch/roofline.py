@@ -1,0 +1,223 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs            / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes_accessed   / (chips * HBM_BW)
+    collective = collective_bytes     / (chips * LINK_BW)
+
+``cost_analysis()`` reports *per-partition* FLOPs/bytes for an SPMD
+executable, so per-chip terms divide by peak directly; the reported
+HLO_FLOPs/HLO_bytes in tables are scaled back to whole-job numbers
+(x chips) for readability.  collective_bytes is not in cost_analysis —
+we parse the post-SPMD optimized HLO and apply ring-algorithm costs per
+replica group.
+
+Hardware model (TPU v5e-class, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+ = (?P<rtype>.*?) "
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute|collective-broadcast|ragged-all-to-all)"
+    r"(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # point-to-point / unknown: conservative
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_device_bytes: float = 0.0
+    counts: Optional[Dict[str, int]] = None
+    bytes_by_op: Optional[Dict[str, float]] = None
+
+    def __post_init__(self):
+        self.counts = self.counts or {}
+        self.bytes_by_op = self.bytes_by_op or {}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Ring-model per-device link bytes for every collective in the HLO.
+
+    all-gather:   result_size * (S-1)/S
+    reduce-scatter: result_size * (S-1)   [operand = S x result]
+    all-reduce:   2 * size * (S-1)/S
+    all-to-all:   size * (S-1)/S
+    collective-permute: size
+    ``-start``/``-done`` pairs are counted once (on -start; bare ops too).
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        size = _shape_bytes(m.group("rtype"))
+        s = max(2, _group_size(line))
+        if op == "all-gather":
+            b = size * (s - 1) / s
+        elif op == "reduce-scatter":
+            b = size * (s - 1)
+        elif op == "all-reduce":
+            b = 2.0 * size * (s - 1) / s
+        elif op in ("all-to-all", "ragged-all-to-all"):
+            b = size * (s - 1) / s
+        else:  # collective-permute / broadcast
+            b = float(size)
+        stats.per_device_bytes += b
+        stats.counts[op] = stats.counts.get(op, 0) + 1
+        stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0.0) + b
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    step: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    peak_memory_per_device: float
+    model_flops: float              # 6*N*D(tokens) whole-job
+    collective_counts: dict
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_seconds(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/masking/redundancy waste."""
+        total_hlo = self.flops_per_device * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs utilization at the roofline: what fraction of the
+        chips' peak compute the step achieves if it runs exactly at its
+        bounding term (MFU-at-roofline)."""
+        t = self.roofline_seconds
+        if not t:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "step": self.step, "chips": self.chips,
+            "hlo_gflops_total": self.flops_per_device * self.chips / 1e9,
+            "hbm_gb_total": self.bytes_per_device * self.chips / 1e9,
+            "coll_gb_total": self.collective_bytes_per_device * self.chips / 1e9,
+            "t_compute_ms": self.t_compute * 1e3,
+            "t_memory_ms": self.t_memory * 1e3,
+            "t_collective_ms": self.t_collective * 1e3,
+            "bottleneck": self.bottleneck,
+            "model_gflops": self.model_flops / 1e9,
+            "useful_flops_frac": self.useful_flops_fraction,
+            "roofline_frac": self.roofline_fraction,
+            "peak_mem_gb_per_device": self.peak_memory_per_device / 1e9,
+            "collectives": self.collective_counts,
+        }
+
+
+def analyse(arch: str, shape: str, mesh_name: str, step: str, chips: int,
+            compiled, hlo_text: str, model_flops: float) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):           # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    coll = parse_collectives(hlo_text)
+    mem = compiled.memory_analysis()
+    peak = 0.0
+    if mem is not None:
+        peak = (getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                - getattr(mem, "alias_size_in_bytes", 0)
+                + getattr(mem, "generated_code_size_in_bytes", 0))
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, step=step, chips=chips,
+        flops_per_device=flops, bytes_per_device=byts,
+        collective_bytes_per_device=coll.per_device_bytes,
+        peak_memory_per_device=float(peak), model_flops=model_flops,
+        collective_counts=coll.counts)
+
+
+def model_flops_estimate(cfg, shape_kind: str, seq_len: int,
+                         global_batch: int, step: str) -> float:
+    """6*N*D (training) / 2*N*D (inference) with N = active params."""
+    n_active = cfg.param_count(active_only=True)
+    if step in ("server_train_step", "e2e_train_step", "device_round_step"):
+        tokens = seq_len * global_batch
+        return 6.0 * n_active * tokens
+    if step == "prefill_step":
+        return 2.0 * n_active * seq_len * global_batch
+    # decode: one token per sequence
+    return 2.0 * n_active * global_batch

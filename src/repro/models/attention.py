@@ -1,0 +1,235 @@
+"""Attention: GQA/MQA with RoPE/M-RoPE, sliding windows, logit soft-capping,
+per-head qk-norm, QKV bias, and a KV cache for prefill/decode.
+
+Two implementations sit behind one interface:
+
+* ``impl="xla"`` — a pure-JAX *chunked online-softmax* (flash-style) path
+  that never materializes the full (Sq, Skv) score matrix: an outer
+  ``lax.scan`` walks KV chunks carrying (m, l, acc).  It is fully
+  differentiable (grad flows through the scan) and is the path used by the
+  CPU tests and by the dry-run lowering (Pallas/Mosaic cannot lower on the
+  CPU backend).  Causality is enforced by block masks; whole-block skipping
+  is structurally impossible in XLA without ragged shapes, so the causal
+  path does ~2x the minimal score FLOPs — this is accounted for in the
+  roofline notes and attacked in §Perf.
+* ``impl="pallas"`` — the TPU Pallas flash-attention kernel
+  (:mod:`repro.kernels.flash_attention`), BlockSpec-tiled to VMEM.
+
+Cache layout: ``{"k": (B, Smax, Hkv, hd), "v": (B, Smax, Hkv, hd)}`` plus a
+scalar ``index`` held by the caller (shared across layers).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg):
+    hd, D = cfg.head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.init_dense(ks[0], D, cfg.num_heads * hd, bias=cfg.qkv_bias,
+                           param_dtype=cfg.param_dtype),
+        "wk": L.init_dense(ks[1], D, cfg.num_kv_heads * hd, bias=cfg.qkv_bias,
+                           param_dtype=cfg.param_dtype),
+        "wv": L.init_dense(ks[2], D, cfg.num_kv_heads * hd, bias=cfg.qkv_bias,
+                           param_dtype=cfg.param_dtype),
+        "wo": L.init_dense(ks[3], cfg.num_heads * hd, D, bias=False,
+                           param_dtype=cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.init_rmsnorm(hd, cfg.param_dtype)
+        p["k_norm"] = L.init_rmsnorm(hd, cfg.param_dtype)
+    return p
+
+
+def _scale(cfg) -> float:
+    return cfg.attention_multiplier or 1.0 / math.sqrt(cfg.head_dim)
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (XLA flash)
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int, softcap: float,
+                      scale: float, q_offset=0, kv_valid_len=None,
+                      kv_block: int = 1024):
+    """Online-softmax attention over KV chunks.
+
+    q: (B, Sq, Hkv, G, hd) — query heads grouped by their KV head.
+    k, v: (B, Skv, Hkv, hd).
+    ``q_offset``: absolute position of q[0] (prefill continuation / decode).
+    ``kv_valid_len``: number of valid KV entries (cache may be padded).
+    Returns (B, Sq, Hkv, G, hd) in fp32.
+    """
+    B, Sq, Hkv, G, hd = q.shape
+    Skv = k.shape[1]
+    kv_block = min(kv_block, Skv)
+    if Skv % kv_block:  # pad KV to a block multiple; padding is masked out
+        pad = kv_block - Skv % kv_block
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_valid_len is None:
+            kv_valid_len = Skv
+        Skv = k.shape[1]
+    nk = Skv // kv_block
+
+    qf = q.astype(jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(Sq)  # (Sq,)
+
+    kc = k.reshape(B, nk, kv_block, Hkv, hd)
+    vc = v.reshape(B, nk, kv_block, Hkv, hd)
+    # scan over chunks: put chunk axis first
+    kc = jnp.moveaxis(kc, 1, 0)  # (nk, B, ck, Hkv, hd)
+    vc = jnp.moveaxis(vc, 1, 0)
+
+    m0 = jnp.full((B, Sq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, G, hd), jnp.float32)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, ci = inp
+        k_pos = ci * kv_block + jnp.arange(kv_block)  # (ck,)
+        s = jnp.einsum("bsngd,bcnd->bsngc", qf, kb.astype(jnp.float32))
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = jnp.ones((Sq, kv_block), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        if kv_valid_len is not None:
+            mask &= (k_pos < kv_valid_len)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bsngc,bcnd->bsngd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    from repro.analysis import scan_unroll
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kc, vc, jnp.arange(nk)),
+                                  unroll=scan_unroll(nk))
+    # rows that saw no valid key (shouldn't happen for causal q>=0) -> 0
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
+def dot_attention(q, k, v, *, causal: bool, window: int, softcap: float,
+                  scale: float, q_offset=0, kv_valid_len=None):
+    """Direct quadratic attention (decode path / reference).  Shapes as
+    :func:`chunked_attention`."""
+    B, Sq, Hkv, G, hd = q.shape
+    Skv = k.shape[1]
+    qf = q.astype(jnp.float32) * scale
+    s = jnp.einsum("bsngd,bcnd->bsngc", qf, k.astype(jnp.float32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    if kv_valid_len is not None:
+        mask &= (k_pos < kv_valid_len)[None, :]
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bsngc,bcnd->bsngd", p, v.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Full attention layer
+# ---------------------------------------------------------------------------
+
+
+def attention(cfg, p, x, positions, window: int, *, cache=None,
+              cache_index=None, impl: str = "xla", kv_block: int = 1024):
+    """Complete attention sublayer: projections, rope, core, out-projection.
+
+    Modes:
+      * cache is None                    -> training (full-sequence causal)
+      * cache given, S > 1               -> prefill (fills cache[0:S])
+      * cache given, S == 1              -> single-token decode at cache_index
+    Returns (y, new_cache).
+    """
+    B, S, D = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // Hkv
+    cd = cfg.dtype
+
+    q = L.dense(p["wq"], x, cd).reshape(B, S, H, hd)
+    k = L.dense(p["wk"], x, cd).reshape(B, S, Hkv, hd)
+    v = L.dense(p["wv"], x, cd).reshape(B, S, Hkv, hd)
+
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q, cfg.norm_eps, cd)
+        k = L.rmsnorm(p["k_norm"], k, cfg.norm_eps, cd)
+
+    q = L.apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = L.apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+
+    scale = _scale(cfg)
+    sc = cfg.attn_softcap
+    new_cache = None
+
+    if cache is None:
+        qg = q.reshape(B, S, Hkv, G, hd)
+        if impl == "pallas":
+            from repro.kernels.flash_attention import ops as fa_ops
+            o = fa_ops.flash_attention(qg, k, v, causal=True, window=window,
+                                       softcap=sc, scale=scale)
+        else:
+            o = chunked_attention(qg, k, v, causal=True, window=window,
+                                  softcap=sc, scale=scale, kv_block=kv_block)
+    elif S > 1:
+        # prefill: compute over current sequence, then write the cache
+        qg = q.reshape(B, S, Hkv, G, hd)
+        o = chunked_attention(qg, k, v, causal=True, window=window,
+                              softcap=sc, scale=scale, kv_block=kv_block)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, 0, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+    else:
+        # decode: append to cache at cache_index, attend over the prefix
+        idx = cache_index
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        qg = q.reshape(B, 1, Hkv, G, hd)
+        o = dot_attention(qg, ck, cv, causal=False, window=window,
+                          softcap=sc, scale=scale, q_offset=idx,
+                          kv_valid_len=idx + 1)
+
+    o = o.reshape(B, S, H * hd).astype(L.dt(cd))
+    y = L.dense(p["wo"], o, cd)
+    return y, new_cache
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype="bfloat16"):
+    """Per-layer KV cache arrays (used for the attention layers only)."""
+    hd = cfg.head_dim
+    shape = (batch, max_len, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, L.dt(dtype)), "v": jnp.zeros(shape, L.dt(dtype))}

@@ -1,0 +1,278 @@
+"""Core parameterized layers (pure-functional: init_* builds a param pytree,
+*_apply consumes it).  No framework dependency — params are nested dicts of
+jnp arrays; compute dtype and param dtype are decoupled (mixed precision).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dt(name: str):
+    return jnp.dtype(name)
+
+
+def cast(x, dtype_name: str):
+    return x.astype(dt(dtype_name))
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def lecun_normal(key, shape, in_axis: int = 0, dtype="float32"):
+    fan_in = int(np.prod([shape[i] for i in range(len(shape)) if i != len(shape) - 1])) \
+        if in_axis == "all_but_last" else int(shape[in_axis])
+    std = 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, shape) * std).astype(dt(dtype))
+
+
+def normal_init(key, shape, std=0.02, dtype="float32"):
+    return (jax.random.normal(key, shape) * std).astype(dt(dtype))
+
+
+def zeros_init(shape, dtype="float32"):
+    return jnp.zeros(shape, dtype=dt(dtype))
+
+
+def ones_init(shape, dtype="float32"):
+    return jnp.ones(shape, dtype=dt(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+
+def init_dense(key, in_dim: int, out_dim: int, bias: bool = False,
+               param_dtype="float32", fan_in: Optional[int] = None):
+    std = 1.0 / math.sqrt(fan_in if fan_in else in_dim)
+    p = {"w": (jax.random.normal(key, (in_dim, out_dim)) * std).astype(dt(param_dtype))}
+    if bias:
+        p["b"] = zeros_init((out_dim,), param_dtype)
+    return p
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _mm_lowgrad(x, w, grad_dtype):
+    return jnp.einsum("...i,io->...o", x, w)
+
+
+def _mm_lowgrad_fwd(x, w, grad_dtype):
+    return jnp.einsum("...i,io->...o", x, w), (x, w)
+
+
+def _mm_lowgrad_bwd(grad_dtype, res, ct):
+    x, w = res
+    gd = dt(grad_dtype)
+    dx = jnp.einsum("...o,io->...i", ct, w).astype(x.dtype)
+    x2 = x.reshape(-1, x.shape[-1])
+    ct2 = ct.reshape(-1, ct.shape[-1])
+    # local accumulation fp32 in the MXU; the *emitted* partial is
+    # grad_dtype, so the cross-device reduce moves grad_dtype bytes
+    dw = jax.lax.dot_general(x2, ct2, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    return dx, dw.astype(gd)
+
+
+_mm_lowgrad.defvjp(_mm_lowgrad_fwd, _mm_lowgrad_bwd)
+
+
+def dense(p, x, compute_dtype="bfloat16"):
+    from repro.analysis import grad_comm_dtype_active
+    w = cast(p["w"], compute_dtype)
+    xc = cast(x, compute_dtype)
+    gd = grad_comm_dtype_active()
+    # custom_vjp cotangents must match the primal dtype, so the low-dtype
+    # grad path requires params already stored in grad_dtype (the
+    # master-weights scheme) — otherwise a recast would reintroduce the
+    # fp32 reduce this path exists to avoid.
+    if gd and p["w"].dtype == dt(gd):
+        y = _mm_lowgrad(xc, w, gd)
+    else:
+        y = jnp.einsum("...i,io->...o", xc, w)
+    if "b" in p:
+        y = y + cast(p["b"], compute_dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(dim: int, param_dtype="float32"):
+    return {"scale": ones_init((dim,), param_dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6, compute_dtype="bfloat16",
+            scale_offset: float = 0.0):
+    """RMSNorm computed in fp32 (mixed-precision safe).
+
+    ``scale_offset=1.0`` with zero-init scale gives the (1+scale) gemma
+    convention; we keep ones-init + offset 0 by default.
+    """
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    y = y * (p["scale"].astype(jnp.float32) + scale_offset)
+    return y.astype(dt(compute_dtype))
+
+
+def init_layernorm(dim: int, param_dtype="float32"):
+    return {"scale": ones_init((dim,), param_dtype), "bias": zeros_init((dim,), param_dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-6, compute_dtype="float32"):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(dt(compute_dtype))
+
+
+def init_gated_rmsnorm(dim: int, param_dtype="float32"):
+    return {"scale": ones_init((dim,), param_dtype)}
+
+
+def gated_rmsnorm(p, x, z, eps: float = 1e-6, compute_dtype="bfloat16"):
+    """Mamba-2 output norm: RMSNorm(x * silu(z))."""
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(dt(compute_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, dim: int, param_dtype="float32"):
+    return {"table": normal_init(key, (vocab, dim), std=1.0 / math.sqrt(dim), dtype=param_dtype)}
+
+
+def embed(p, tokens, compute_dtype="bfloat16", multiplier: float = 1.0):
+    y = jnp.take(p["table"], tokens, axis=0).astype(dt(compute_dtype))
+    if multiplier != 1.0:
+        y = y * jnp.asarray(multiplier, dtype=dt(compute_dtype))
+    return y
+
+
+def unembed(p, x, compute_dtype="bfloat16"):
+    """Tied head: logits = x @ table.T"""
+    return jnp.einsum("...d,vd->...v", cast(x, compute_dtype),
+                      cast(p["table"], compute_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) * 2.0 / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0, mrope_sections=()):
+    """Rotate pairs (x[..., :half], x[..., half:]).
+
+    x: (B, S, H, hd).  positions: (B, S) int32 for standard RoPE, or
+    (3, B, S) for M-RoPE where the frequency axis is partitioned into
+    ``mrope_sections`` (t, h, w) blocks, each indexed by its own position
+    stream (Qwen2-VL).  For text tokens all three streams coincide.
+    """
+    half = x.shape[-1] // 2
+    freqs = jnp.asarray(rope_frequencies(x.shape[-1], theta))  # (half,)
+    if mrope_sections:
+        assert positions.ndim == 3, "M-RoPE expects positions of shape (3,B,S)"
+        sections = list(mrope_sections)
+        assert sum(sections) == half, (sections, half)
+        # section id per frequency index
+        sec_id = np.concatenate([np.full((s,), i) for i, s in enumerate(sections)])
+        pos_sel = jnp.take(positions, jnp.asarray(sec_id), axis=0)  # (half, B, S)
+        angle = jnp.einsum("hbs,h->bsh", pos_sel.astype(jnp.float32), freqs)
+    else:
+        if positions.ndim == 3:  # collapse degenerate mrope positions
+            positions = positions[0]
+        angle = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, half)
+    cos = jnp.cos(angle)[..., None, :]  # (B, S, 1, half)
+    sin = jnp.sin(angle)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Short causal conv1d (Mamba)
+# ---------------------------------------------------------------------------
+
+
+def init_conv1d(key, channels: int, width: int, param_dtype="float32"):
+    std = 1.0 / math.sqrt(width)
+    return {
+        "w": (jax.random.normal(key, (width, channels)) * std).astype(dt(param_dtype)),
+        "b": zeros_init((channels,), param_dtype),
+    }
+
+
+def causal_conv1d(p, x, compute_dtype="bfloat16", state=None):
+    """Depthwise causal conv over (B, S, C).
+
+    If ``state`` (B, width-1, C) is given, runs in streaming mode (decode):
+    returns (y, new_state).  Otherwise pads with zeros on the left.
+    """
+    w = cast(p["w"], compute_dtype)  # (W, C)
+    b = cast(p["b"], compute_dtype)
+    width = w.shape[0]
+    xc = cast(x, compute_dtype)
+    if state is not None:
+        ctx = jnp.concatenate([cast(state, compute_dtype), xc], axis=1)  # (B, W-1+S, C)
+        new_state = ctx[:, -(width - 1):, :] if width > 1 else state
+    else:
+        pad = jnp.zeros(xc.shape[:1] + (width - 1,) + xc.shape[2:], xc.dtype)
+        ctx = jnp.concatenate([pad, xc], axis=1)
+        new_state = None
+    # depthwise conv as a sum of shifted slices (W is tiny: 4)
+    S = xc.shape[1]
+    y = b
+    for i in range(width):
+        y = y + ctx[:, i:i + S, :] * w[i]
+    y = jax.nn.silu(y.astype(jnp.float32)).astype(dt(compute_dtype))
+    if state is not None:
+        return y, new_state
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+
+def softcap(x, cap: float):
+    """tanh soft-capping (gemma2): cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    xf = x.astype(jnp.float32)
+    return (jnp.tanh(xf / cap) * cap).astype(x.dtype)
+
+
+def activation_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "geglu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]

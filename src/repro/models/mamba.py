@@ -1,0 +1,219 @@
+"""Mamba-2 (state-space duality) token mixer.
+
+Train/prefill path implements the chunked SSD algorithm [arXiv:2405.21060]:
+the sequence is split into chunks of length Q; within a chunk the quadratic
+(dual) form computes the causal contribution, between chunks a linear
+recurrence carries the (H, P, N) state.  Decode is the classic O(1) SSM
+update.  Everything is fp32 inside the scan for numerical robustness and
+fully differentiable (pure jnp + lax.scan).
+
+A Pallas TPU kernel for the intra-chunk term lives in
+:mod:`repro.kernels.ssd_chunk`; ``impl="pallas"`` routes through it.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import shard
+
+
+def init_mamba(key, cfg):
+    D = cfg.d_model
+    m = cfg.mamba
+    d_in = m.d_inner(D)
+    H = m.num_heads(D)
+    N = m.d_state
+    conv_dim = d_in + 2 * N
+    d_proj = 2 * d_in + 2 * N + H  # [z, x, B, C, dt]
+    ks = jax.random.split(key, 5)
+
+    # dt bias: softplus^-1 of log-uniform dt in [dt_min, dt_max]
+    u = jax.random.uniform(ks[0], (H,))
+    dt0 = jnp.exp(u * (math.log(m.dt_max) - math.log(m.dt_min)) + math.log(m.dt_min))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+
+    return {
+        "in_proj": L.init_dense(ks[1], D, d_proj, param_dtype=cfg.param_dtype),
+        "conv": L.init_conv1d(ks[2], conv_dim, m.conv_width, cfg.param_dtype),
+        "A_log": jnp.log(jax.random.uniform(ks[3], (H,), minval=1.0, maxval=16.0)
+                         ).astype(L.dt(cfg.param_dtype)),
+        "dt_bias": dt_bias.astype(L.dt(cfg.param_dtype)),
+        "D_skip": jnp.ones((H,), L.dt(cfg.param_dtype)),
+        "norm": L.init_gated_rmsnorm(d_in, cfg.param_dtype),
+        "out_proj": L.init_dense(ks[4], d_in, D, param_dtype=cfg.param_dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, h0=None, impl: str = "xla"):
+    """Chunked state-space-duality scan.
+
+    xh: (B, S, H, P)  — per-head inputs
+    dt: (B, S, H)     — post-softplus timestep
+    A:  (H,)          — negative decay rates (A < 0)
+    Bm, Cm: (B, S, N) — input/output projections (ngroups=1, shared per head)
+    h0: optional initial state (B, H, P, N)
+    Returns (y: (B, S, H, P) fp32, h_final: (B, H, P, N) fp32).
+    """
+    B_, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    xf = xh.astype(jnp.float32).reshape(B_, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(B_, nc, Q, H)
+    Bf = Bm.astype(jnp.float32).reshape(B_, nc, Q, N)
+    Cf = Cm.astype(jnp.float32).reshape(B_, nc, Q, N)
+    Af = A.astype(jnp.float32)
+    # the SSD head axis is embarrassingly parallel — shard it over "model"
+    # or the (B, nc, Q, Q, H) decay tensor alone is tens of GB per layer
+    xf = shard(xf, "batch", None, None, "heads", None)
+    dtf = shard(dtf, "batch", None, None, "heads")
+
+    a = dtf * Af  # (B,nc,Q,H) log-decay per step (<= 0)
+    a_cum = jnp.cumsum(a, axis=2)                       # inclusive
+    a_cum = shard(a_cum, "batch", None, None, "heads")
+    a_total = a_cum[:, :, -1, :]                        # (B,nc,H)
+
+    if impl == "pallas":
+        from repro.kernels.ssd_chunk import ops as ssd_ops
+        y_intra, S_chunk = ssd_ops.ssd_intra(xf, dtf, a_cum, Bf, Cf)
+    else:
+        # intra-chunk dual (quadratic) term
+        # decay(i<-j) = exp(a_cum[i] - a_cum[j]) for i >= j
+        seg = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+        seg = shard(seg, "batch", None, None, None, "heads")
+        tril = jnp.tril(jnp.ones((Q, Q), bool))
+        Ldec = jnp.exp(jnp.where(tril[None, None, :, :, None], seg, -jnp.inf))
+        cb = jnp.einsum("bcqn,bckn->bcqk", Cf, Bf)           # (B,nc,Q,Q)
+        att = cb[..., None] * Ldec * dtf[:, :, None, :, :]    # weight dt_j
+        y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", att, xf)
+        # chunk state contributions: S_c = sum_j exp(a_cum[-1]-a_cum[j]) dt_j B_j x_j
+        wj = jnp.exp(a_total[:, :, None, :] - a_cum) * dtf     # (B,nc,Q,H)
+        S_chunk = jnp.einsum("bcqh,bcqn,bcqhp->bchpn", wj, Bf, xf)
+
+    # inter-chunk recurrence over nc (sequential scan; nc is small)
+    def step(h, inp):
+        s_c, dec = inp                                       # (B,H,P,N), (B,H)
+        h_out = h                                            # state entering chunk
+        h_new = h * jnp.exp(dec)[:, :, None, None] + s_c
+        return h_new, h_out
+
+    # NOTE: the heavy intra-chunk einsums above are vectorized over nc
+    # (outside any scan), so cost_analysis counts them exactly; only this
+    # tiny (B, H, P, N) state recurrence is sequential.
+    h_init = (jnp.zeros((B_, H, P, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    s_seq = jnp.moveaxis(S_chunk, 1, 0)                      # (nc,B,H,P,N)
+    d_seq = jnp.moveaxis(a_total, 1, 0)                      # (nc,B,H)
+    h_final, h_in = jax.lax.scan(step, h_init, (s_seq, d_seq))
+    h_in = jnp.moveaxis(h_in, 0, 1)                          # (B,nc,H,P,N)
+
+    # inter-chunk output: y_inter[i] = exp(a_cum[i]) * C_i . h_in(chunk)
+    y_inter = jnp.einsum("bcqh,bcqn,bchpn->bcqhp",
+                         jnp.exp(a_cum), Cf, h_in)
+    y = (y_intra + y_inter).reshape(B_, Sp, H, P)[:, :S]
+    return y, h_final
+
+
+def ssd_decode_step(xh, dt, A, Bm, Cm, h):
+    """Single-token SSM update.  xh: (B,H,P), dt: (B,H), Bm/Cm: (B,N),
+    h: (B,H,P,N).  Returns (y (B,H,P), h_new)."""
+    a = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))  # (B,H)
+    dbx = jnp.einsum("bh,bn,bhp->bhpn", dt.astype(jnp.float32),
+                     Bm.astype(jnp.float32), xh.astype(jnp.float32))
+    h_new = h * a[:, :, None, None] + dbx
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cm.astype(jnp.float32))
+    return y, h_new
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba-2 sublayer
+# ---------------------------------------------------------------------------
+
+
+def mamba(cfg, p, x, *, cache=None, impl: str = "xla"):
+    """x: (B, S, D) -> (y, new_cache).
+
+    cache (decode/prefill): {"conv": (B, W-1, conv_dim), "ssm": (B, H, P, N)}.
+    """
+    B, S, D = x.shape
+    m = cfg.mamba
+    d_in = m.d_inner(D)
+    H, P, N = m.num_heads(D), m.head_dim, m.d_state
+    W = m.conv_width
+    cd = cfg.dtype
+
+    zxbcdt = L.dense(p["in_proj"], x, cd)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + d_in + 2 * N]
+    dt_raw = zxbcdt[..., -H:]
+
+    new_cache = None
+    if cache is None:
+        xbc = L.causal_conv1d(p["conv"], xbc, cd)
+    elif S > 1:  # prefill
+        xbc_conv = L.causal_conv1d(p["conv"], xbc, cd)
+        conv_state = xbc[:, -(W - 1):, :] if W > 1 else cache["conv"]
+        xbc = xbc_conv
+        new_cache = {"conv": conv_state.astype(cache["conv"].dtype)}
+    else:  # decode
+        xbc_step, conv_state = L.causal_conv1d(p["conv"], xbc, cd,
+                                               state=cache["conv"])
+        xbc = xbc_step
+        new_cache = {"conv": conv_state.astype(cache["conv"].dtype)}
+
+    xi = xbc[..., :d_in]
+    Bm = xbc[..., d_in:d_in + N]
+    Cm = xbc[..., d_in + N:]
+
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xi.reshape(B, S, H, P)
+
+    if cache is None or S > 1:
+        h0 = cache["ssm"] if cache is not None else None
+        y, h_final = ssd_chunked(xh, dtv, A, Bm, Cm, m.chunk_size, h0=h0,
+                                 impl=impl)
+        if new_cache is not None:
+            new_cache["ssm"] = h_final.astype(cache["ssm"].dtype)
+    else:
+        y1, h_new = ssd_decode_step(xh[:, 0], dtv[:, 0], A, Bm[:, 0], Cm[:, 0],
+                                    cache["ssm"].astype(jnp.float32))
+        y = y1[:, None]
+        new_cache["ssm"] = h_new.astype(cache["ssm"].dtype)
+
+    y = y + xh.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(B, S, d_in)
+    y = L.gated_rmsnorm(p["norm"], y, z, cfg.norm_eps, cd)
+    y = shard(y, "batch", None, "ff")
+    return L.dense(p["out_proj"], y, cd), new_cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype="float32"):
+    D = cfg.d_model
+    m = cfg.mamba
+    d_in = m.d_inner(D)
+    conv_dim = d_in + 2 * m.d_state
+    return {
+        "conv": jnp.zeros((batch, m.conv_width - 1, conv_dim), L.dt(dtype)),
+        "ssm": jnp.zeros((batch, m.num_heads(D), m.head_dim, m.d_state),
+                         L.dt(dtype)),
+    }

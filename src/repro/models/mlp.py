@@ -1,0 +1,37 @@
+"""MLP sublayers: SwiGLU / GeGLU (gated) and plain GELU two-layer."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import shard
+
+
+def init_mlp(key, cfg, d_ff: int = 0):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_activation in ("silu", "geglu"):
+        return {
+            "wg": L.init_dense(ks[0], D, F, param_dtype=cfg.param_dtype),
+            "wi": L.init_dense(ks[1], D, F, param_dtype=cfg.param_dtype),
+            "wo": L.init_dense(ks[2], F, D, param_dtype=cfg.param_dtype),
+        }
+    return {
+        "wi": L.init_dense(ks[0], D, F, param_dtype=cfg.param_dtype),
+        "wo": L.init_dense(ks[1], F, D, param_dtype=cfg.param_dtype),
+    }
+
+
+def mlp(cfg, p, x):
+    cd = cfg.dtype
+    act = L.activation_fn(cfg.mlp_activation)
+    if "wg" in p:
+        h = act(L.dense(p["wg"], x, cd).astype(jnp.float32)).astype(L.dt(cd))
+        h = h * L.dense(p["wi"], x, cd)
+    else:
+        h = act(L.dense(p["wi"], x, cd).astype(jnp.float32)).astype(L.dt(cd))
+    h = shard(h, "batch", None, "ff")
+    return L.dense(p["wo"], h, cd)

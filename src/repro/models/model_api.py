@@ -1,0 +1,128 @@
+"""Unified model API: one interface over the LM zoo and the paper's vision
+classifiers, so Ampere's split / auxiliary / consolidation machinery is
+architecture-agnostic.
+
+A :class:`Model` exposes:
+
+* ``init(key)``                          — full parameter tree
+* ``apply(params, inputs, lo, hi, ...)`` — run layers [lo, hi); returns a
+  dict with "hidden" (the activations Ampere ships at the split point) and
+  "logits" when hi == num_layers
+* ``activation_spec(batch_shape)``       — ShapeDtypeStruct of the split
+  activations (drives the activation store and the comm-cost model)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig, VisionConfig
+from repro.models import cnn as CNN
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import vit as VIT
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    kind: str  # "lm" | "vision"
+
+    # ------------------------------------------------------------------
+    @property
+    def num_layers(self) -> int:
+        return self.cfg.num_layers
+
+    def init(self, key):
+        if self.kind == "lm":
+            return T.init_lm(self.cfg, key)
+        cfg = self.cfg
+        params = {"layers": []}
+        keys = jax.random.split(key, cfg.num_layers + 1)
+        in_dim = None
+        for i in range(cfg.num_layers):
+            if cfg.family in ("vit", "swin"):
+                params["layers"].append(VIT.init_vit_layer(keys[i], cfg, i))
+            else:
+                params["layers"].append(CNN.init_vision_layer(keys[i], cfg, i))
+        head_in = (cfg.d_model if cfg.family in ("vit", "swin")
+                   else CNN.cnn_channels(cfg, cfg.num_layers - 1))
+        params["head"] = CNN.init_head(keys[-1], cfg, head_in)
+        return params
+
+    # ------------------------------------------------------------------
+    def apply(self, params, inputs, *, lo: int = 0, hi: Optional[int] = None,
+              positions=None, caches=None, cache_index=None, impl="xla",
+              scan: bool = True, remat: str = "block", return_logits=True):
+        hi = self.num_layers if hi is None else hi
+        if self.kind == "lm":
+            return T.forward(self.cfg, params, inputs, positions=positions,
+                             lo=lo, hi=hi, caches=caches,
+                             cache_index=cache_index, impl=impl, scan=scan,
+                             remat=remat, return_logits=return_logits)
+        cfg = self.cfg
+        x = inputs.astype(L.dt(cfg.dtype)) if lo > 0 else inputs
+        for i in range(lo, hi):
+            if cfg.family in ("vit", "swin"):
+                x = VIT.apply_vit_layer(cfg, params["layers"][i], x, i)
+            else:
+                x = CNN.apply_vision_layer(cfg, params["layers"][i], x, i)
+        out = {"hidden": x, "logits": None, "caches": None,
+               "aux": jnp.zeros((), jnp.float32)}
+        if hi == self.num_layers and return_logits:
+            out["logits"] = CNN.apply_head(cfg, params["head"], x)
+        return out
+
+    # ------------------------------------------------------------------
+    def input_spec(self, batch: int, seq_len: int = 0):
+        """Abstract input (tokens / images) for the given batch."""
+        if self.kind == "lm":
+            return jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+        s = self.cfg.img_size
+        return jax.ShapeDtypeStruct((batch, s, s, self.cfg.in_channels),
+                                    jnp.float32)
+
+    def activation_spec(self, batch: int, seq_len: int = 0,
+                        split_point: int = 1, dtype: str = "bfloat16"):
+        """Shape/dtype of the activations at the split point."""
+        if self.kind == "lm":
+            return jax.ShapeDtypeStruct((batch, seq_len, self.cfg.d_model),
+                                        L.dt(dtype))
+        inp = self.input_spec(batch)
+
+        def run(x):
+            return self.apply_abstract_stub(x, split_point)
+        out = jax.eval_shape(run, inp)
+        return jax.ShapeDtypeStruct(out.shape, L.dt(dtype))
+
+    def apply_abstract_stub(self, x, p: int):
+        """Forward through layers [0, p) with freshly-initialized params —
+        only ever used under jax.eval_shape (no FLOPs, no allocation)."""
+        params = jax.eval_shape(lambda k: self.init(k),
+                                jax.random.PRNGKey(0))
+        params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params)
+        return self.apply(params, x, lo=0, hi=p, return_logits=False)["hidden"]
+
+    # ------------------------------------------------------------------
+    def split_params(self, params, p: int):
+        """Partition a full parameter tree into (device_params, server_params).
+
+        Both halves keep the full "blocks" structure (the unused repetitions
+        are sliced out for communication accounting by
+        :mod:`repro.core.splitting`, which owns the byte-exact view); this
+        method provides the *logical* split used by the training loops.
+        """
+        from repro.core import splitting
+        return splitting.split_params(self, params, p)
+
+
+def build_model(cfg) -> Model:
+    if isinstance(cfg, LMConfig):
+        return Model(cfg=cfg, kind="lm")
+    if isinstance(cfg, VisionConfig):
+        return Model(cfg=cfg, kind="vision")
+    raise TypeError(f"unsupported config type {type(cfg)}")

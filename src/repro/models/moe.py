@@ -1,0 +1,131 @@
+"""Mixture-of-Experts with GShard-style capacity dispatch, expert-parallel
+over the "expert" logical axis.
+
+Dispatch uses a *scatter-to-capacity* formulation rather than the classic
+(tokens, E, C) one-hot einsum: positions-within-expert are computed by an
+exclusive cumulative sum over the routing one-hots, tokens are scattered
+into a (groups, E, C, D) buffer (generating the all-to-all under SPMD when
+E is sharded on "model" and groups on "data"), expert FFNs run as batched
+einsums over the expert axis, and results are gathered back and combined
+with the top-k router weights.  Tokens beyond capacity are dropped (their
+combine weight is zero) — the standard GShard/Switch behaviour; the aux
+load-balancing loss keeps the drop rate low.
+
+The *batch* dimension doubles as the dispatch group (tokens only compete
+for capacity within their own sequence), which keeps the buffer sharded
+over DP and bounds the dispatch working set.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import shard
+
+
+def init_moe(key, cfg):
+    D = cfg.d_model
+    m = cfg.moe
+    E, F = m.num_experts, m.d_expert
+    ks = jax.random.split(key, 6)
+    std_in, std_out = 1.0 / math.sqrt(D), 1.0 / math.sqrt(F)
+    p = {
+        "router": {"w": L.normal_init(ks[0], (D, E), std=std_in, dtype=cfg.param_dtype)},
+        "wg": L.normal_init(ks[1], (E, D, F), std=std_in, dtype=cfg.param_dtype),
+        "wi": L.normal_init(ks[2], (E, D, F), std=std_in, dtype=cfg.param_dtype),
+        "wo": L.normal_init(ks[3], (E, F, D), std=std_out, dtype=cfg.param_dtype),
+    }
+    if m.num_shared_experts:
+        Fs = m.d_shared * m.num_shared_experts
+        p["shared"] = {
+            "wg": L.init_dense(ks[4], D, Fs, param_dtype=cfg.param_dtype),
+            "wi": L.init_dense(jax.random.fold_in(ks[4], 1), D, Fs,
+                               param_dtype=cfg.param_dtype),
+            "wo": L.init_dense(jax.random.fold_in(ks[4], 2), Fs, D,
+                               param_dtype=cfg.param_dtype),
+        }
+        p["shared_gate"] = {"w": L.normal_init(ks[5], (D, 1), std=std_in,
+                                               dtype=cfg.param_dtype)}
+    return p
+
+
+def capacity(cfg, tokens_per_group: int) -> int:
+    m = cfg.moe
+    c = int(math.ceil(tokens_per_group * m.top_k * m.capacity_factor / m.num_experts))
+    return max(4, min(tokens_per_group, -(-c // 4) * 4))  # round up to 4
+
+
+def moe_mlp(cfg, p, x):
+    """x: (B, S, D) -> (y, aux_loss). B is the dispatch group axis."""
+    B, S, D = x.shape
+    m = cfg.moe
+    E, k = m.num_experts, m.top_k
+    C = capacity(cfg, S)
+    cd = cfg.dtype
+
+    gates_logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                              p["router"]["w"].astype(jnp.float32))
+    gates = jax.nn.softmax(gates_logits, axis=-1)           # (B,S,E) fp32
+    topw, topi = jax.lax.top_k(gates, k)                    # (B,S,k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # --- aux load-balancing loss (Switch/GShard style) ---------------------
+    me = jnp.mean(gates, axis=(0, 1))                       # mean gate per expert
+    pe = jnp.mean(jax.nn.one_hot(topi[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    aux = E * jnp.sum(me * pe) * m.router_aux_coef
+
+    # --- positions within expert (exclusive cumsum over flattened choices) -
+    ch_e = topi.reshape(B, S * k)                           # expert of each choice
+    onehot = jax.nn.one_hot(ch_e, E, dtype=jnp.int32)       # (B, S*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - onehot          # exclusive
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)               # (B, S*k)
+    keep = pos < C
+    pos_c = jnp.minimum(pos, C - 1)
+
+    # --- dispatch: scatter tokens into (B, E, C, D) -------------------------
+    xt = x.reshape(B, S, D)
+    x_ch = jnp.repeat(xt, k, axis=1).astype(L.dt(cd))       # (B, S*k, D)
+    x_ch = x_ch * keep[..., None].astype(x_ch.dtype)
+
+    def scatter_group(buf, e_idx, c_idx, vals):
+        return buf.at[e_idx, c_idx].add(vals, mode="drop")
+
+    buf0 = jnp.zeros((B, E, C, D), L.dt(cd))
+    buf = jax.vmap(scatter_group)(buf0, ch_e, pos_c, x_ch)
+    buf = shard(buf, "batch", "expert", None, None)
+
+    # --- expert FFNs (batched over E; EP-sharded) ---------------------------
+    act = L.activation_fn(cfg.mlp_activation)
+    wg = p["wg"].astype(L.dt(cd))
+    wi = p["wi"].astype(L.dt(cd))
+    wo = p["wo"].astype(L.dt(cd))
+    h = act(jnp.einsum("becd,edf->becf", buf, wg).astype(jnp.float32)).astype(L.dt(cd))
+    h = h * jnp.einsum("becd,edf->becf", buf, wi)
+    h = shard(h, "batch", "expert", None, None)
+    y_buf = jnp.einsum("becf,efd->becd", h, wo)
+    y_buf = shard(y_buf, "batch", "expert", None, None)
+
+    # --- combine: gather back and weight -----------------------------------
+    def gather_group(buf_g, e_idx, c_idx):
+        return buf_g[e_idx, c_idx]                          # (S*k, D)
+
+    y_ch = jax.vmap(gather_group)(y_buf, ch_e, pos_c)       # (B, S*k, D)
+    w_ch = (topw.reshape(B, S * k) * keep).astype(L.dt(cd))
+    y = jnp.sum((y_ch * w_ch[..., None]).reshape(B, S, k, D), axis=2)
+
+    # --- shared experts (Qwen2-MoE) -----------------------------------------
+    if "shared" in p:
+        sp = p["shared"]
+        hs = act(L.dense(sp["wg"], x, cd).astype(jnp.float32)).astype(L.dt(cd))
+        hs = hs * L.dense(sp["wi"], x, cd)
+        ys = L.dense(sp["wo"], hs, cd)
+        g = jax.nn.sigmoid(jnp.einsum(
+            "bsd,do->bso", x.astype(jnp.float32),
+            p["shared_gate"]["w"].astype(jnp.float32)))
+        y = y + ys * g.astype(L.dt(cd))
+
+    return y, aux

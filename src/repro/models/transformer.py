@@ -1,0 +1,309 @@
+"""Decoder-LM composition: heterogeneous blocks (attention / Mamba / MoE),
+period-stacked parameters, scanned or unrolled execution, and — crucially
+for Ampere — *layer-range* execution (``lo``/``hi``) so the same parameter
+tree serves as full model, device block (layers [0, p)) or server block
+(layers [p, L)).
+
+Parameter layout::
+
+    {"embed": {...},
+     "blocks": {"pos0": <stacked over R reps>, ..., "pos{P-1}": ...},
+     "final_norm": {...},
+     "head": {...}}            # absent when cfg.tie_embeddings
+
+where P = cfg.pattern_period and R = num_layers // P.  Layer i = r*P + j
+lives at blocks[f"pos{j}"] leaf index [r].  Stacking by period position
+keeps `lax.scan` over repetitions possible for *any* layer pattern
+(dense, gemma2 local/global alternation, jamba 1:7 hybrid + MoE, ...).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import mlp as MLP
+from repro.models import moe as MOE
+from repro.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _has_mlp(cfg, is_moe: bool) -> bool:
+    return is_moe or cfg.d_ff > 0
+
+
+def init_block(key, cfg, layer_idx: int):
+    mixer, _, is_moe = cfg.layer_kind(layer_idx)
+    k1, k2 = jax.random.split(key)
+    p = {"pre_norm": L.init_rmsnorm(cfg.d_model, cfg.param_dtype)}
+    if mixer == "attn":
+        p["attn"] = A.init_attention(k1, cfg)
+    else:
+        p["mamba"] = M.init_mamba(k1, cfg)
+    if _has_mlp(cfg, is_moe):
+        p["pre_mlp_norm"] = L.init_rmsnorm(cfg.d_model, cfg.param_dtype)
+        if is_moe:
+            p["moe"] = MOE.init_moe(k2, cfg)
+        else:
+            p["mlp"] = MLP.init_mlp(k2, cfg)
+    if cfg.post_block_norm:
+        p["post_mixer_norm"] = L.init_rmsnorm(cfg.d_model, cfg.param_dtype)
+        if _has_mlp(cfg, is_moe):
+            p["post_mlp_norm"] = L.init_rmsnorm(cfg.d_model, cfg.param_dtype)
+    return p
+
+
+def block_apply(cfg, p, x, positions, layer_idx: int, *, cache=None,
+                cache_index=None, impl="xla"):
+    """One decoder block.  Returns (x, new_cache, aux_loss)."""
+    mixer, window, is_moe = cfg.layer_kind(layer_idx)
+    x = shard(x, "batch", "seq", None)
+    h = L.rmsnorm(p["pre_norm"], x, cfg.norm_eps, cfg.dtype)
+    if mixer == "attn":
+        mix, new_cache = A.attention(cfg, p["attn"], h, positions, window,
+                                     cache=cache, cache_index=cache_index,
+                                     impl=impl)
+    else:
+        mix, new_cache = M.mamba(cfg, p["mamba"], h, cache=cache, impl=impl)
+    if cfg.post_block_norm:
+        mix = L.rmsnorm(p["post_mixer_norm"], mix, cfg.norm_eps, cfg.dtype)
+    x = x + mix
+    aux = jnp.zeros((), jnp.float32)
+    if _has_mlp(cfg, is_moe):
+        x = shard(x, "batch", "seq", None)
+        h = L.rmsnorm(p["pre_mlp_norm"], x, cfg.norm_eps, cfg.dtype)
+        if is_moe:
+            y, aux = MOE.moe_mlp(cfg, p["moe"], h)
+        else:
+            y = MLP.mlp(cfg, p["mlp"], h)
+        if cfg.post_block_norm:
+            y = L.rmsnorm(p["post_mlp_norm"], y, cfg.norm_eps, cfg.dtype)
+        x = x + y
+    return shard(x, "batch", "seq", None), new_cache, aux
+
+
+def checkpointed_block_apply(cfg, p, x, positions, layer_idx: int, *,
+                             cache=None, cache_index=None, impl="xla"):
+    """block_apply wrapped in jax.checkpoint (static config closed over)."""
+    def fn(p_, x_, pos_, cache_, ci_):
+        return block_apply(cfg, p_, x_, pos_, layer_idx, cache=cache_,
+                           cache_index=ci_, impl=impl)
+    return jax.checkpoint(fn)(p, x, positions, cache, cache_index)
+
+
+# ---------------------------------------------------------------------------
+# Stacked parameter / cache helpers
+# ---------------------------------------------------------------------------
+
+
+def _tree_get(t, r: int):
+    return jax.tree.map(lambda a: a[r], t)
+
+
+def _tree_set(t, r: int, sub):
+    return jax.tree.map(lambda a, v: a.at[r].set(v.astype(a.dtype)), t, sub)
+
+
+def _tree_slice(t, lo: int, hi: int):
+    return jax.tree.map(lambda a: a[lo:hi], t)
+
+
+def _tree_setslice(t, lo: int, hi: int, sub):
+    return jax.tree.map(lambda a, v: a.at[lo:hi].set(v.astype(a.dtype)), t, sub)
+
+
+def init_lm(cfg, key):
+    P = cfg.pattern_period
+    R = cfg.num_layers // P
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    params = {"embed": L.init_embedding(k_embed, cfg.vocab_size, cfg.d_model,
+                                        cfg.param_dtype)}
+    blocks = {}
+    for j in range(P):
+        keys = jax.random.split(jax.random.fold_in(k_blocks, j), R)
+        blocks[f"pos{j}"] = jax.vmap(
+            lambda k, j=j: init_block(k, cfg, j))(keys)
+    params["blocks"] = blocks
+    params["final_norm"] = L.init_rmsnorm(cfg.d_model, cfg.param_dtype)
+    if not cfg.tie_embeddings:
+        params["head"] = L.init_dense(k_head, cfg.d_model, cfg.vocab_size,
+                                      param_dtype=cfg.param_dtype)
+    return params
+
+
+def init_caches(cfg, batch: int, max_len: int, *, lo: int = 0,
+                hi: Optional[int] = None, kv_dtype="bfloat16"):
+    """Stacked caches for layers [lo, hi).  Entries outside the range are
+    still allocated (uniform pytree) but never touched when running a
+    sub-range — the dry-run only materializes the range it needs via
+    ShapeDtypeStructs, so this costs nothing abstract."""
+    hi = cfg.num_layers if hi is None else hi
+    P = cfg.pattern_period
+    R = cfg.num_layers // P
+    caches = {}
+    for j in range(P):
+        mixer, _, _ = cfg.layer_kind(j)
+        if mixer == "attn":
+            one = A.init_cache(cfg, batch, max_len, kv_dtype)
+        else:
+            one = M.init_mamba_cache(cfg, batch, dtype="float32")
+        caches[f"pos{j}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (R,) + a.shape), one)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Layer-range execution
+# ---------------------------------------------------------------------------
+
+
+def run_blocks(cfg, blocks, x, positions, *, lo: int = 0, hi: Optional[int] = None,
+               caches=None, cache_index=None, impl="xla", scan: bool = True,
+               remat: str = "block"):
+    """Run layers [lo, hi).  Returns (x, new_caches, total_aux)."""
+    Lnum = cfg.num_layers
+    hi = Lnum if hi is None else hi
+    P = cfg.pattern_period
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = caches
+
+    def apply_one(x, layer_idx, caches_in):
+        r, j = divmod(layer_idx, P)
+        p = _tree_get(blocks[f"pos{j}"], r)
+        c = _tree_get(caches_in[f"pos{j}"], r) if caches_in is not None else None
+        fn = (checkpointed_block_apply if remat in ("block", "nested")
+              else block_apply)
+        x, nc, aux = fn(cfg, p, x, positions, layer_idx, cache=c,
+                        cache_index=cache_index, impl=impl)
+        if caches_in is not None and nc is not None:
+            caches_in = dict(caches_in)
+            caches_in[f"pos{j}"] = _tree_set(caches_in[f"pos{j}"], r, nc)
+        return x, caches_in, aux
+
+    if not scan or hi - lo < 2 * P or P == 0:
+        for i in range(lo, hi):
+            x, new_caches, aux = apply_one(x, i, new_caches)
+            aux_total = aux_total + aux
+        return x, new_caches, aux_total
+
+    # ---- scan over full period repetitions, unrolled remainders ----------
+    r_start = -(-lo // P)            # ceil
+    r_end = hi // P                  # floor
+    for i in range(lo, min(r_start * P, hi)):
+        x, new_caches, aux = apply_one(x, i, new_caches)
+        aux_total = aux_total + aux
+
+    if r_end > r_start:
+        xs_blocks = {f"pos{j}": _tree_slice(blocks[f"pos{j}"], r_start, r_end)
+                     for j in range(P)}
+        xs_caches = (None if new_caches is None else
+                     {f"pos{j}": _tree_slice(new_caches[f"pos{j}"], r_start, r_end)
+                      for j in range(P)})
+
+        # "block": remat at the scan-body (period) boundary only.
+        # "nested": additionally remat each layer inside the body, so the
+        # backward of one repetition keeps at most ONE layer's
+        # intermediates live — essential for multi-layer periods (jamba's
+        # 8-layer superblock) at the cost of a second forward recompute.
+        inner_fn = (checkpointed_block_apply if remat == "nested"
+                    else block_apply)
+
+        def body(carry, xs):
+            xc, auxc = carry
+            bl, cs = xs
+            out_caches = {} if cs is not None else None
+            for j in range(P):
+                c = cs[f"pos{j}"] if cs is not None else None
+                xc, nc, aux = inner_fn(cfg, bl[f"pos{j}"], xc, positions, j,
+                                       cache=c, cache_index=cache_index,
+                                       impl=impl)
+                auxc = auxc + aux
+                if out_caches is not None:
+                    out_caches[f"pos{j}"] = nc if nc is not None else c
+            return (xc, auxc), out_caches
+
+        if remat in ("block", "nested"):
+            body = jax.checkpoint(body)
+        (x, aux_total), ys = jax.lax.scan(
+            body, (x, aux_total), (xs_blocks, xs_caches))
+        if new_caches is not None:
+            new_caches = {
+                f"pos{j}": _tree_setslice(new_caches[f"pos{j}"], r_start, r_end,
+                                          ys[f"pos{j}"])
+                for j in range(P)}
+
+    for i in range(max(r_end * P, lo), hi):
+        x, new_caches, aux = apply_one(x, i, new_caches)
+        aux_total = aux_total + aux
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Full forward
+# ---------------------------------------------------------------------------
+
+
+def default_positions(cfg, batch: int, seq: int, offset=0):
+    pos = offset + jnp.arange(seq, dtype=jnp.int32)[None, :]
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.mrope_sections:
+        return jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos
+
+
+def forward(cfg, params, inputs, *, positions=None, lo: int = 0,
+            hi: Optional[int] = None, caches=None, cache_index=None,
+            impl="xla", scan=True, remat="block", return_logits=True):
+    """Run layers [lo, hi) of the LM.
+
+    ``inputs``: int32 token ids (B, S) when lo == 0, else activations
+    (B, S, D).  Returns dict(hidden, logits, caches, aux).
+    """
+    Lnum = cfg.num_layers
+    hi = Lnum if hi is None else hi
+
+    if lo == 0:
+        B, S = inputs.shape
+        x = L.embed(params["embed"], inputs, cfg.dtype,
+                    multiplier=cfg.embedding_multiplier)
+    else:
+        B, S = inputs.shape[:2]
+        x = inputs.astype(L.dt(cfg.dtype))
+
+    if positions is None:
+        off = 0 if cache_index is None else cache_index
+        positions = default_positions(cfg, B, S, offset=off)
+
+    x = shard(x, "batch", "seq", None)
+    x, new_caches, aux = run_blocks(cfg, params["blocks"], x, positions,
+                                    lo=lo, hi=hi, caches=caches,
+                                    cache_index=cache_index, impl=impl,
+                                    scan=scan, remat=remat)
+    out = {"caches": new_caches, "aux": aux, "hidden": x, "logits": None}
+    if hi == Lnum and return_logits:
+        h = L.rmsnorm(params["final_norm"], x, cfg.norm_eps, cfg.dtype)
+        if cfg.tie_embeddings:
+            logits = L.unembed(params["embed"], h, cfg.dtype)
+        else:
+            logits = L.dense(params["head"], h, cfg.dtype)
+        logits = L.softcap(logits, cfg.final_softcap)
+        out["logits"] = shard(logits, "batch", None, "vocab")
+        out["hidden"] = h
+    return out
+
+
+def head_weight(cfg, params):
+    """The (D, V) output-projection matrix (transposed view when tied)."""
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["head"]["w"]

@@ -1,0 +1,132 @@
+"""ViT-S and Swin-T-style classifiers (paper reproduction path).
+
+Layer-indexed like the CNN path: layer 0 = patch embedding, layers 1..depth
+= encoder blocks, mean-pool + FC head.  Swin uses window attention with
+alternating cyclic shifts (jnp.roll) — a faithful-in-spirit simplification
+of Swin-T (no patch merging; constant resolution, CIFAR-scale).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def num_patches(cfg) -> int:
+    return (cfg.img_size // cfg.patch_size) ** 2
+
+
+def vit_scaled_dims(cfg, width_scale: float = 1.0):
+    """(D, heads, F) of a (possibly width-scaled) encoder block."""
+    D = max(8, int(round(cfg.d_model * width_scale)))
+    H = max(1, int(round(cfg.num_heads * width_scale)))
+    while D % H:
+        H -= 1
+    F = int(D * cfg.mlp_ratio)
+    return D, H, F
+
+
+def init_vit_layer(key, cfg, layer_idx: int, in_dim: Optional[int] = None,
+                   width_scale: float = 1.0):
+    pd = cfg.param_dtype
+    D, H, F = vit_scaled_dims(cfg, width_scale)
+    ks = jax.random.split(key, 8)
+    if layer_idx == 0:
+        cin = in_dim if in_dim is not None else cfg.in_channels
+        patch_dim = cfg.patch_size * cfg.patch_size * cin
+        return {
+            "proj": L.init_dense(ks[0], patch_dim, D, bias=True, param_dtype=pd),
+            "pos": L.normal_init(ks[1], (num_patches(cfg), D), std=0.02, dtype=pd),
+        }
+    din = in_dim if in_dim is not None else D
+    return {
+        "norm1": L.init_layernorm(din, pd),
+        "wq": L.init_dense(ks[0], din, D, bias=True, param_dtype=pd),
+        "wk": L.init_dense(ks[1], din, D, bias=True, param_dtype=pd),
+        "wv": L.init_dense(ks[2], din, D, bias=True, param_dtype=pd),
+        "wo": L.init_dense(ks[3], D, din, bias=True, param_dtype=pd),
+        "norm2": L.init_layernorm(din, pd),
+        "wi": L.init_dense(ks[4], din, F, bias=True, param_dtype=pd),
+        "wom": L.init_dense(ks[5], F, din, bias=True, param_dtype=pd),
+    }
+
+
+def patchify(cfg, images):
+    B = images.shape[0]
+    P = cfg.patch_size
+    Hn = cfg.img_size // P
+    x = images.reshape(B, Hn, P, Hn, P, images.shape[-1])
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(B, Hn * Hn, -1)
+    return x
+
+
+def _mha(p, x, heads: int, window: int = 0, shift: int = 0, grid: int = 0,
+         compute_dtype="float32"):
+    B, N, Din = x.shape
+    q = L.dense(p["wq"], x, compute_dtype)
+    k = L.dense(p["wk"], x, compute_dtype)
+    v = L.dense(p["wv"], x, compute_dtype)
+    D = q.shape[-1]
+    hd = D // heads
+
+    if window:
+        # (B, g, g, D) -> shifted -> windows of (window x window)
+        g = grid
+        qw = q.reshape(B, g, g, D)
+        kw = k.reshape(B, g, g, D)
+        vw = v.reshape(B, g, g, D)
+        if shift:
+            qw = jnp.roll(qw, (-shift, -shift), axis=(1, 2))
+            kw = jnp.roll(kw, (-shift, -shift), axis=(1, 2))
+            vw = jnp.roll(vw, (-shift, -shift), axis=(1, 2))
+        nw = g // window
+
+        def towin(t):
+            t = t.reshape(B, nw, window, nw, window, D)
+            return t.transpose(0, 1, 3, 2, 4, 5).reshape(B * nw * nw,
+                                                         window * window, D)
+        q, k, v = towin(qw), towin(kw), towin(vw)
+        Bw, Nw = q.shape[0], q.shape[1]
+    else:
+        Bw, Nw = B, N
+
+    qh = q.reshape(Bw, Nw, heads, hd).astype(jnp.float32)
+    kh = k.reshape(Bw, Nw, heads, hd).astype(jnp.float32)
+    vh = v.reshape(Bw, Nw, heads, hd).astype(jnp.float32)
+    s = jnp.einsum("bnhd,bmhd->bhnm", qh, kh) / math.sqrt(hd)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhnm,bmhd->bnhd", a, vh).reshape(Bw, Nw, D)
+
+    if window:
+        g, nw = grid, grid // window
+        o = o.reshape(B, nw, nw, window, window, D)
+        o = o.transpose(0, 1, 3, 2, 4, 5).reshape(B, g, g, D)
+        if shift:
+            o = jnp.roll(o, (shift, shift), axis=(1, 2))
+        o = o.reshape(B, N, D)
+    return L.dense(p["wo"], o.astype(L.dt(compute_dtype)), compute_dtype)
+
+
+def apply_vit_layer(cfg, p, x, layer_idx: int, heads: Optional[int] = None):
+    cd = cfg.dtype
+    if layer_idx == 0:
+        x = patchify(cfg, x)
+        x = L.dense(p["proj"], x, cd)
+        return x + L.cast(p["pos"], cd)
+    heads = heads if heads is not None else cfg.num_heads
+    window, shift, grid = 0, 0, 0
+    if cfg.family == "swin" and cfg.window_size:
+        grid = cfg.img_size // cfg.patch_size
+        window = cfg.window_size
+        shift = (cfg.window_size // 2) if (layer_idx % 2 == 0) else 0
+    h = L.layernorm(p["norm1"], x, cfg.norm_eps, cd)
+    x = x + _mha(p, h, heads, window, shift, grid, cd)
+    h = L.layernorm(p["norm2"], x, cfg.norm_eps, cd)
+    m = L.dense(p["wom"], jax.nn.gelu(
+        L.dense(p["wi"], h, cd).astype(jnp.float32)).astype(L.dt(cd)), cd)
+    return x + m

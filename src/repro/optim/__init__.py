@@ -1,0 +1,16 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adam,
+    adamw,
+    momentum,
+    sgd,
+    make_optimizer,
+    global_norm,
+    clip_by_global_norm,
+)
+from repro.optim.schedules import make_schedule
+
+__all__ = [
+    "Optimizer", "adam", "adamw", "momentum", "sgd", "make_optimizer",
+    "make_schedule", "global_norm", "clip_by_global_norm",
+]

@@ -1,0 +1,160 @@
+"""Optimizers in pure JAX (no optax dependency): SGD, SGD+momentum, Adam,
+AdamW.  Functional triple (init, update) bundled in a tiny Optimizer struct.
+
+Distributed notes: optimizer state inherits the parameter sharding
+(tree_map preserves structure), so ZeRO-style sharding comes for free from
+the parameter PartitionSpecs.  ``state_dtype="bfloat16"`` stores the moments
+in bf16 — the memory-compression knob used for the >100B configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable   # (grads, state, params, lr) -> (new_params, new_state)
+    name: str = ""
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), grads), g
+
+
+def _cast_like(x, dtype_name):
+    return x.astype(jnp.dtype(dtype_name))
+
+
+def sgd(weight_decay: float = 0.0):
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        def upd(p, g):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * g).astype(p.dtype)
+        new_params = jax.tree.map(upd, params, grads)
+        return new_params, {"count": state["count"] + 1}
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(beta: float = 0.9, weight_decay: float = 0.0,
+             state_dtype: str = "float32"):
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.dtype(state_dtype)),
+                                   params)}
+
+    def update(grads, state, params, lr):
+        def upd_mu(m, g, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            return _cast_like(beta * m.astype(jnp.float32) + g, state_dtype)
+        mu = jax.tree.map(upd_mu, state["mu"], grads, params)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m.astype(jnp.float32)
+                          ).astype(p.dtype), params, mu)
+        return new_params, {"count": state["count"] + 1, "mu": mu}
+    return Optimizer(init, update, "momentum")
+
+
+def _adam_core(beta1, beta2, eps, weight_decay, decoupled, state_dtype):
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.dtype(state_dtype))
+        return {"count": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        b1c = 1.0 - beta1 ** c.astype(jnp.float32)
+        b2c = 1.0 - beta2 ** c.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            if weight_decay and not decoupled:
+                gf = gf + weight_decay * p.astype(jnp.float32)
+            mf = beta1 * m.astype(jnp.float32) + (1 - beta1) * gf
+            vf = beta2 * v.astype(jnp.float32) + (1 - beta2) * jnp.square(gf)
+            step = lr * (mf / b1c) / (jnp.sqrt(vf / b2c) + eps)
+            pf = p.astype(jnp.float32)
+            if weight_decay and decoupled:
+                step = step + lr * weight_decay * pf
+            return ((pf - step).astype(p.dtype),
+                    _cast_like(mf, state_dtype), _cast_like(vf, state_dtype))
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"count": c, "m": m, "v": v}
+    return init, update
+
+
+def adam(beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0,
+         state_dtype="float32"):
+    i, u = _adam_core(beta1, beta2, eps, weight_decay, False, state_dtype)
+    return Optimizer(i, u, "adam")
+
+
+def adamw(beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.01,
+          state_dtype="float32"):
+    i, u = _adam_core(beta1, beta2, eps, weight_decay, True, state_dtype)
+    return Optimizer(i, u, "adamw")
+
+
+def with_master_weights(inner: Optimizer) -> Optimizer:
+    """Mixed-precision training with fp32 master weights: model params stay
+    bf16 (so FSDP all-gathers and gradient reductions move half the
+    bytes); the optimizer folds fp32 masters into its state and emits the
+    bf16 copy each step."""
+    def init(params):
+        master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        return {"inner": inner.init(master), "master": master}
+
+    def update(grads, state, params, lr):
+        new_master, new_inner = inner.update(grads, state["inner"],
+                                             state["master"], lr)
+        new_params = jax.tree.map(lambda m, p: m.astype(p.dtype),
+                                  new_master, params)
+        return new_params, {"inner": new_inner, "master": new_master}
+
+    return Optimizer(init, update, inner.name + "+master")
+
+
+def make_optimizer(cfg) -> Optimizer:
+    """cfg: OptimConfig."""
+    sd = cfg.optimizer_state_dtype
+    if cfg.name == "sgd":
+        opt = sgd(cfg.weight_decay)
+    elif cfg.name == "momentum":
+        opt = momentum(cfg.momentum, cfg.weight_decay, sd)
+    elif cfg.name == "adam":
+        opt = adam(cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay, sd)
+    elif cfg.name == "adamw":
+        opt = adamw(cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay, sd)
+    else:
+        raise ValueError(f"unknown optimizer {cfg.name!r}")
+    if getattr(cfg, "master_weights", False):
+        opt = with_master_weights(opt)
+    return opt

@@ -1,0 +1,51 @@
+"""Learning-rate schedules.
+
+``inverse_time`` implements the Robbins-Monro-compliant eta_t = eta0/(1+g*t)
+family required by the paper's server-block convergence analysis
+(Assumption 5: sum eta = inf, sum eta^2 < inf); the device block uses the
+eta_t = 2/(mu*(gamma+t)) style decay of Theorem 1, which is the same family.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def make_schedule(cfg):
+    """cfg: OptimConfig -> callable step -> lr (jnp scalar)."""
+    name = cfg.schedule
+    lr0 = cfg.lr
+
+    if name == "constant":
+        return lambda t: jnp.asarray(lr0, jnp.float32)
+
+    if name == "inverse_time":
+        g = cfg.decay_gamma
+
+        def inv(t):
+            return jnp.asarray(lr0, jnp.float32) / (1.0 + g * t)
+        return inv
+
+    if name == "cosine":
+        total = max(1, cfg.total_steps)
+
+        def cos(t):
+            frac = jnp.clip(t / total, 0.0, 1.0)
+            return 0.5 * lr0 * (1.0 + jnp.cos(jnp.pi * frac))
+        return cos
+
+    if name == "warmup_cosine":
+        warm = max(1, cfg.warmup_steps)
+        total = max(warm + 1, cfg.total_steps)
+
+        def wc(t):
+            t = jnp.asarray(t, jnp.float32)
+            warm_lr = lr0 * t / warm
+            frac = jnp.clip((t - warm) / (total - warm), 0.0, 1.0)
+            cos_lr = 0.5 * lr0 * (1.0 + jnp.cos(jnp.pi * frac))
+            return jnp.where(t < warm, warm_lr, cos_lr)
+        return wc
+
+    raise ValueError(f"unknown schedule {name!r}")

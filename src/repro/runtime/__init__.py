@@ -1,0 +1,3 @@
+from repro.runtime import checkpoint, compression, elastic, fault_tolerance, metrics
+
+__all__ = ["checkpoint", "compression", "elastic", "fault_tolerance", "metrics"]

@@ -1,0 +1,74 @@
+"""Communication compression (beyond-paper knobs, default OFF for the
+paper-faithful baseline — see EXPERIMENTS.md §Perf for their effect).
+
+* int8 activation quantization — shrinks Ampere's one-shot activation
+  transfer (the s^(act) term of Eq. 27) by 4x vs fp32 / 2x vs bf16, with
+  per-row absmax scales.
+* top-k gradient/delta sparsification with error feedback — shrinks the
+  2N * s^(d) model-exchange term that dominates Ampere's communication.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# int8 activation quantization
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x):
+    """Per-row (last axis) symmetric absmax quantization.
+    Returns (q int8, scale f32 with trailing dim 1)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# top-k sparsification with error feedback
+# ---------------------------------------------------------------------------
+
+
+def topk_sparsify_leaf(x, ratio: float):
+    """Keep the largest-|.|  ratio of entries (flattened); zero the rest."""
+    xf = x.astype(jnp.float32).reshape(-1)
+    k = max(1, int(round(xf.size * ratio)))
+    thresh = jax.lax.top_k(jnp.abs(xf), k)[0][-1]
+    kept = jnp.where(jnp.abs(xf) >= thresh, xf, 0.0)
+    return kept.reshape(x.shape)
+
+
+def topk_compress(tree, ratio: float, error_feedback=None):
+    """Compress an update tree; the residual (dropped mass) is carried in
+    the error-feedback accumulator and re-added next round.
+
+    Returns (compressed_tree, new_error_feedback, sent_bytes, dense_bytes).
+    """
+    if error_feedback is None:
+        error_feedback = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+    corrected = jax.tree.map(
+        lambda u, e: u.astype(jnp.float32) + e, tree, error_feedback)
+    compressed = jax.tree.map(
+        lambda c: topk_sparsify_leaf(c, ratio), corrected)
+    new_ef = jax.tree.map(lambda c, s: c - s, corrected, compressed)
+    dense = int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
+    # sparse encoding: 4B value + 4B index per kept entry
+    sent = int(sum(max(1, int(round(np.prod(l.shape) * ratio))) * 8
+                   for l in jax.tree.leaves(tree)))
+    return compressed, new_ef, sent, dense * 4
+
+
+def compressed_bytes(tree, ratio: float) -> int:
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+    return int(max(1, round(n * ratio)) * 8)

@@ -1,0 +1,50 @@
+"""Elastic scaling.
+
+Federated phase: the cohort size is a per-round knob — the aggregation is
+weight-renormalized, so rounds tolerate any K' <= K (client churn, scale-up
+mid-training).  :class:`ElasticCohort` grows/shrinks the cohort based on a
+simple utilization target.
+
+Datacenter phase: :func:`remesh_plan` describes how to move the server
+state to a different mesh (e.g. a pod lost a slice) — re-sharding is just
+device_put with the new NamedShardings since parameter PartitionSpecs are
+mesh-shape-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.sharding import rules as shard_rules
+
+
+@dataclasses.dataclass
+class ElasticCohort:
+    min_clients: int
+    max_clients: int
+    current: int
+
+    def adjust(self, round_time: float, target_time: float):
+        """Grow when rounds are fast (spare capacity), shrink when slow."""
+        if round_time < 0.8 * target_time and self.current < self.max_clients:
+            self.current = min(self.max_clients, self.current * 2)
+        elif round_time > 1.25 * target_time and self.current > self.min_clients:
+            self.current = max(self.min_clients, self.current // 2)
+        return self.current
+
+
+def remesh_plan(params, old_mesh, new_mesh, *, strategy: str = "fsdp_tp"):
+    """Shardings needed to move ``params`` from old_mesh to new_mesh."""
+    specs = shard_rules.param_specs(params, new_mesh, strategy=strategy)
+    return jax.tree.map(lambda s: NamedSharding(new_mesh, s), specs,
+                        is_leaf=lambda x: hasattr(x, "_normalized_spec")
+                        or type(x).__name__ == "PartitionSpec")
+
+
+def remesh(params, old_mesh, new_mesh, *, strategy: str = "fsdp_tp"):
+    shardings = remesh_plan(params, old_mesh, new_mesh, strategy=strategy)
+    return jax.device_put(params, shardings)

@@ -1,0 +1,85 @@
+"""Fault tolerance for the federated orchestration loop.
+
+The cohort-level policy (client dropout, straggler deadlines) lives in
+:func:`repro.core.aggregation.sample_cohort`; this module provides the
+server-side machinery around it:
+
+* :class:`RoundJournal` — a write-ahead journal of round boundaries so a
+  restarted coordinator knows the exact (phase, round, rng state) to resume
+  from (used together with the Checkpointer).
+* :func:`with_retries` — bounded-retry wrapper for flaky host-side work
+  (activation uploads, checkpoint IO).
+* :class:`Heartbeats` — simulated liveness tracking for clients; drives
+  the drop decisions at scale tests.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+
+class RoundJournal:
+    """Append-only JSONL journal; the last complete record wins."""
+
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+    def append(self, record: dict):
+        with open(self.path, "a") as f:
+            f.write(json.dumps(record) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    def last(self) -> Optional[dict]:
+        if not os.path.exists(self.path):
+            return None
+        last = None
+        with open(self.path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    last = json.loads(line)
+                except json.JSONDecodeError:
+                    break  # torn tail write — ignore the partial record
+        return last
+
+
+def with_retries(fn: Callable, *args, retries: int = 3, backoff: float = 0.0,
+                 exceptions=(OSError, IOError), **kwargs):
+    err = None
+    for attempt in range(retries):
+        try:
+            return fn(*args, **kwargs)
+        except exceptions as e:  # pragma: no cover - timing dependent
+            err = e
+            if backoff:
+                time.sleep(backoff * (2 ** attempt))
+    raise err
+
+
+class Heartbeats:
+    """Tracks last-seen times per client; ``alive()`` filters a cohort."""
+
+    def __init__(self, timeout: float = 60.0):
+        self.timeout = timeout
+        self.last_seen = {}
+
+    def beat(self, client_id: int, now: Optional[float] = None):
+        self.last_seen[int(client_id)] = time.time() if now is None else now
+
+    def alive(self, client_ids, now: Optional[float] = None):
+        now = time.time() if now is None else now
+        out = []
+        for c in client_ids:
+            t = self.last_seen.get(int(c))
+            if t is None or now - t <= self.timeout:
+                out.append(c)
+        return np.asarray(out, dtype=np.int64)

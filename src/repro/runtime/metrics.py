@@ -1,0 +1,48 @@
+"""Structured metrics logging (JSONL) + in-memory history."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Optional
+
+
+class MetricsLogger:
+    def __init__(self, path: Optional[str] = None, echo: bool = False):
+        self.path = path
+        self.echo = echo
+        self.history = []
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._f = open(path, "a")
+        else:
+            self._f = None
+
+    def log(self, **kv):
+        rec = {"t": time.time(), **{k: _to_py(v) for k, v in kv.items()}}
+        self.history.append(rec)
+        if self._f:
+            self._f.write(json.dumps(rec) + "\n")
+            self._f.flush()
+        if self.echo:
+            msg = " ".join(f"{k}={v:.5g}" if isinstance(v, float) else f"{k}={v}"
+                           for k, v in rec.items() if k != "t")
+            print(msg, flush=True)
+
+    def close(self):
+        if self._f:
+            self._f.close()
+            self._f = None
+
+
+def _to_py(v):
+    try:
+        import numpy as np
+        if hasattr(v, "item") and getattr(v, "size", 2) == 1:
+            return v.item()
+        if isinstance(v, (np.floating, np.integer)):
+            return v.item()
+    except Exception:
+        pass
+    return v

@@ -1,0 +1,9 @@
+from repro.sharding.annotations import (
+    axis_rules,
+    current_mesh,
+    shard,
+    logical_to_spec,
+)
+from repro.sharding import rules
+
+__all__ = ["axis_rules", "current_mesh", "shard", "logical_to_spec", "rules"]

@@ -1,0 +1,80 @@
+"""Logical-axis sharding annotations.
+
+Model code annotates intermediates with *logical* axis names
+(``shard(x, "batch", "seq", None)``); the launcher binds logical names to
+physical mesh axes with :func:`axis_rules`.  Outside any binding (CPU unit
+tests) annotations are no-ops, so the same model code runs everywhere.
+
+Logical axes used across the framework:
+
+    batch    — data-parallel batch                -> ("pod","data") / ("data",)
+    seq      — residual-stream sequence (SP)      -> ("model",) when enabled
+    heads    — attention q-head axis              -> ("model",)
+    kv_heads — attention kv-head axis             -> ("model",) when divisible
+    kv_seq   — decode KV-cache sequence axis      -> ("model",) (split-KV)
+    ff       — MLP hidden                          -> ("model",)
+    expert   — MoE expert axis (EP)               -> ("model",)
+    vocab    — embedding/vocab axis               -> ("model",)
+    embed    — d_model axis of weights (FSDP)     -> ("data",) under fsdp_tp
+    clients  — federated client axis              -> ("pod","data") / ("data",)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> Optional[dict]:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: dict, mesh):
+    """Bind logical axis names to physical mesh axes within the context."""
+    prev_r, prev_m = _rules(), current_mesh()
+    _state.rules, _state.mesh = dict(rules), mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev_r, prev_m
+
+
+def logical_to_spec(*axes) -> P:
+    """Translate logical axis names to a PartitionSpec under current rules."""
+    rules = _rules() or {}
+    parts = []
+    for ax in axes:
+        if ax is None:
+            parts.append(None)
+            continue
+        phys = rules.get(ax)
+        if not phys:
+            parts.append(None)
+        elif len(phys) == 1:
+            parts.append(phys[0])
+        else:
+            parts.append(tuple(phys))
+    return P(*parts)
+
+
+def shard(x, *axes):
+    """Apply a sharding constraint if a mesh binding is active, else no-op.
+
+    ``axes`` are logical names (or None) for each array dimension.
+    """
+    mesh = current_mesh()
+    if mesh is None or _rules() is None:
+        return x
+    spec = logical_to_spec(*axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,185 @@
+"""Parameter / cache / optimizer-state PartitionSpec rules.
+
+Megatron-style TP on head/ff/expert/vocab axes over "model", optional
+ZeRO-3/FSDP sharding of the complementary weight axis over the DP axes.
+Matched by parameter *path* (regex over the joined key path) with the rank
+of the leaf; unmatched leaves are replicated.
+
+These are the *baseline* rules; §Perf iterations adjust them (the dry-run
+reads whatever is active).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# (regex, axis-pattern) — axis pattern entries: "tp" -> model, "fsdp" -> dp
+# axes, None -> replicated.  Patterns are aligned to the *trailing* dims of
+# the leaf (stacked leading R dims are always unsharded).
+_LM_RULES = [
+    (r"embed/table$",              ("tp", "fsdp")),
+    (r"head/w$",                   ("fsdp", "tp")),
+    (r"attn/w[qkv]/w$",            ("fsdp", "tp")),
+    (r"attn/w[qkv]/b$",            ("tp",)),
+    (r"attn/wo/w$",                ("tp", "fsdp")),
+    (r"attn/wo/b$",                (None,)),
+    (r"(mlp|shared)/w[gi]/w$",     ("fsdp", "tp")),
+    (r"(mlp|shared)/wo/w$",        ("tp", "fsdp")),
+    (r"moe/router/w$",             ("fsdp", None)),
+    (r"moe/w[gi]$",                ("tp", "fsdp", None)),
+    (r"moe/wo$",                   ("tp", None, "fsdp")),
+    (r"mamba/in_proj/w$",          ("fsdp", "tp")),
+    (r"mamba/out_proj/w$",         ("tp", "fsdp")),
+    (r"mamba/conv/w$",             (None, "tp")),
+    (r"mamba/conv/b$",             ("tp",)),
+    (r"mamba/(A_log|dt_bias|D_skip)$", ("tp",)),
+    (r"mamba/norm/scale$",         ("tp",)),
+]
+
+# Device-phase (federated) variant: vocab-sharded table, NO fsdp axis on
+# d_model — the tied auxiliary head (h @ table^T) then contracts over a
+# local D and yields vocab-sharded logits (tiny psums), instead of
+# all-reducing a (T, V) logits matrix per local step.  The embedding
+# gather pays one (b, S, D) psum per step — negligible next to logits.
+_DEVICE_RULES = [(r"embed/table$", ("tp", None))] + [
+    r for r in _LM_RULES if not r[0].startswith(r"embed")]
+
+# cache leaves carry a leading stacked-repetition dim R:
+#   k/v:  (R, B, Smax, Hkv, hd)   ssm: (R, B, H, P, N)   conv: (R, B, W-1, C)
+_CACHE_RULES = [
+    (r"/(k|v)$",                   (None, "dp_batch", "kv_seq", None, None)),
+    (r"/ssm$",                     (None, "dp_batch", "tp", None, None)),
+    (r"/conv$",                    (None, "dp_batch", None, "tp")),
+]
+
+
+def _axis(entry, *, tp, fsdp, dp_batch, kv_seq):
+    if entry == "tp":
+        return tp
+    if entry == "fsdp":
+        return fsdp
+    if entry == "dp_batch":
+        return dp_batch
+    if entry == "kv_seq":
+        return kv_seq
+    return None
+
+
+def _spec_from_pattern(pattern, ndim, **ax):
+    tail = [_axis(e, **ax) for e in pattern]
+    lead = [None] * (ndim - len(tail))
+    return P(*(lead + tail))
+
+
+def _divisible(dim: int, axes, mesh) -> bool:
+    if axes is None:
+        return True
+    axes = (axes,) if isinstance(axes, str) else axes
+    n = 1
+    for a in axes:
+        n *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    return dim % n == 0
+
+
+def param_specs(params, mesh, *, strategy: str = "fsdp_tp",
+                rules=None, cache: bool = False,
+                kv_seq_axes=("model",), batch_axes=None):
+    """PartitionSpec pytree for a parameter (or cache) tree.
+
+    Dims whose size is not divisible by the assigned mesh axes fall back to
+    replicated for that dim (uneven sharding is legal in GSPMD but wastes
+    padding; we only accept it for the vocab axis where padding is cheap
+    relative to the table).
+
+    ``kv_seq_axes`` / ``batch_axes`` override the decode-cache layout —
+    long-context batch=1 decode shards the KV sequence over ("data",
+    "model") instead of the batch.
+    """
+    multi_pod = "pod" in mesh.axis_names
+    all_axes = tuple(mesh.axis_names)
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    if strategy == "dp_only":
+        # pure ZeRO-DP: every weight axis that can shard takes the full
+        # mesh; no tensor parallelism (for sub-4B archs the per-token
+        # TP/SP activation collectives dwarf the ZeRO weight gathers)
+        fsdp, tp_axis = all_axes, None
+    elif strategy == "tp_only":
+        fsdp, tp_axis = None, "model"
+    else:  # fsdp_tp
+        fsdp, tp_axis = dp_axes, "model"
+    dp_batch = batch_axes if batch_axes is not None else (
+        all_axes if strategy == "dp_only" else dp_axes)
+    table = rules or (_CACHE_RULES if cache else _LM_RULES)
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        for rx, pattern in table:
+            if re.search(rx, ps):
+                spec = _spec_from_pattern(
+                    pattern, leaf.ndim, tp=tp_axis, fsdp=fsdp,
+                    dp_batch=dp_batch or None,
+                    kv_seq=(kv_seq_axes if kv_seq_axes and len(kv_seq_axes) > 1
+                            else (kv_seq_axes[0] if kv_seq_axes else None)))
+                # drop non-divisible shardings (pjit rejects uneven
+                # shardings at the jit boundary; e.g. mamba2's 50280 vocab
+                # replicates instead of sharding 16-way)
+                fixed = []
+                for d, ax in zip(leaf.shape, spec):
+                    if ax is not None and not _divisible(d, ax, mesh):
+                        fixed.append(None)
+                    else:
+                        fixed.append(ax)
+                return P(*fixed)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def to_shardings(specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh, extra_dims: int = 1):
+    multi_pod = "pod" in mesh.axis_names
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return P(dp, *([None] * extra_dims))
+
+
+def default_axis_rules(mesh, *, sequence_sharding: bool = True,
+                       strategy: str = "fsdp_tp"):
+    """Logical-axis bindings for :func:`repro.sharding.annotations.shard`."""
+    multi_pod = "pod" in mesh.axis_names
+    dp = ("pod", "data") if multi_pod else ("data",)
+    if strategy == "dp_only":
+        all_axes = tuple(mesh.axis_names)
+        return {"batch": all_axes, "clients": all_axes}
+    rules = {
+        "batch": dp,
+        "clients": dp,
+        "heads": ("model",),
+        "ff": ("model",),
+        "expert": ("model",),
+        "vocab": ("model",),
+        "kv_seq": ("model",),
+    }
+    if sequence_sharding:
+        rules["seq"] = ("model",)
+    return rules

@@ -1,0 +1,9 @@
+import os
+
+# smoke tests and benches must see the real (single) CPU device — the
+# 512-device override belongs to launch/dryrun.py ONLY.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,158 @@
+"""Hypothesis property tests on the data substrate invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (
+    ActivationStore,
+    class_histogram,
+    dirichlet_partition,
+    federate,
+    heterogeneity_index,
+    load_store,
+    make_lm_dataset,
+    make_vision_dataset,
+    round_batches,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(50, 400),
+    k=st.integers(2, 12),
+    alpha=st.floats(0.05, 1.0),
+    classes=st.integers(2, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dirichlet_partition_is_a_partition(n, k, alpha, classes, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, classes, n)
+    parts = dirichlet_partition(labels, k, alpha, rng)
+    allidx = np.concatenate(parts)
+    # exact partition: every index exactly once
+    assert sorted(allidx.tolist()) == list(range(n))
+    # every client non-empty
+    assert all(len(p) >= 1 for p in parts)
+
+
+def test_alpha_controls_heterogeneity():
+    """Smaller alpha -> more heterogeneous label distributions (paper Fig 4
+    premise).  Checked in expectation over several seeds."""
+    labels = np.random.default_rng(0).integers(0, 10, 4000)
+    het = {}
+    for alpha in (0.1, 1.0):
+        vals = []
+        for seed in range(5):
+            rng = np.random.default_rng(seed)
+            parts = dirichlet_partition(labels, 10, alpha, rng)
+            h = class_histogram(labels, parts, 10)
+            vals.append(heterogeneity_index(h))
+        het[alpha] = np.mean(vals)
+    assert het[0.1] > het[1.0] + 0.1
+
+
+@settings(max_examples=10, deadline=None)
+@given(bs=st.integers(1, 33), steps=st.integers(1, 5))
+def test_round_batches_shapes(bs, steps):
+    ds = make_vision_dataset(64, seed=0)
+    clients = federate(ds, 4, 0.5, seed=0)
+    batches = round_batches(clients, [0, 2, 1], steps, bs)
+    assert batches["images"].shape[:3] == (3, steps, bs)
+    assert batches["labels"].shape == (3, steps, bs)
+
+
+def test_client_batches_cycle_without_repeat_within_epoch():
+    ds = make_vision_dataset(40, seed=0)
+    clients = federate(ds, 2, 1.0, seed=0)
+    c = clients[0]
+    n = len(c)
+    got = c.batches(n, 1)["labels"][0]
+    assert len(got) == n
+
+
+# ---------------------------------------------------------------------------
+# activation store
+# ---------------------------------------------------------------------------
+
+
+def test_store_consolidation_pools_all_clients():
+    st_ = ActivationStore(consolidated=True, seed=0)
+    for cid in range(3):
+        st_.add(cid, {"acts": np.full((10, 4), cid, np.float32),
+                      "labels": np.full((10,), cid, np.int32)})
+    assert st_.num_samples() == 30
+    seen = set()
+    for b in st_.batches(10, epochs=1):
+        seen.update(np.unique(b["labels"]).tolist())
+    assert seen == {0, 1, 2}  # batches mix clients
+
+
+def test_store_per_client_mode():
+    st_ = ActivationStore(consolidated=False, seed=0)
+    for cid in range(2):
+        st_.add(cid, {"acts": np.full((8, 4), cid, np.float32),
+                      "labels": np.full((8,), cid, np.int32)})
+    for cid in range(2):
+        for b in st_.batches(4, epochs=1, client_id=cid):
+            assert (b["labels"] == cid).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.floats(0.01, 100.0), seed=st.integers(0, 1000))
+def test_store_int8_quantization_roundtrip(scale, seed):
+    rng = np.random.default_rng(seed)
+    acts = (rng.normal(0, scale, (16, 32))).astype(np.float32)
+    st_ = ActivationStore(consolidated=True, quantize_int8=True, seed=0)
+    st_.add(0, {"acts": acts, "labels": np.arange(16, dtype=np.int32)})
+    batch = next(iter(st_.batches(16)))
+    # batches are shuffled — restore row order via the label key
+    order = np.argsort(batch["labels"])
+    got = batch["acts"][order]
+    # per-row absmax int8: error bounded by scale/2 per row (+ float slack)
+    row_absmax = np.abs(acts).max(axis=1, keepdims=True)
+    bound = row_absmax / 127.0 * 0.5 + row_absmax * 1e-6 + 1e-7
+    assert (np.abs(got - acts) <= bound).all()
+
+
+def test_store_quantization_shrinks_bytes():
+    acts = np.random.default_rng(0).normal(0, 1, (64, 128)).astype(np.float32)
+    a = ActivationStore(consolidated=True, quantize_int8=False)
+    b = ActivationStore(consolidated=True, quantize_int8=True)
+    a.add(0, {"acts": acts, "labels": np.zeros(64, np.int32)})
+    b.add(0, {"acts": acts, "labels": np.zeros(64, np.int32)})
+    assert b.bytes_received < 0.35 * a.bytes_received
+
+
+def test_store_disk_roundtrip(tmp_path):
+    d = str(tmp_path / "acts")
+    st_ = ActivationStore(directory=d, consolidated=True, seed=0)
+    st_.add(3, {"acts": np.arange(12, dtype=np.float32).reshape(3, 4),
+                "labels": np.asarray([1, 2, 3], np.int32)})
+    st2 = load_store(d)
+    assert st2.num_samples() == 3
+    b = next(iter(st2.batches(3)))
+    assert set(b["labels"].tolist()) == {1, 2, 3}
+
+
+def test_store_async_writer_and_streaming():
+    st_ = ActivationStore(consolidated=True, seed=0)
+    st_.start_writer()
+    for cid in range(4):
+        st_.submit(cid, {"acts": np.ones((8, 4), np.float32) * cid,
+                         "labels": np.full((8,), cid, np.int32)})
+    st_.finish()
+    n = 0
+    for b in st_.streaming_batches(8):
+        n += 1
+        if n > 64:
+            break
+    assert st_.num_samples() == 32
+    assert n >= 4
+
+
+def test_lm_dataset_domain_structure():
+    ds = make_lm_dataset(64, seq_len=32, vocab=53, num_domains=4, seed=0)
+    assert ds.arrays["tokens"].shape == (64, 32)
+    assert ds.arrays["tokens"].max() < 53
+    assert set(np.unique(ds.labels)) <= set(range(4))

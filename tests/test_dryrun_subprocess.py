@@ -1,0 +1,45 @@
+"""End-to-end dry-run smoke: run one real cell of the multi-pod matrix in
+a subprocess (the 512-device override must not leak into this process) and
+validate the emitted roofline row."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("mesh", ["single_pod", "multi_pod"])
+def test_dryrun_cell_subprocess(tmp_path, mesh):
+    out = tmp_path / f"row_{mesh}.json"
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen3-1.7b", "--shape", "decode_32k",
+         "--mesh", mesh, "--no-analyze", "--out", str(out)],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    rows = json.loads(out.read_text())
+    row = rows[0]
+    assert row["status"] == "ok"
+    assert row["chips"] == (512 if mesh == "multi_pod" else 256)
+    assert row["t_memory_ms"] > 0
+    assert row["peak_mem_gb_per_device"] < 16.0  # fits a v5e
+    assert "all-gather" in row["collectives"] or row["collectives"]
+
+
+def test_dryrun_skip_rule(tmp_path):
+    out = tmp_path / "skip.json"
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "gemma2-2b", "--shape", "long_500k",
+         "--mesh", "single_pod", "--out", str(out)],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0
+    rows = json.loads(out.read_text())
+    assert rows[0]["status"] == "skip"
+    assert "sub-quadratic" in rows[0]["reason"]

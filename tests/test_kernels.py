@@ -1,0 +1,187 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp
+oracles, forward AND backward, in interpret mode (CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_chunk.ops import ssd_intra
+from repro.kernels.ssd_chunk.ref import ssd_intra_ref
+from repro.kernels.xent import ops as xent_ops
+from repro.kernels.xent.kernel import fused_xent_pallas
+from repro.kernels.xent.ref import cross_entropy_ref
+
+rng = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FA_CASES = [
+    # B, S, Hkv, G, hd, causal, window, softcap, dtype
+    (2, 32, 2, 2, 16, True, 0, 0.0, jnp.float32),
+    (1, 48, 2, 1, 32, True, 0, 0.0, jnp.float32),     # MHA
+    (2, 32, 1, 4, 16, True, 16, 0.0, jnp.float32),    # MQA + window
+    (2, 32, 2, 2, 16, True, 0, 30.0, jnp.float32),    # softcap
+    (1, 40, 2, 2, 16, True, 8, 50.0, jnp.float32),    # padding + both
+    (2, 32, 2, 2, 16, False, 0, 0.0, jnp.float32),    # bidirectional
+    (2, 32, 2, 2, 16, True, 0, 0.0, jnp.bfloat16),    # low precision
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+def test_flash_attention_fwd_bwd(case):
+    B, S, Hkv, G, hd, causal, window, softcap, dtype = case
+    q = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, G, hd)), dtype)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, hd)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, hd)), dtype)
+    scale = 1.0 / np.sqrt(hd)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+    o = fa_ops.flash_attention(q, k, v, causal, window, softcap, scale,
+                               16, 16)
+    o_ref, _ = attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap, scale=scale)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=tol, atol=tol)
+
+    def f(q, k, v):
+        return jnp.sum(jnp.sin(fa_ops.flash_attention(
+            q, k, v, causal, window, softcap, scale, 16, 16)))
+
+    def f_ref(q, k, v):
+        return jnp.sum(jnp.sin(attention_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale)[0]))
+
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g, g_ref):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=max(tol, 1e-4), atol=max(tol, 1e-4))
+
+
+def test_flash_attention_block_size_invariance():
+    B, S, Hkv, G, hd = 1, 64, 2, 2, 16
+    q = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, G, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, hd)), jnp.float32)
+    outs = [fa_ops.flash_attention(q, k, v, True, 0, 0.0, 0.25, bq, bk)
+            for bq, bk in ((8, 8), (16, 32), (32, 16), (64, 64))]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused cross-entropy
+# ---------------------------------------------------------------------------
+
+XENT_CASES = [
+    (24, 32, 100, 0.0), (16, 64, 53, 30.0), (33, 48, 257, 0.0),
+    (8, 32, 17, 10.0), (64, 16, 1000, 0.0),
+]
+
+
+@pytest.mark.parametrize("case", XENT_CASES)
+@pytest.mark.parametrize("impl", ["pallas", "xla", "sharded"])
+def test_xent_all_impls_match_ref(case, impl):
+    T, D, V, cap = case
+    h = jnp.asarray(rng.normal(0, 1, (T, D)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 1, (D, V)) / np.sqrt(D), jnp.float32)
+    lab = jnp.asarray(rng.integers(0, V, (T,)), jnp.int32)
+
+    _, ref = cross_entropy_ref(h, w, lab, softcap=cap)
+    _, got = xent_ops.cross_entropy(h, w, lab, softcap=cap, impl=impl,
+                                    block=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+    gf = jax.grad(lambda h, w: xent_ops.cross_entropy(
+        h, w, lab, softcap=cap, impl=impl, block=16)[0], argnums=(0, 1))
+    gr = jax.grad(lambda h, w: cross_entropy_ref(
+        h, w, lab, softcap=cap)[0], argnums=(0, 1))
+    for a, b in zip(gf(h, w), gr(h, w)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_xent_mask():
+    T, D, V = 16, 8, 40
+    h = jnp.asarray(rng.normal(0, 1, (T, D)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 1, (D, V)), jnp.float32)
+    lab = jnp.asarray(rng.integers(0, V, (T,)), jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, (T,)), jnp.float32)
+    l_ref, _ = cross_entropy_ref(h, w, lab, mask)
+    l_got, _ = xent_ops.cross_entropy(h, w, lab, mask, impl="xla", block=8)
+    np.testing.assert_allclose(float(l_got), float(l_ref), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunk kernel
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    (2, 3, 16, 4, 8, 16),
+    (1, 2, 8, 2, 16, 8),
+    (2, 1, 32, 8, 8, 32),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_intra_matches_ref(case):
+    B, nc, Q, H, P, N = case
+    xf = jnp.asarray(rng.normal(0, 1, (B, nc, Q, H, P)), jnp.float32)
+    dtf = jnp.asarray(np.abs(rng.normal(0, 0.1, (B, nc, Q, H))), jnp.float32)
+    A = -jnp.asarray(np.abs(rng.normal(1, 0.3, (H,))), jnp.float32)
+    a_cum = jnp.cumsum(dtf * A, axis=2)
+    Bf = jnp.asarray(rng.normal(0, 1, (B, nc, Q, N)), jnp.float32)
+    Cf = jnp.asarray(rng.normal(0, 1, (B, nc, Q, N)), jnp.float32)
+
+    y_p, s_p = ssd_intra(xf, dtf, a_cum, Bf, Cf)
+    y_r, s_r = ssd_intra_ref(xf, dtf, a_cum, Bf, Cf)
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_r),
+                               rtol=1e-5, atol=1e-5)
+
+    def loss(fn):
+        return lambda *a: (jnp.sum(jnp.sin(fn(*a)[0]))
+                           + jnp.sum(fn(*a)[1] ** 2))
+
+    g = jax.grad(loss(ssd_intra), argnums=(0, 1, 2, 3, 4))(
+        xf, dtf, a_cum, Bf, Cf)
+    g_ref = jax.grad(loss(ssd_intra_ref), argnums=(0, 1, 2, 3, 4))(
+        xf, dtf, a_cum, Bf, Cf)
+    for a, b in zip(g, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_chunked_matches_sequential_decode():
+    """Chunked SSD == step-by-step recurrence (the duality itself)."""
+    from repro.models.mamba import ssd_chunked, ssd_decode_step
+    B, S, H, P, N = 2, 20, 2, 4, 8
+    xh = jnp.asarray(rng.normal(0, 1, (B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(0, 0.2, (B, S, H))), jnp.float32)
+    A = -jnp.asarray(np.abs(rng.normal(1, 0.3, (H,))), jnp.float32)
+    Bm = jnp.asarray(rng.normal(0, 1, (B, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(0, 1, (B, S, N)), jnp.float32)
+
+    y_chunk, h_final = ssd_chunked(xh, dt, A, Bm, Cm, chunk=8)
+    h = jnp.zeros((B, H, P, N), jnp.float32)
+    ys = []
+    for t in range(S):
+        y_t, h = ssd_decode_step(xh[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], h)
+        ys.append(y_t)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_final), np.asarray(h),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,155 @@
+"""Per-architecture smoke tests + model-level invariants.
+
+Every assigned architecture instantiates its REDUCED (same-family) config,
+runs one forward and one training step on CPU, and asserts output shapes
+and finiteness.  Deeper invariants: scan-vs-unrolled equivalence and
+prefill+decode vs full-forward consistency (the KV-cache / SSM-state
+correctness proof).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import SHAPES
+from repro.models import build_model
+from repro.models import transformer as T
+
+LM_ARCHS = list(registry.ASSIGNED_ARCHS)
+VISION_ARCHS = list(registry.PAPER_ARCHS)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_forward(arch):
+    cfg = registry.get_smoke_config(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                              cfg.vocab_size)
+    out = m.apply(params, toks, remat="none")
+    assert out["logits"].shape == (2, 24, cfg.vocab_size)
+    assert bool(jnp.isfinite(out["logits"]).all())
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train_step(arch):
+    from repro.configs.base import OptimConfig, RunConfig
+    from repro.core import steps
+    cfg = registry.get_smoke_config(arch)
+    m = build_model(cfg)
+    run = RunConfig(optim=OptimConfig(name="adam", lr=1e-3,
+                                      schedule="constant"))
+    st = steps.init_e2e_state(m, run, m.init(jax.random.PRNGKey(0)))
+    fn = jax.jit(steps.make_e2e_train_step(m, run))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                              cfg.vocab_size)
+    st, m1 = fn(st, {"tokens": toks})
+    st, m2 = fn(st, {"tokens": toks})
+    assert np.isfinite(float(m1["loss"]))
+    assert float(m2["loss"]) < float(m1["loss"])  # same batch: must improve
+
+
+@pytest.mark.parametrize("arch", VISION_ARCHS)
+def test_vision_smoke(arch):
+    cfg = registry.get_smoke_config(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    imgs = jax.random.normal(jax.random.PRNGKey(1),
+                             (4, cfg.img_size, cfg.img_size, 3))
+    out = m.apply(params, imgs)
+    assert out["logits"].shape == (4, cfg.num_classes)
+    assert bool(jnp.isfinite(out["logits"]).all())
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "gemma2-2b",
+                                  "jamba-1.5-large-398b", "mamba2-370m",
+                                  "qwen2-moe-a2.7b"])
+def test_scan_unroll_equivalence(arch):
+    cfg = registry.get_smoke_config(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                              cfg.vocab_size)
+    a = m.apply(params, toks, scan=True, remat="none")["logits"]
+    b = m.apply(params, toks, scan=False, remat="none")["logits"]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "gemma2-2b",
+                                  "jamba-1.5-large-398b", "mamba2-370m",
+                                  "qwen2-vl-72b", "musicgen-large"])
+def test_prefill_decode_matches_full_forward(arch):
+    cfg = registry.get_smoke_config(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    S_pre, S_max = 12, 20
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, S_max), 0,
+                              cfg.vocab_size)
+    caches = T.init_caches(cfg, 2, S_max, kv_dtype="float32")
+    pre = m.apply(params, toks[:, :S_pre], caches=caches, cache_index=0,
+                  remat="none", scan=False)
+    caches = pre["caches"]
+    decoded = [pre["logits"][:, -1]]
+    for t in range(S_pre, S_max):
+        st = m.apply(params, toks[:, t:t + 1], caches=caches, cache_index=t,
+                     remat="none", scan=False)
+        caches = st["caches"]
+        decoded.append(st["logits"][:, 0])
+    dec = np.asarray(jnp.stack(decoded, axis=1))
+    full = np.asarray(m.apply(params, toks, remat="none")["logits"]
+                      [:, S_pre - 1:])
+    np.testing.assert_allclose(dec, full, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "gemma2-2b",
+                                  "mamba2-370m", "jamba-1.5-large-398b"])
+def test_pallas_impl_matches_xla(arch):
+    cfg = registry.get_smoke_config(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    a = m.apply(params, toks, impl="xla", remat="none")["logits"]
+    b = m.apply(params, toks, impl="pallas", remat="none")["logits"]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_pattern_period():
+    assert registry.get_config("jamba-1.5-large-398b").pattern_period == 8
+    assert registry.get_config("gemma2-2b").pattern_period == 2
+    assert registry.get_config("qwen3-1.7b").pattern_period == 1
+    assert registry.get_config("granite-moe-3b-a800m").pattern_period == 1
+
+
+def test_param_counts_match_published_scale():
+    """Full configs should land near their nameplate parameter counts."""
+    expect = {
+        "mamba2-370m": (0.30e9, 0.55e9),
+        "qwen2-vl-72b": (60e9, 85e9),
+        "jamba-1.5-large-398b": (330e9, 440e9),
+        "mistral-large-123b": (110e9, 135e9),
+        "gemma2-2b": (2.0e9, 3.5e9),
+        "qwen3-1.7b": (1.4e9, 2.4e9),
+        "qwen1.5-4b": (3.0e9, 5.0e9),
+        "musicgen-large": (2.0e9, 3.6e9),  # musicgen-large is 3.3B
+        "granite-moe-3b-a800m": (2.5e9, 4.5e9),
+        "qwen2-moe-a2.7b": (12e9, 17e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = registry.get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9}, {hi/1e9}]"
+
+
+def test_long_context_gating():
+    cells = {(a, s): r for a, s, r, _ in registry.cells()}
+    assert cells[("mamba2-370m", "long_500k")]
+    assert cells[("jamba-1.5-large-398b", "long_500k")]
+    for arch in ("qwen3-1.7b", "gemma2-2b", "mistral-large-123b",
+                 "qwen2-vl-72b", "musicgen-large", "granite-moe-3b-a800m",
+                 "qwen2-moe-a2.7b", "qwen1.5-4b"):
+        assert not cells[(arch, "long_500k")]
+    assert len(registry.cells()) == 40  # the full assignment matrix

@@ -1,0 +1,135 @@
+"""Sharding rules, collective-bytes HLO parser, roofline math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import roofline as RL
+
+
+# ---------------------------------------------------------------------------
+# collective parser on synthetic HLO
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+HloModule test
+fused_computation {
+  x = f32[128,256]{1,0} parameter(0)
+}
+ENTRY main {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ag = f32[2048,256]{1,0} all-gather(%p0), dims={0}, replica_groups=[32,16]<=[512]
+  %ar = f32[128,256]{1,0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=add
+  %rs = f32[8,256]{1,0} reduce-scatter(%p0), dimensions={0}, replica_groups=[32,16]<=[512]
+  %a2a = f32[128,256]{1,0} all-to-all(%p0), replica_groups=[64,8]<=[512]
+  %cp = f32[128,256]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  %tup = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-reduce(%p0, %p0), replica_groups={{0,1}}
+  ROOT %done = f32[128,256]{1,0} copy(%cp)
+}
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    stats = RL.parse_collectives(HLO_SAMPLE)
+    assert stats.counts == {"all-gather": 1, "all-reduce": 2,
+                            "reduce-scatter": 1, "all-to-all": 1,
+                            "collective-permute": 1}
+    ag = 2048 * 256 * 4 * 15 / 16
+    ar = 2 * 128 * 256 * 4 * 3 / 4
+    rs = 8 * 256 * 4 * 15
+    a2a = 128 * 256 * 4 * 7 / 8
+    cp = 128 * 256 * 4
+    tup = 2 * (2 * 16 * 4) * 1 / 2
+    expect = ag + ar + rs + a2a + cp + tup
+    assert abs(stats.per_device_bytes - expect) < 1.0
+
+
+def test_parse_ignores_done_ops():
+    hlo = """
+ENTRY e {
+  %s = f32[64]{0} all-gather-start(%p), replica_groups=[4,2]<=[8]
+  %d = f32[64]{0} all-gather-done(%s)
+}
+"""
+    stats = RL.parse_collectives(hlo)
+    assert stats.counts.get("all-gather", 0) == 1
+
+
+def test_roofline_terms_and_bottleneck():
+    r = RL.Roofline(arch="x", shape="train_4k", mesh="single_pod",
+                    step="server_train_step", chips=256,
+                    flops_per_device=197e12 * 0.1,      # 100 ms compute
+                    bytes_per_device=819e9 * 0.05,      # 50 ms memory
+                    collective_bytes_per_device=50e9 * 0.2,  # 200 ms coll
+                    peak_memory_per_device=8e9,
+                    model_flops=197e12 * 256 * 0.05,
+                    collective_counts={})
+    assert abs(r.t_compute - 0.1) < 1e-9
+    assert abs(r.t_memory - 0.05) < 1e-9
+    assert abs(r.t_collective - 0.2) < 1e-9
+    assert r.bottleneck == "collective"
+    assert abs(r.roofline_seconds - 0.2) < 1e-9
+    assert 0 < r.roofline_fraction < 1
+    assert abs(r.useful_flops_fraction - 0.5) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+
+def test_param_specs_divisibility_fallback():
+    from repro.sharding import rules as SR
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+
+        class _D:
+            shape = (16, 16)
+            size = 256
+        devices = _D()
+
+    params = {"embed": {"table": jax.ShapeDtypeStruct((50280, 1024),
+                                                      jnp.float32)},
+              "blocks": {"pos0": {"attn": {"wq": {
+                  "w": jax.ShapeDtypeStruct((2, 1024, 2048), jnp.float32)
+              }}}}}
+    specs = SR.param_specs(params, FakeMesh(), strategy="fsdp_tp")
+    # 50280 % 16 != 0 -> vocab axis falls back to replicated
+    assert specs["embed"]["table"] == P(None, ("data",))
+    # stacked attn weight: leading rep dim unsharded, fsdp + tp on the rest
+    assert specs["blocks"]["pos0"]["attn"]["wq"]["w"] == \
+        P(None, ("data",), "model")
+
+
+def test_shard_noop_without_context():
+    from repro.sharding import shard
+    x = jnp.ones((4, 4))
+    y = shard(x, "batch", None)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_axis_rules_binding():
+    from repro.sharding import axis_rules, logical_to_spec
+    mesh = jax.make_mesh((1,), ("data",))
+    with axis_rules({"batch": ("data",)}, mesh):
+        assert logical_to_spec("batch", None) == P("data", None)
+    assert logical_to_spec("batch", None) == P(None, None)
+
+
+def test_model_flops_estimate_scales():
+    from repro.configs import registry
+    cfg = registry.get_config("qwen3-1.7b")
+    f_train = RL.model_flops_estimate(cfg, "train", 4096, 256,
+                                      "server_train_step")
+    f_prefill = RL.model_flops_estimate(cfg, "prefill", 32768, 32,
+                                        "prefill_step")
+    f_decode = RL.model_flops_estimate(cfg, "decode", 32768, 128,
+                                       "decode_step")
+    assert f_train > f_prefill > f_decode > 0
+    # train: 6*N*D with N ~ param_count
+    n = cfg.param_count(active_only=True)
+    assert abs(f_train - 6 * n * 4096 * 256) / f_train < 1e-6

@@ -1,0 +1,153 @@
+"""Split-point machinery + auxiliary-network generation invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import SplitConfig
+from repro.core import auxiliary, splitting
+from repro.models import build_model
+
+
+def _lm_logits_from_split(model, dev, srv, toks, p):
+    acts = splitting.device_forward(model, dev, toks, p)
+    out = splitting.server_forward(model, srv, acts, p, remat="none")
+    logits = jnp.einsum("bsd,dv->bsv",
+                        out["hidden"].astype(jnp.float32),
+                        splitting.server_head_weight(srv).astype(jnp.float32))
+    cap = model.cfg.final_softcap
+    if cap:
+        logits = jnp.tanh(logits / cap) * cap
+    return logits
+
+
+@pytest.mark.parametrize("arch,p", [
+    ("qwen3-1.7b", 1), ("qwen3-1.7b", 2), ("gemma2-2b", 1),
+    ("jamba-1.5-large-398b", 1), ("jamba-1.5-large-398b", 3),
+    ("mamba2-370m", 1), ("qwen2-moe-a2.7b", 1),
+])
+def test_split_compose_equals_full_lm(arch, p):
+    cfg = registry.get_smoke_config(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    full = m.apply(params, toks, remat="none")["logits"]
+    dev, srv = splitting.split_params(m, params, p)
+    split = _lm_logits_from_split(m, dev, srv, toks, p)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(split),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["mobilenet-l", "vgg11", "vit-s", "swin-t"])
+@pytest.mark.parametrize("p", [1, 2])
+def test_split_compose_equals_full_vision(arch, p):
+    cfg = registry.get_smoke_config(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    imgs = jax.random.normal(jax.random.PRNGKey(1),
+                             (2, cfg.img_size, cfg.img_size, 3))
+    full = m.apply(params, imgs)["logits"]
+    dev, srv = splitting.split_params(m, params, p)
+    acts = splitting.device_forward(m, dev, imgs, p)
+    out = splitting.server_forward(m, srv, acts, p)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(out["logits"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("arch,p", [
+    ("qwen3-1.7b", 1), ("jamba-1.5-large-398b", 3), ("gemma2-2b", 1),
+    ("mobilenet-l", 2),
+])
+def test_merge_roundtrip(arch, p):
+    cfg = registry.get_smoke_config(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    dev, srv = splitting.split_params(m, params, p)
+    merged = splitting.merge_params(m, dev, srv, p)
+    mm = build_model(splitting.merged_config(m))
+    if m.kind == "lm":
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                  cfg.vocab_size)
+        a = m.apply(params, toks, remat="none")["logits"]
+        b = mm.apply(merged, toks, remat="none")["logits"]
+    else:
+        imgs = jax.random.normal(jax.random.PRNGKey(1),
+                                 (2, cfg.img_size, cfg.img_size, 3))
+        a = m.apply(params, imgs)["logits"]
+        b = mm.apply(merged, imgs)["logits"]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "gemma2-2b", "mamba2-370m",
+                                  "granite-moe-3b-a800m", "qwen2-moe-a2.7b",
+                                  "jamba-1.5-large-398b", "mobilenet-l",
+                                  "vit-s", "swin-t", "vgg11"])
+def test_aux_network_runs_and_is_lightweight(arch):
+    """Aux net must run on split activations and be much smaller than the
+    server block (paper: s_aux << s_s)."""
+    from repro.core import comm_model
+    cfg = registry.get_smoke_config(arch)
+    m = build_model(cfg)
+    sc = SplitConfig(split_point=1, aux_ratio=0.5)
+    aux = auxiliary.init_aux(m, jax.random.PRNGKey(0), sc)
+    params = m.init(jax.random.PRNGKey(1))
+    dev, srv = splitting.split_params(m, params, 1)
+    if m.kind == "lm":
+        toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                  cfg.vocab_size)
+        acts = splitting.device_forward(m, dev, toks, 1)
+        loss, _ = auxiliary.aux_loss(m, aux, dev, acts, {"tokens": toks}, sc)
+    else:
+        imgs = jax.random.normal(jax.random.PRNGKey(2),
+                                 (2, cfg.img_size, cfg.img_size, 3))
+        acts = splitting.device_forward(m, dev, imgs, 1)
+        labels = jax.random.randint(jax.random.PRNGKey(3), (2,), 0,
+                                    cfg.num_classes)
+        loss, _ = auxiliary.aux_loss(m, aux, dev, acts, {"labels": labels}, sc)
+    assert np.isfinite(float(loss))
+    s_aux = comm_model.tree_bytes(aux)
+    s_srv = comm_model.tree_bytes(srv)
+    assert s_aux < 0.7 * s_srv
+
+
+def test_aux_ratio_scales_cost():
+    cfg = registry.get_smoke_config("qwen3-1.7b")
+    m = build_model(cfg)
+    from repro.core import comm_model
+    sizes = [comm_model.tree_bytes(auxiliary.init_aux(
+        m, jax.random.PRNGKey(0), SplitConfig(split_point=1, aux_ratio=r)))
+        for r in (0.25, 0.5, 1.0)]
+    assert sizes[0] < sizes[1] < sizes[2]
+
+
+def test_aux_ablation_fc_only():
+    """aux_clone_first_server_layer=False drops layer 1 (the paper's
+    argued-against configuration — used by the Fig. 7-style ablation)."""
+    cfg = registry.get_smoke_config("qwen3-1.7b")
+    m = build_model(cfg)
+    with_clone = auxiliary.init_aux(
+        m, jax.random.PRNGKey(0),
+        SplitConfig(split_point=1, aux_clone_first_server_layer=True))
+    without = auxiliary.init_aux(
+        m, jax.random.PRNGKey(0),
+        SplitConfig(split_point=1, aux_clone_first_server_layer=False))
+    assert "block" in with_clone and "block" not in without
+
+
+def test_scaled_cfg_preserves_residual_width():
+    for arch in ("qwen3-1.7b", "jamba-1.5-large-398b", "qwen2-moe-a2.7b"):
+        cfg = registry.get_config(arch)
+        s = auxiliary.scaled_lm_cfg(cfg, 0.5)
+        assert s.d_model == cfg.d_model
+        if cfg.num_heads:
+            assert s.num_heads <= cfg.num_heads
+            assert s.num_heads % max(1, s.num_kv_heads) == 0
+        if cfg.moe.enabled:
+            assert 0 < s.moe.num_experts <= cfg.moe.num_experts
+            assert s.moe.top_k <= s.moe.num_experts
