@@ -1,0 +1,184 @@
+"""Perf trajectory benchmark: times the roofline-bearing step path.
+
+This is the repo's perf regression gate — every perf PR reruns it and
+compares against the committed ``BENCH_step.json`` via
+``scripts/check_bench_regression.py`` (>10% step-time regression fails).
+
+  PYTHONPATH=src python -m benchmarks.run --only bench_step
+
+Measured (CPU smoke scale here; the same code paths run at production
+scale on the pod launcher):
+
+* ``xent_fwd`` / ``xent_grad`` — fused cross-entropy Pallas kernel,
+  forward and single-sweep fused backward (dH + dW in one grid sweep).
+* ``server_step``       — one jitted server-phase training step.
+* ``server_epoch_loop`` — the pre-PR host loop: per-batch ``jnp.asarray``
+  upload + per-batch ``float(loss)`` sync.
+* ``server_epoch_jit``  — device-resident pool + one donated
+  ``lax.scan`` epoch, one host sync per epoch.
+* ``device_round``      — one jitted federated device round.
+
+Output ``BENCH_step.json`` fields:
+
+* ``config``   — shapes / arch / batch sizes measured.
+* ``times_s``  — best-of-``reps`` wall-clock seconds per entry above.
+* ``speedup_epoch`` — server_epoch_loop / server_epoch_jit.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save, setup_fed_run, table
+
+BENCH_PATH = "BENCH_step.json"
+
+
+def _best(fn, reps: int) -> float:
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _bench_xent(reps: int):
+    from repro.kernels.xent.kernel import fused_xent_pallas
+
+    T, D, V = 128, 64, 1024
+    rng = np.random.default_rng(0)
+    h = jnp.asarray(rng.normal(0, 1, (T, D)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 1, (D, V)) / np.sqrt(D), jnp.float32)
+    lab = jnp.asarray(rng.integers(0, V, (T,)), jnp.int32)
+
+    fwd = jax.jit(lambda h, w: jnp.mean(fused_xent_pallas(h, w, lab)))
+    grad = jax.jit(jax.grad(
+        lambda h, w: jnp.mean(fused_xent_pallas(h, w, lab)), argnums=(0, 1)))
+    fwd(h, w).block_until_ready()                       # compile
+    jax.block_until_ready(grad(h, w))
+    return {
+        "xent_fwd": _best(lambda: fwd(h, w).block_until_ready(), reps),
+        "xent_grad": _best(lambda: jax.block_until_ready(grad(h, w)), reps),
+    }, {"xent_T": T, "xent_D": D, "xent_V": V}
+
+
+def _bench_server_and_round(reps: int):
+    from repro.core import steps
+    from repro.core.uit import AmpereTrainer
+    from repro.data import ActivationStore
+    from repro.data.pipeline import round_batches
+
+    arch = "mobilenet-l"
+    model, run_cfg, clients, evald = setup_fed_run(
+        arch, clients=4, cohort=2, local_steps=2, batch=4,
+        n_train=512, n_eval=64)
+    tr = AmpereTrainer(model, run_cfg, clients, evald, patience=100)
+    dev, srv, aux = tr._init_states(jax.random.PRNGKey(0))
+    dev_state = {"device": dev, "aux": aux}
+    store = ActivationStore(seed=0)
+    tr.generate_activations(dev_state, store)
+    bs = run_cfg.fed.server_batch_size
+
+    # one jitted server step
+    step = jax.jit(steps.make_server_train_step(model, run_cfg))
+    st = steps.init_server_state(model, run_cfg, srv)
+    batch0 = {k: jnp.asarray(v)
+              for k, v in next(iter(store.batches(bs, epochs=1))).items()}
+    st, _ = step(st, batch0)                            # compile
+    jax.block_until_ready(st)
+
+    def one_step():
+        s2, m = step(st, batch0)
+        jax.block_until_ready(s2)
+
+    # seed-style per-batch epoch loop (host upload + float() every step);
+    # state chains across reps exactly like real training
+    loop_state = [st]
+
+    def epoch_loop():
+        s2 = loop_state[0]
+        for batch in store.batches(bs, epochs=1):
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            s2, m = step(s2, batch)
+            float(m["loss"])
+        loop_state[0] = s2
+
+    # device-resident donated jitted epoch (this PR's path)
+    epoch_jit = jax.jit(steps.make_server_epoch_fn(model, run_cfg),
+                        donate_argnums=(0,))
+    pool = {k: jnp.asarray(v)
+            for k, v in store.pool(dequantize=False).items()}
+    jit_state = [jax.tree.map(lambda a: jnp.array(a),
+                              steps.init_server_state(model, run_cfg, srv))]
+    idx0 = jnp.asarray(store.epoch_indices(bs))
+    s2, l = epoch_jit(jit_state[0], pool, idx0)         # compile
+    np.asarray(l)
+    jit_state[0] = s2
+
+    def epoch_jitted():
+        idx = jnp.asarray(store.epoch_indices(bs))
+        s2, losses = epoch_jit(jit_state[0], pool, idx)
+        np.asarray(losses)
+        jit_state[0] = s2
+
+    # one federated device round
+    fed = run_cfg.fed
+    ids = list(range(fed.clients_per_round))
+    batches = round_batches(clients, ids, fed.local_steps,
+                            fed.device_batch_size)
+    batches = {k: jnp.asarray(v) for k, v in batches.items()}
+    w = jnp.ones((fed.clients_per_round,), jnp.float32)
+    jax.block_until_ready(tr._device_round(dev_state, batches, w, 0.1))
+
+    def one_round():
+        s2, m = tr._device_round(dev_state, batches, w, 0.1)
+        jax.block_until_ready(s2)
+
+    times = {
+        "server_step": _best(one_step, reps),
+        "server_epoch_loop": _best(epoch_loop, reps),
+        "server_epoch_jit": _best(epoch_jitted, reps),
+        "device_round": _best(one_round, reps),
+    }
+    cfg = {"arch": arch, "server_batch": bs,
+           "pool_samples": store.num_samples(),
+           "device_batch": fed.device_batch_size,
+           "local_steps": fed.local_steps,
+           "cohort": fed.clients_per_round,
+           "backend": jax.default_backend()}
+    return times, cfg
+
+
+def run(quick: bool = True):
+    reps = 3 if quick else 10
+    times, config = {}, {}
+    t, c = _bench_xent(reps)
+    times.update(t)
+    config.update(c)
+    t, c = _bench_server_and_round(reps)
+    times.update(t)
+    config.update(c)
+
+    speedup = times["server_epoch_loop"] / times["server_epoch_jit"]
+    payload = {"config": config,
+               "times_s": {k: round(v, 6) for k, v in times.items()},
+               "speedup_epoch": round(speedup, 3)}
+    with open(BENCH_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    save("bench_step", payload)
+
+    rows = [{"metric": k, "seconds": v} for k, v in times.items()]
+    rows.append({"metric": "epoch speedup (loop/jit)", "seconds": speedup})
+    table(rows, ["metric", "seconds"], "bench_step — step-path wall clock")
+    return payload
+
+
+if __name__ == "__main__":
+    run(quick=False)

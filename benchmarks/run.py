@@ -8,6 +8,15 @@ Analytic benchmarks (Tables 1/2/5, Figs 3/6/7/9) are exact at the paper's
 full scale; training benchmarks (Figs 8/10/11, Table 4) run the real
 federated systems at smoke scale on synthetic non-IID data.  The roofline
 benchmark reads the dry-run matrix results when present.
+
+``bench_step`` is the perf-trajectory gate (not a paper figure): it times
+the xent kernel fwd/bwd, one server step, one seed-style host-loop server
+epoch vs the jitted device-resident epoch, and one device round, then
+writes ``BENCH_step.json`` at the repo root —
+``{"config": {...}, "times_s": {name: best-of-N seconds}, "speedup_epoch"}``.
+Run it alone with ``--only bench_step``; compare two snapshots with
+``python scripts/check_bench_regression.py old.json new.json`` (exits
+nonzero on >10% step-time regression).
 """
 
 from __future__ import annotations
@@ -18,6 +27,7 @@ import time
 import traceback
 
 from benchmarks import (
+    bench_step,
     fig3_fig6_splitpoint,
     fig7_aux_ratio,
     fig8_accuracy_time,
@@ -43,6 +53,7 @@ BENCHMARKS = {
     "fig11_consolidation": fig11_consolidation.run,
     "table4_epochs": table4_epochs.run,
     "roofline": roofline.run,
+    "bench_step": bench_step.run,
 }
 
 

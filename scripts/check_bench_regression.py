@@ -1,0 +1,56 @@
+#!/usr/bin/env python
+"""Compare two BENCH_step.json snapshots; fail on step-time regression.
+
+    python scripts/check_bench_regression.py baseline.json candidate.json \
+        [--threshold 0.10]
+
+Exits nonzero when any entry of ``times_s`` in the candidate is more than
+``threshold`` (default 10%) slower than the baseline.  Entries present in
+only one file are reported but never fail the check (benchmarks may be
+added or renamed between PRs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="allowed fractional slowdown (0.10 = 10%%)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)["times_s"]
+    with open(args.candidate) as f:
+        cand = json.load(f)["times_s"]
+
+    failures = []
+    for name in sorted(set(base) | set(cand)):
+        if name not in base or name not in cand:
+            print(f"[skip] {name}: only in "
+                  f"{'candidate' if name in cand else 'baseline'}")
+            continue
+        b, c = float(base[name]), float(cand[name])
+        ratio = c / b if b > 0 else float("inf")
+        status = "ok"
+        if ratio > 1.0 + args.threshold:
+            status = "REGRESSION"
+            failures.append(name)
+        print(f"[{status}] {name}: {b:.6f}s -> {c:.6f}s ({ratio:.3f}x)")
+
+    if failures:
+        print(f"\n{len(failures)} regression(s) beyond "
+              f"{args.threshold:.0%}: {failures}")
+        return 1
+    print("\nno step-time regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

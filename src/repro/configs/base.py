@@ -357,6 +357,10 @@ class RunConfig:
     checkpoint_dir: str = ""
     checkpoint_every: int = 0       # rounds; 0 = off
     kernels: str = "auto"           # auto|pallas|xla
+    # server phase: keep the consolidated activation pool device-resident
+    # (jitted whole-epoch scan) while it fits this budget; larger pools
+    # stream batches through the double-buffered DevicePrefetcher instead.
+    device_pool_budget_mb: int = 1024
 
 
 @dataclass(frozen=True)

@@ -124,7 +124,7 @@ def make_server_train_step(model, run_cfg, *, impl="xla", xent_impl="xla",
 
     def loss_fn(server_params, batch):
         acts = batch["acts"]
-        if run_cfg.split.quantize_activations:
+        if "acts_scale" in batch:   # int8 payload stayed quantized until here
             from repro.runtime import compression
             acts = compression.dequantize_int8(acts, batch["acts_scale"])
         out = splitting.server_forward(model, server_params, acts, p,
@@ -165,6 +165,33 @@ def init_server_state(model, run_cfg, server_params):
     opt = make_optimizer(run_cfg.optim)
     return {"server": server_params, "opt": opt.init(server_params),
             "step": jnp.zeros((), jnp.int32)}
+
+
+def make_server_epoch_fn(model, run_cfg, *, impl="xla", xent_impl="xla",
+                         grad_shardings=None):
+    """One FULL server epoch as a single jittable function.
+
+    ``epoch_fn(state, pool, idx)`` scans :func:`make_server_train_step`
+    over ``idx`` — an (nb, batch) int32 matrix of gathered sample indices
+    into the device-resident consolidated ``pool`` (int8 payloads stay
+    quantized in HBM; the step dequantizes per batch).  Per-batch losses
+    come back as one (nb,) device array, so the host syncs once per
+    epoch instead of once per step.  Intended use:
+    ``jax.jit(make_server_epoch_fn(...), donate_argnums=(0,))``.
+    """
+    step = make_server_train_step(model, run_cfg, impl=impl,
+                                  xent_impl=xent_impl,
+                                  grad_shardings=grad_shardings)
+
+    def epoch_fn(state, pool, idx):
+        def body(state, idx_b):
+            batch = jax.tree.map(lambda a: jnp.take(a, idx_b, axis=0), pool)
+            state, m = step(state, batch)
+            return state, m["loss"]
+
+        return jax.lax.scan(body, state, idx)
+
+    return epoch_fn
 
 
 # ---------------------------------------------------------------------------

@@ -34,7 +34,7 @@ import numpy as np
 
 from repro.core import aggregation, auxiliary, comm_model, evaluate, splitting, steps
 from repro.data.activation_store import ActivationStore
-from repro.data.pipeline import ClientData, round_batches
+from repro.data.pipeline import ClientData, DevicePrefetcher, round_batches
 from repro.models import build_model
 from repro.optim import make_schedule
 from repro.runtime.checkpoint import Checkpointer
@@ -68,6 +68,10 @@ class AmpereTrainer:
         # step functions
         self._device_round = jax.jit(steps.make_device_round_step(model, run_cfg))
         self._server_step = jax.jit(steps.make_server_train_step(model, run_cfg))
+        # whole-epoch server phase: device-resident pool, donated state,
+        # one host sync per epoch
+        self._server_epoch = jax.jit(steps.make_server_epoch_fn(model, run_cfg),
+                                     donate_argnums=(0,))
         self._sched = make_schedule(run_cfg.optim)
 
         # sizes for comm accounting
@@ -177,23 +181,25 @@ class AmpereTrainer:
         def fwd(device_params, inp):
             return splitting.device_forward(model, device_params, inp, p)
 
+        inp_key = "tokens" if model.kind == "lm" else "images"
+        lab_key = "tokens" if model.kind == "lm" else "labels"
+
+        def host_batches():
+            for client in self.clients:
+                arrays = client.dataset.arrays
+                n = len(client.dataset)
+                for s in range(0, n, batch_size):
+                    idx = np.arange(s, min(s + batch_size, n))
+                    yield (client.client_id, arrays[lab_key][idx]), \
+                        arrays[inp_key][idx]
+
         store.start_writer()
-        for client in self.clients:
-            arrays = client.dataset.arrays
-            n = len(client.dataset)
-            for s in range(0, n, batch_size):
-                idx = np.arange(s, min(s + batch_size, n))
-                if model.kind == "lm":
-                    inp = jnp.asarray(arrays["tokens"][idx])
-                    shard = {"acts": np.asarray(fwd(dev_state["device"], inp),
-                                                np.float32),
-                             "tokens": arrays["tokens"][idx]}
-                else:
-                    inp = jnp.asarray(arrays["images"][idx])
-                    shard = {"acts": np.asarray(fwd(dev_state["device"], inp),
-                                                np.float32),
-                             "labels": arrays["labels"][idx]}
-                store.submit(client.client_id, shard)
+        # double-buffered upload: batch k+1 transfers while k computes
+        for (cid, labels), inp in DevicePrefetcher(host_batches()):
+            shard = {"acts": np.asarray(fwd(dev_state["device"], inp),
+                                        np.float32),
+                     lab_key: labels}
+            store.submit(cid, shard)
         store.finish()
         self.history["comm_bytes"] += store.bytes_received
         self.history["sim_time"] += store.bytes_received / comm_model.BANDWIDTH_BPS
@@ -205,6 +211,15 @@ class AmpereTrainer:
     # ------------------------------------------------------------------
     def run_server_phase(self, dev_state, srv_params, store: ActivationStore,
                          max_epochs: Optional[int] = None):
+        """Device-bound server phase.
+
+        The consolidated pool is uploaded ONCE (int8 payloads stay
+        quantized; the jitted step dequantizes per batch) and each epoch
+        runs as a single donated ``lax.scan`` over gathered batch indices
+        — per-batch losses land on host once per epoch, never per step.
+        Pools beyond ``run.device_pool_budget_mb`` fall back to streaming
+        host batches through the double-buffered :class:`DevicePrefetcher`.
+        """
         run = self.run
         srv_state = steps.init_server_state(self.model, run, srv_params)
         start_epoch = 0
@@ -218,13 +233,34 @@ class AmpereTrainer:
         eval_step = evaluate.make_eval_step(merged_model)
         epochs = max_epochs if max_epochs is not None else run.fed.server_epochs
 
+        bs = run.fed.server_batch_size
+        budget = run.device_pool_budget_mb * 2 ** 20
+        resident = (store.num_samples() >= bs
+                    and store.pool_nbytes() <= budget)
+        pool_dev = None
+        if resident:
+            pool_dev = {k: jnp.asarray(v)
+                        for k, v in store.pool(dequantize=False).items()}
+            # the epoch fn donates its input state; copy once so the
+            # caller's srv_params buffers survive the first donation
+            srv_state = jax.tree.map(lambda a: jnp.array(a), srv_state)
+
         p = run.split.split_point
         for epoch in range(start_epoch, epochs):
-            ls = []
-            for batch in store.batches(run.fed.server_batch_size, epochs=1):
-                batch = {k: jnp.asarray(v) for k, v in batch.items()}
-                srv_state, m = self._server_step(srv_state, batch)
-                ls.append(float(m["loss"]))
+            if resident:
+                idx = jnp.asarray(store.epoch_indices(bs))
+                srv_state, losses = self._server_epoch(srv_state, pool_dev,
+                                                       idx)
+                ls = np.asarray(losses, np.float64)  # ONE sync per epoch
+            else:
+                acc = []
+                batches = store.batches(bs, epochs=1, dequantize=False)
+                for _, batch in DevicePrefetcher(
+                        (None, b) for b in batches):
+                    srv_state, m = self._server_step(srv_state, batch)
+                    acc.append(m["loss"])           # device scalar, no sync
+                ls = (np.asarray(jax.device_get(acc), np.float64) if acc
+                      else np.zeros((0,), np.float64))  # one epoch-end sync
             merged = splitting.merge_params(self.model, dev_state["device"],
                                             srv_state["server"], p)
             val = evaluate.evaluate(merged_model, merged, self.eval_data,

@@ -4,7 +4,13 @@ from repro.data.partition import (
     dirichlet_partition,
     heterogeneity_index,
 )
-from repro.data.pipeline import ClientData, Prefetcher, federate, round_batches
+from repro.data.pipeline import (
+    ClientData,
+    DevicePrefetcher,
+    Prefetcher,
+    federate,
+    round_batches,
+)
 from repro.data.synthetic import (
     Dataset,
     make_dataset_for_model,
@@ -13,7 +19,8 @@ from repro.data.synthetic import (
 )
 
 __all__ = [
-    "ActivationStore", "load_store", "ClientData", "Prefetcher", "federate",
+    "ActivationStore", "load_store", "ClientData", "DevicePrefetcher",
+    "Prefetcher", "federate",
     "round_batches", "Dataset", "make_dataset_for_model", "make_lm_dataset",
     "make_vision_dataset", "dirichlet_partition", "class_histogram",
     "heterogeneity_index",

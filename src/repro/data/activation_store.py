@@ -104,23 +104,53 @@ class ActivationStore:
     # ------------------------------------------------------------------
     # Subprocess 2: load for training
     # ------------------------------------------------------------------
-    def _pool(self, client_id: Optional[int] = None) -> dict:
+    def _shards(self, client_id: Optional[int] = None) -> List[dict]:
+        """Snapshot of the shard list (all clients or one) under the lock
+        — the single source for pool assembly, counting and sizing."""
         with self._lock:
             if client_id is None:
-                shards = [s for lst in self._mem.values() for s in lst]
-            else:
-                shards = list(self._mem.get(int(client_id), []))
+                return [s for lst in self._mem.values() for s in lst]
+            return list(self._mem.get(int(client_id), []))
+
+    def _pool(self, client_id: Optional[int] = None) -> dict:
+        shards = self._shards(client_id)
         if not shards:
             return {}
         keys = shards[0].keys()
         return {k: np.concatenate([s[k] for s in shards]) for k in keys}
 
+    def pool(self, client_id: Optional[int] = None,
+             dequantize: bool = False) -> dict:
+        """The full consolidated (or per-client) pool as one dict of
+        arrays.  With ``dequantize=False`` an int8 payload stays quantized
+        (plus its ``acts_scale``) — the device-resident server phase
+        uploads it as-is and dequantizes inside the jitted step."""
+        p = self._pool(client_id)
+        return self._dequant(p) if (dequantize and p) else p
+
+    def pool_nbytes(self, client_id: Optional[int] = None) -> int:
+        """Bytes the (quantized) pool occupies — the device-memory
+        admission check for the resident server phase.  Summed per shard
+        (a concatenated pool has exactly the same byte count) so the
+        check never copies the data."""
+        return sum(np.asarray(v).nbytes
+                   for s in self._shards(client_id) for v in s.values())
+
+    def epoch_indices(self, batch_size: int,
+                      client_id: Optional[int] = None) -> np.ndarray:
+        """(nb, batch_size) int32 gather indices for one shuffled epoch.
+
+        Consumes exactly one ``rng.permutation`` — the same draw (and the
+        same batch membership, trailing remainder dropped) as one
+        :meth:`batches` epoch, so a store seeded identically yields
+        bit-identical batch order on either path."""
+        n = self.num_samples(client_id)
+        order = self.rng.permutation(n)
+        nb = n // batch_size
+        return order[:nb * batch_size].reshape(nb, batch_size).astype(np.int32)
+
     def num_samples(self, client_id: Optional[int] = None) -> int:
-        with self._lock:
-            if client_id is None:
-                return sum(len(s["acts"]) for lst in self._mem.values()
-                           for s in lst)
-            return sum(len(s["acts"]) for s in self._mem.get(int(client_id), []))
+        return sum(len(s["acts"]) for s in self._shards(client_id))
 
     def clients(self) -> List[int]:
         with self._lock:
@@ -134,6 +164,18 @@ class ActivationStore:
             del batch["acts_scale"]
         return batch
 
+    def _one_epoch(self, pool: dict, batch_size: int, dequantize: bool):
+        """One shuffled pass over ``pool`` — the single batching loop both
+        :meth:`batches` and :meth:`streaming_batches` draw from, and the
+        rng contract :meth:`epoch_indices` mirrors (one permutation per
+        epoch, trailing remainder dropped)."""
+        n = len(pool["acts"])
+        order = self.rng.permutation(n)
+        for s in range(0, n - batch_size + 1, batch_size):
+            idx = order[s:s + batch_size]
+            b = {k: v[idx] for k, v in pool.items()}
+            yield self._dequant(b) if dequantize else b
+
     def batches(self, batch_size: int, epochs: int = 1,
                 client_id: Optional[int] = None, dequantize: bool = True):
         """Yield shuffled batches over the (consolidated or per-client)
@@ -142,36 +184,28 @@ class ActivationStore:
                           else client_id)
         if not pool:
             return
-        n = len(pool["acts"])
         for _ in range(epochs):
-            order = self.rng.permutation(n)
-            for s in range(0, n - batch_size + 1, batch_size):
-                idx = order[s:s + batch_size]
-                b = {k: v[idx] for k, v in pool.items()}
-                yield self._dequant(b) if dequantize else b
+            yield from self._one_epoch(pool, batch_size, dequantize)
 
     def streaming_batches(self, batch_size: int, poll: float = 0.01,
                           dequantize: bool = True):
         """Train-while-receiving: yields batches from whatever has arrived
-        so far; completes one final full epoch after ``finish()``."""
+        so far; completes one final full epoch over the COMPLETE pool
+        after ``finish()`` — shards that landed after the last mid-stream
+        snapshot are guaranteed at least one epoch."""
         import time
-        seen_cycle = 0
-        while True:
+
+        while not self._closed.is_set():
             pool = self._pool()
-            n = len(pool.get("acts", ()))
-            if n >= batch_size:
-                order = self.rng.permutation(n)
-                for s in range(0, n - batch_size + 1, batch_size):
-                    idx = order[s:s + batch_size]
-                    b = {k: v[idx] for k, v in pool.items()}
-                    yield self._dequant(b) if dequantize else b
-                seen_cycle += 1
-            if self._closed.is_set():
-                if n >= batch_size:
-                    return
-                if seen_cycle:
-                    return
-            time.sleep(poll)
+            if len(pool.get("acts", ())) >= batch_size:
+                yield from self._one_epoch(pool, batch_size, dequantize)
+            else:
+                time.sleep(poll)
+        # finish() joins the writer before setting _closed, so this
+        # snapshot is the final pool: one guaranteed full epoch over it.
+        pool = self._pool()
+        if len(pool.get("acts", ())) >= batch_size:
+            yield from self._one_epoch(pool, batch_size, dequantize)
 
 
 def load_store(directory: str, consolidated: bool = True,

@@ -8,6 +8,11 @@
 * :class:`Prefetcher` — background-thread prefetch of host batches so the
   accelerator step overlaps with batch assembly (the server phase's
   Algorithm-1 subprocess 2).
+* :class:`DevicePrefetcher` — double-buffered host→device transfer: the
+  next batch's ``jax.device_put`` runs in a background thread while the
+  current step computes.  Fallback feeding path for the server phase
+  when the consolidated pool exceeds the device-memory budget, and the
+  upload path of ``generate_activations``.
 """
 
 from __future__ import annotations
@@ -100,3 +105,27 @@ class Prefetcher:
                     raise self.error
                 return
             yield item
+
+
+class DevicePrefetcher:
+    """Double-buffered host→device prefetch.
+
+    Wraps an iterator of ``(meta, tree)`` pairs: ``tree`` (any pytree of
+    numpy arrays) is moved to device with ``jax.device_put`` in a
+    background thread, up to ``depth`` items ahead of the consumer, so
+    the upload of batch k+1 overlaps the computation on batch k.
+    ``meta`` passes through untouched (client ids, host-side slices).
+    Iteration yields ``(meta, device_tree)`` in producer order.
+    """
+
+    def __init__(self, producer_iter, depth: int = 2):
+        import jax
+
+        def put(item):
+            meta, tree = item
+            return meta, jax.device_put(tree)
+
+        self._inner = Prefetcher(map(put, producer_iter), depth=depth)
+
+    def __iter__(self):
+        return iter(self._inner)

@@ -10,6 +10,18 @@ into resident VMEM tiles.
 VMEM budget: tiles are (bt, D) for hidden and (D, bv) for the weight —
 ``pick_blocks`` chooses bt/bv so both fit ~12 MB; supports gemma2's
 final-logit softcap with the exact tanh chain rule.
+
+The backward is a SINGLE grid sweep: each (bt, bv) logits tile is
+recomputed exactly once and contributes to both dH and dW in the same
+kernel invocation (3 matmuls per tile instead of the 4 a two-kernel
+backward pays, and one H/W HBM sweep instead of two).  dW lives in a
+resident VMEM tile accumulated over the innermost token axis.  dH has
+two strategies (``xent_bwd(dh_strategy=...)``): on TPU the running sum
+lives in HBM through an input/output-aliased buffer re-fetched on each
+vocab revisit (zero extra footprint); under the interpreter — whose
+pipeline does not thread output flushes back into aliased input reads —
+dH is staged as per-vocab-tile partials and reduced outside the kernel
+(test scale only).
 """
 
 from __future__ import annotations
@@ -31,6 +43,13 @@ def pick_blocks(D: int, vmem_budget: int = 12 * 2 ** 20):
         if (bt * D * 2 + D * bv) * 4 <= vmem_budget:
             return bt, bv
     return 8, 128
+
+
+def clamp_block_t(bt: int, T: int) -> int:
+    """Clamp the token block toward T (rounded up to the 8-sublane fp32
+    tile) so short sequences don't pad to a huge block — bt=256 with T=20
+    would otherwise pad 12x."""
+    return max(8, min(bt, ((T + 7) // 8) * 8))
 
 
 def _logits_tile(h, w, labels, iv, bv, V, softcap):
@@ -91,7 +110,7 @@ def xent_fwd(h, w, labels, *, softcap=0.0, block_t=None, block_v=None,
     bt0, bv0 = pick_blocks(D)
     bt = block_t or bt0
     bv = block_v or bv0
-    bt = min(bt, T) if T % min(bt, T) == 0 else bt
+    bt = clamp_block_t(bt, T)
     padT = (-T) % bt
     padV = (-V) % bv
     hp = jnp.pad(h, ((0, padT), (0, 0))) if padT else h
@@ -134,15 +153,10 @@ def xent_fwd(h, w, labels, *, softcap=0.0, block_t=None, block_v=None,
 # ---------------------------------------------------------------------------
 
 
-def _dh_kernel(h_ref, w_ref, lab_ref, lse_ref, g_ref, dh_ref, dh_sc, *,
-               V, softcap, nv):
-    iv = pl.program_id(1)
+def _bwd_dlog(h_ref, w_ref, lab_ref, lse_ref, g_ref, iv, *, V, softcap):
+    """Shared tile work: recompute the (bt, bv) logits tile ONCE and form
+    (h, w, dlog) — both gradient contractions read from it."""
     bv = w_ref.shape[1]
-
-    @pl.when(iv == 0)
-    def _init():
-        dh_sc[...] = jnp.zeros_like(dh_sc)
-
     h = h_ref[...].astype(jnp.float32)
     w = w_ref[...].astype(jnp.float32)
     s, dchain, onehot, valid = _logits_tile(h, w, lab_ref[...], iv, bv, V,
@@ -152,47 +166,91 @@ def _dh_kernel(h_ref, w_ref, lab_ref, lse_ref, g_ref, dh_ref, dh_sc, *,
     dlog = (p - onehot) * g_ref[...][:, None]
     if dchain is not None:
         dlog = dlog * dchain
-    dh_sc[...] += jax.lax.dot_general(dlog, w, (((1,), (1,)), ((), ())),
-                                      preferred_element_type=jnp.float32)
-
-    @pl.when(iv == nv - 1)
-    def _final():
-        dh_ref[...] = dh_sc[...].astype(dh_ref.dtype)
+    return h, w, dlog
 
 
-def _dw_kernel(h_ref, w_ref, lab_ref, lse_ref, g_ref, dw_ref, dw_sc, *,
-               V, softcap, nt):
-    iv, it = pl.program_id(0), pl.program_id(1)
-    bv = w_ref.shape[1]
+def _dh_part(dlog, w):
+    return jax.lax.dot_general(dlog, w, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
 
-    @pl.when(it == 0)
-    def _init():
-        dw_sc[...] = jnp.zeros_like(dw_sc)
 
-    h = h_ref[...].astype(jnp.float32)
-    w = w_ref[...].astype(jnp.float32)
-    s, dchain, onehot, valid = _logits_tile(h, w, lab_ref[...], iv, bv, V,
-                                            softcap)
-    p = jnp.exp(s - lse_ref[...][:, None])
-    p = jnp.where(valid, p, 0.0)
-    dlog = (p - onehot) * g_ref[...][:, None]
-    if dchain is not None:
-        dlog = dlog * dchain
+def _accum_dw(dw_sc, dw_ref, h, dlog, it, nt):
     dw_sc[...] += jax.lax.dot_general(h, dlog, (((0,), (0,)), ((), ())),
                                       preferred_element_type=jnp.float32)
 
     @pl.when(it == nt - 1)
-    def _final():
+    def _final_dw():
         dw_ref[...] = dw_sc[...].astype(dw_ref.dtype)
 
 
+def _bwd_kernel_partials(h_ref, w_ref, lab_ref, lse_ref, g_ref,
+                         dh_ref, dw_ref, dw_sc, *, V, softcap, nt):
+    """Interpret-mode variant: dH emitted as per-vocab-tile partials —
+    block (iv, it) is written exactly once (no revisit semantics needed)
+    and reduced over nv by the caller.  The (nv, Tp, D) staging array is
+    D/bv times the logits matrix, acceptable only at interpret/test
+    scale; the TPU variant below accumulates in-place instead."""
+    iv, it = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(it == 0)
+    def _init_dw():
+        dw_sc[...] = jnp.zeros_like(dw_sc)
+
+    h, w, dlog = _bwd_dlog(h_ref, w_ref, lab_ref, lse_ref, g_ref, iv,
+                           V=V, softcap=softcap)
+    dh_ref[0] = _dh_part(dlog, w)
+    _accum_dw(dw_sc, dw_ref, h, dlog, it, nt)
+
+
+def _bwd_kernel_alias(h_ref, w_ref, lab_ref, lse_ref, g_ref, dhin_ref,
+                      dh_ref, dw_ref, *scratch, V, softcap, nt, nv):
+    """TPU variant: dH accumulates through the HBM buffer aliased between
+    ``dhin`` and the dH output — block (it) is flushed every step (the
+    block index changes each step since it is innermost) and re-fetched
+    nt steps later on the next vocab revisit, so the running sum lives in
+    HBM at no extra footprint.  nt == 1 would make the revisits
+    consecutive (the input window is not re-fetched when its index does
+    not change), so that case accumulates in VMEM scratch over the whole
+    grid instead."""
+    iv, it = pl.program_id(0), pl.program_id(1)
+    dw_sc = scratch[-1]
+    dh_sc = scratch[0] if nt == 1 else None  # allocated only for nt == 1
+
+    @pl.when(it == 0)
+    def _init_dw():
+        dw_sc[...] = jnp.zeros_like(dw_sc)
+
+    if nt == 1:
+        @pl.when(iv == 0)
+        def _init_dh():
+            dh_sc[...] = jnp.zeros_like(dh_sc)
+
+    h, w, dlog = _bwd_dlog(h_ref, w_ref, lab_ref, lse_ref, g_ref, iv,
+                           V=V, softcap=softcap)
+    if nt == 1:
+        dh_sc[...] += _dh_part(dlog, w)
+
+        @pl.when(iv == nv - 1)
+        def _final_dh():
+            dh_ref[...] = dh_sc[...].astype(dh_ref.dtype)
+    else:
+        dh_ref[...] = dhin_ref[...] + _dh_part(dlog, w)
+    _accum_dw(dw_sc, dw_ref, h, dlog, it, nt)
+
+
 def xent_bwd(h, w, labels, lse, g, *, softcap=0.0, block_t=None,
-             block_v=None, interpret=None):
+             block_v=None, interpret=None, dh_strategy=None):
+    """Fused single-sweep backward.  ``dh_strategy``: "partials" (any
+    backend; stages (nv, Tp, D) in HBM — test scale only) or "alias"
+    (in-place HBM accumulation; relies on TPU window revisit semantics,
+    numerically wrong under the interpreter).  Default: partials when
+    interpreting, alias on TPU."""
     T, D = h.shape
     V = w.shape[1]
     bt0, bv0 = pick_blocks(D)
     bt = block_t or bt0
     bv = block_v or bv0
+    bt = clamp_block_t(bt, T)
     padT = (-T) % bt
     padV = (-V) % bv
     hp = jnp.pad(h, ((0, padT), (0, 0))) if padT else h
@@ -204,38 +262,55 @@ def xent_bwd(h, w, labels, lse, g, *, softcap=0.0, block_t=None,
     nt, nv = Tp // bt, Vp // bv
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if dh_strategy is None:
+        dh_strategy = "partials" if interpret else "alias"
 
-    dh = pl.pallas_call(
-        functools.partial(_dh_kernel, V=V, softcap=softcap, nv=nv),
-        grid=(nt, nv),
-        in_specs=[
-            pl.BlockSpec((bt, D), lambda it, iv: (it, 0)),
-            pl.BlockSpec((D, bv), lambda it, iv: (0, iv)),
-            pl.BlockSpec((bt,), lambda it, iv: (it,)),
-            pl.BlockSpec((bt,), lambda it, iv: (it,)),
-            pl.BlockSpec((bt,), lambda it, iv: (it,)),
-        ],
-        out_specs=pl.BlockSpec((bt, D), lambda it, iv: (it, 0)),
-        out_shape=jax.ShapeDtypeStruct((Tp, D), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((bt, D), jnp.float32)],
-        interpret=interpret,
-    )(hp, wp, labp, lsep, gp)
+    in_specs = [
+        pl.BlockSpec((bt, D), lambda iv, it: (it, 0)),
+        pl.BlockSpec((D, bv), lambda iv, it: (0, iv)),
+        pl.BlockSpec((bt,), lambda iv, it: (it,)),
+        pl.BlockSpec((bt,), lambda iv, it: (it,)),
+        pl.BlockSpec((bt,), lambda iv, it: (it,)),
+    ]
+    dw_spec = pl.BlockSpec((D, bv), lambda iv, it: (0, iv))
+    dw_shape = jax.ShapeDtypeStruct((D, Vp), jnp.float32)
+    dh_block = pl.BlockSpec((bt, D), lambda iv, it: (it, 0))
 
-    dw = pl.pallas_call(
-        functools.partial(_dw_kernel, V=V, softcap=softcap, nt=nt),
-        grid=(nv, nt),
-        in_specs=[
-            pl.BlockSpec((bt, D), lambda iv, it: (it, 0)),
-            pl.BlockSpec((D, bv), lambda iv, it: (0, iv)),
-            pl.BlockSpec((bt,), lambda iv, it: (it,)),
-            pl.BlockSpec((bt,), lambda iv, it: (it,)),
-            pl.BlockSpec((bt,), lambda iv, it: (it,)),
-        ],
-        out_specs=pl.BlockSpec((D, bv), lambda iv, it: (0, iv)),
-        out_shape=jax.ShapeDtypeStruct((D, Vp), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((D, bv), jnp.float32)],
-        interpret=interpret,
-    )(hp, wp, labp, lsep, gp)
+    if dh_strategy == "partials":
+        dh_parts, dw = pl.pallas_call(
+            functools.partial(_bwd_kernel_partials, V=V, softcap=softcap,
+                              nt=nt),
+            grid=(nv, nt),
+            in_specs=in_specs,
+            out_specs=[
+                pl.BlockSpec((1, bt, D), lambda iv, it: (iv, it, 0)),
+                dw_spec,
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((nv, Tp, D), jnp.float32),
+                dw_shape,
+            ],
+            scratch_shapes=[pltpu.VMEM((D, bv), jnp.float32)],
+            interpret=interpret,
+        )(hp, wp, labp, lsep, gp)
+        dh = jnp.sum(dh_parts, axis=0)
+    else:
+        dh, dw = pl.pallas_call(
+            functools.partial(_bwd_kernel_alias, V=V, softcap=softcap,
+                              nt=nt, nv=nv),
+            grid=(nv, nt),
+            in_specs=in_specs + [dh_block],
+            out_specs=[dh_block, dw_spec],
+            out_shape=[
+                jax.ShapeDtypeStruct((Tp, D), jnp.float32),
+                dw_shape,
+            ],
+            scratch_shapes=(
+                ([pltpu.VMEM((bt, D), jnp.float32)] if nt == 1 else [])
+                + [pltpu.VMEM((D, bv), jnp.float32)]),
+            input_output_aliases={5: 0},
+            interpret=interpret,
+        )(hp, wp, labp, lsep, gp, jnp.zeros((Tp, D), jnp.float32))
     return dh[:T], dw[:, :V]
 
 

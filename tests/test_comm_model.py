@@ -8,6 +8,7 @@ The paper's headline analytic claims, verified for every architecture:
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # offline containers: skip, do not error
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import registry

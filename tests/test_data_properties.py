@@ -2,6 +2,7 @@
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # offline containers: skip, do not error
 from hypothesis import given, settings, strategies as st
 
 from repro.data import (

@@ -9,6 +9,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess compile dominates suite time
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

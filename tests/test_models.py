@@ -12,6 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # full-arch sweeps; inner loop covers kernels/steps
+
 from repro.configs import registry
 from repro.configs.base import SHAPES
 from repro.models import build_model

@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # offline containers: skip, do not error
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import FedConfig, OptimConfig

@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # full-arch sweeps; inner loop covers kernels/steps
+
 from repro.configs import registry
 from repro.configs.base import SplitConfig
 from repro.core import auxiliary, splitting

@@ -15,6 +15,8 @@ from repro.core.uit import AmpereTrainer
 from repro.data import ActivationStore, federate, make_dataset_for_model
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow  # end-to-end phases dominate suite time
+
 
 def _run_cfg(**kw):
     fed_kw = dict(num_clients=6, clients_per_round=3, local_steps=2,
