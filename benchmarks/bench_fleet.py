@@ -1,0 +1,151 @@
+"""Fleet-subsystem perf gate: scheduler hot loop + vmapped cohort rounds.
+
+Writes ``BENCH_fleet.json`` at the repo root (same contract as
+``BENCH_step.json``: ``times_s`` entries are gated by
+``scripts/check_bench_regression.py``).
+
+Measured:
+
+* ``sched_512dev_100rounds`` — wall clock for the discrete-event scheduler
+  to simulate 100 rounds over a churning 512-device population (the
+  coordinator hot loop: heap ops, cohort selection, heartbeat/churn
+  events); ``events_per_sec`` lands in the payload for trend reading.
+* ``fleet_round_vmap_k16`` / ``fleet_round_loop_k16`` (and _k64) — one
+  federated cohort round through the vmapped pool-fed step vs. the naive
+  Python per-client loop (per-client batch gather + jitted single-client
+  round + host FedAvg).  ``speedup_k16`` / ``speedup_k64`` = loop / vmap;
+  ``loss_absdiff_k16`` documents the fp-level equivalence of the two paths.
+
+  Measured on ``vit-s`` (a paper vision arch): vmapping per-client params
+  turns its matmuls into efficient batched matmuls.  Caveat worth knowing:
+  per-client *conv* weights (mobilenet/vgg) lower to grouped convolutions,
+  which XLA *CPU* executes so poorly that the loop wins there — on
+  TPU/GPU the grouped form is fine.  See fleet/README.md.
+
+  PYTHONPATH=src python -m benchmarks.run --only bench_fleet
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import save, setup_fed_run, table
+
+BENCH_PATH = "BENCH_fleet.json"
+
+
+def _best(fn, reps: int) -> float:
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _bench_scheduler(reps: int):
+    from repro.fleet import (FleetConfig, FleetScheduler, sample_population)
+
+    cfg = FleetConfig(n_devices=512, seed=0, dropout_hazard=0.03,
+                      deadline_factor=2.5, target_round_time_factor=1.5,
+                      min_cohort=8, max_cohort=64, init_cohort=32)
+    pop = sample_population(cfg)
+    lat = lambda p: 1.0 / p.speed_factor       # noqa: E731 — time-only bench
+    sched = FleetScheduler(pop, lat, cfg)
+    n_rounds = 100
+    trace = sched.simulate(n_rounds)           # warm-up + event count
+    n_events = len(trace.events)
+    t = _best(lambda: sched.simulate(n_rounds), reps)
+    return ({"sched_512dev_100rounds": t},
+            {"sched_devices": 512, "sched_rounds": n_rounds,
+             "sched_events": n_events,
+             "events_per_sec": int(n_events / t)})
+
+
+def _bench_rounds(reps: int):
+    from repro.fleet import FleetEngine
+
+    K = 64
+    arch = "vit-s"
+    model, run_cfg, clients, _ = setup_fed_run(
+        arch, clients=K, cohort=K, local_steps=2, batch=8,
+        n_train=1024, n_eval=64)
+    engine = FleetEngine(model, run_cfg, clients, seed=0, donate=False)
+    tr_key = jax.random.PRNGKey(0)
+    params = model.init(tr_key)
+    from repro.core import auxiliary, splitting
+    dev, _ = splitting.split_params(model, params, run_cfg.split.split_point)
+    aux = auxiliary.init_aux(model, jax.random.fold_in(tr_key, 7),
+                             run_cfg.split)
+    state = {"device": dev, "aux": aux}
+
+    times, extras = {}, {}
+    for k in (16, 64):
+        ids = list(range(k))
+        w = [1.0 / k] * k
+
+        def vmap_round():
+            s, m = engine.run_round(state, 0, ids, w, 0.1)
+            jax.block_until_ready(s)
+            return m
+
+        def loop_round():
+            s, m = engine.sequential_round(state, 0, ids, w, 0.1)
+            jax.block_until_ready(s)
+            return m
+
+        mv = vmap_round()                       # compile
+        ml = loop_round()
+        times[f"fleet_round_vmap_k{k}"] = _best(vmap_round, reps)
+        times[f"fleet_round_loop_k{k}"] = _best(loop_round, reps)
+        extras[f"speedup_k{k}"] = round(
+            times[f"fleet_round_loop_k{k}"] / times[f"fleet_round_vmap_k{k}"],
+            3)
+        if k == 16:
+            extras["loss_absdiff_k16"] = float(
+                abs(float(mv["loss"]) - float(ml["loss"])))
+    cfg = {"arch": arch, "local_steps": run_cfg.fed.local_steps,
+           "device_batch": run_cfg.fed.device_batch_size,
+           "pool_samples": int(sum(len(c) for c in clients)),
+           "backend": jax.default_backend()}
+    return times, dict(cfg, **extras)
+
+
+def run(quick: bool = True):
+    reps = 3 if quick else 10
+    times, config = {}, {}
+    t, c = _bench_scheduler(reps)
+    times.update(t)
+    config.update(c)
+    t, c = _bench_rounds(reps)
+    times.update(t)
+    config.update(c)
+
+    payload = {"config": config,
+               "times_s": {k: round(v, 6) for k, v in times.items()},
+               "speedup_k16": config.pop("speedup_k16"),
+               "speedup_k64": config.pop("speedup_k64"),
+               "events_per_sec": config.pop("events_per_sec"),
+               "loss_absdiff_k16": config.pop("loss_absdiff_k16")}
+    with open(BENCH_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    save("bench_fleet", payload)
+
+    rows = [{"metric": k, "value": v} for k, v in times.items()]
+    rows += [{"metric": "speedup k16 (loop/vmap)",
+              "value": payload["speedup_k16"]},
+             {"metric": "speedup k64 (loop/vmap)",
+              "value": payload["speedup_k64"]},
+             {"metric": "scheduler events/sec",
+              "value": payload["events_per_sec"]}]
+    table(rows, ["metric", "value"], "bench_fleet — fleet-path wall clock")
+    return payload
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -127,18 +127,23 @@ def _bench_server_and_round(reps: int):
         np.asarray(losses)
         jit_state[0] = s2
 
-    # one federated device round
+    # one federated device round (the jitted step donates its input
+    # state, so the state chains across reps like real training)
     fed = run_cfg.fed
     ids = list(range(fed.clients_per_round))
     batches = round_batches(clients, ids, fed.local_steps,
                             fed.device_batch_size)
     batches = {k: jnp.asarray(v) for k, v in batches.items()}
     w = jnp.ones((fed.clients_per_round,), jnp.float32)
-    jax.block_until_ready(tr._device_round(dev_state, batches, w, 0.1))
+    round_state = [jax.tree.map(lambda a: jnp.array(a), dev_state)]
+    s2, _ = tr._device_round(round_state[0], batches, w, 0.1)
+    jax.block_until_ready(s2)
+    round_state[0] = s2
 
     def one_round():
-        s2, m = tr._device_round(dev_state, batches, w, 0.1)
+        s2, m = tr._device_round(round_state[0], batches, w, 0.1)
         jax.block_until_ready(s2)
+        round_state[0] = s2
 
     times = {
         "server_step": _best(one_step, reps),

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Inner-loop CI: fast test tier, then the perf-regression gate.
+#
+#   scripts/ci.sh            # pytest -m "not slow" + bench gate
+#   CI_SLOW=1 scripts/ci.sh  # also run the slow end-to-end tier
+#
+# The bench gate re-runs bench_step / bench_fleet and compares against the
+# committed BENCH_step.json / BENCH_fleet.json (scripts/
+# check_bench_regression.py; >25% step-time regression fails — CPU boxes
+# are noisy, the precise trend lives in the committed snapshots).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -q -m "not slow"
+if [[ "${CI_SLOW:-0}" == "1" ]]; then
+    python -m pytest -q -m slow
+fi
+python -m benchmarks.run --gate

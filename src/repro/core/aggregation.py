@@ -55,6 +55,20 @@ def tree_add(a, b, scale=1.0):
                       + scale * y.astype(jnp.float32)).astype(x.dtype), a, b)
 
 
+def pad_cohort(client_ids, weights, pad_to: int):
+    """Pad a partial cohort to ``pad_to`` slots by repeating the first
+    survivor with weight 0 (zero-weight clients don't contribute to the
+    weighted FedAvg), so jitted round steps see a fixed K."""
+    ids = [int(c) for c in client_ids]
+    w = [float(x) for x in weights]
+    if not ids:
+        raise ValueError("cannot pad an empty cohort")
+    while len(ids) < pad_to:
+        ids.append(ids[0])
+        w.append(0.0)
+    return ids, w
+
+
 def sample_cohort(rng: np.random.Generator, fed_cfg, round_idx: int = 0):
     """Sample the participating cohort for one round and apply the
     fault-tolerance policy.

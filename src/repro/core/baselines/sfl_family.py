@@ -200,7 +200,25 @@ class SFLTrainer:
             controls = (zero, c_k_all)
         return state, controls
 
-    def run_rounds(self, max_rounds: int, key=None):
+    def run_rounds(self, max_rounds: int, key=None, cohort_plan=None):
+        """``cohort_plan``: optional list of ``sample_cohort``-shaped dicts
+        (one per round) that overrides the i.i.d. cohort sampling, so a
+        baseline can replay the exact churn/dropout schedule an Ampere
+        fleet run saw.  When a plan entry carries a ``round_time`` it is
+        trusted for the simulated wall clock; otherwise (and always for
+        comm bytes) the analytic model prices the round.
+
+        A :class:`repro.fleet.RoundPlan`'s ``as_cohort()`` deliberately
+        omits its (scheduling-algorithm-priced) round_time, so the plain
+        ``[p.as_cohort() for p in trace.rounds]`` replay falls through to
+        this trainer's analytic pricing; to use the fleet profiles
+        instead, re-price per round as ``examples/fleet_sim.py`` does::
+
+            times = trace_round_times(trace, population,
+                                      make_latency_fn(..., algo="splitfed"))
+            plan = [dict(p.as_cohort(), round_time=t)
+                    for p, t in zip(trace.rounds, times)]
+        """
         fed = self.run.fed
         key = key if key is not None else jax.random.PRNGKey(self.run.seed)
         state, controls = self._init_state(key)
@@ -209,14 +227,21 @@ class SFLTrainer:
         eval_step = evaluate.make_eval_step(merged_model)
         K = fed.clients_per_round
         tm = comm_model.TimeModel()
+        if cohort_plan is not None:
+            max_rounds = min(max_rounds, len(cohort_plan))
 
         for rnd in range(max_rounds):
-            cohort = aggregation.sample_cohort(self.rng, fed, rnd)
-            ids = list(cohort["clients"])
-            w = list(cohort["weights"])
-            while len(ids) < K:
-                ids.append(ids[0])
-                w.append(0.0)
+            if cohort_plan is not None:
+                cohort = cohort_plan[rnd]
+            else:
+                cohort = aggregation.sample_cohort(self.rng, fed, rnd)
+            # pad to cohort_size (elastic K from a trace takes few distinct
+            # values, so the jitted round recompiles rarely)
+            pad_k = (K if cohort_plan is None
+                     else int(cohort.get("cohort_size",
+                                         len(cohort["clients"]))))
+            ids, w = aggregation.pad_cohort(cohort["clients"],
+                                            cohort["weights"], pad_k)
             batches = round_batches(self.clients, ids, fed.local_steps,
                                     fed.device_batch_size)
             batches = {k: jnp.asarray(v) for k, v in batches.items()}
@@ -252,10 +277,14 @@ class SFLTrainer:
             self.history["comm_bytes"] += len(cohort["clients"]) * (
                 act_bytes + model_bytes)
             n_round_samples = b * iters
-            t = comm_model.epoch_time(
-                "pipar" if self.variant == "pipar" else "splitfed",
-                self.model, self.run.split, tm, n_samples=n_round_samples,
-                batch_size=b, seq_len=self.seq_len, sizes=self.sizes)
+            if cohort_plan is not None and \
+                    cohort.get("round_time") is not None:
+                t = float(cohort["round_time"])
+            else:
+                t = comm_model.epoch_time(
+                    "pipar" if self.variant == "pipar" else "splitfed",
+                    self.model, self.run.split, tm, n_samples=n_round_samples,
+                    batch_size=b, seq_len=self.seq_len, sizes=self.sizes)
             self.history["sim_time"] += t
             rec = {"round": rnd, "loss": float(metrics["loss"]),
                    "val_loss": val["loss"], "val_acc": val["acc"]}

@@ -144,14 +144,15 @@ def comm_rounds(algo: str, *, epochs: int, iters_per_epoch: int,
 
 
 def device_flops_per_sample(model, split_cfg, algo: str, *,
-                            seq_len: int = 0) -> float:
+                            seq_len: int = 0,
+                            sizes: Optional[SplitSizes] = None) -> float:
     """Training FLOPs executed ON THE DEVICE per sample (fwd+bwd ~ 3x fwd).
 
     LM: 6 * params_on_device per token.  Vision: 6 * params_on_device as a
     dense proxy (conv reuse makes this a lower bound; relative comparisons
     across algorithms — which is what Fig. 9 reports — are unaffected).
     """
-    sizes = split_sizes(model, split_cfg, seq_len=max(seq_len, 1))
+    sizes = sizes or split_sizes(model, split_cfg, seq_len=max(seq_len, 1))
     dev_params = sizes.device / 4            # fp32 bytes -> param count
     aux_params = sizes.aux / 4
     tokens = seq_len if model.kind == "lm" else 1
@@ -179,7 +180,8 @@ def epoch_time(algo: str, model, split_cfg, tm: TimeModel, *,
                sizes: Optional[SplitSizes] = None) -> float:
     """Simulated wall-clock seconds for ONE epoch on one device."""
     sizes = sizes or split_sizes(model, split_cfg, seq_len=max(seq_len, 1))
-    fl_dev = device_flops_per_sample(model, split_cfg, algo, seq_len=seq_len)
+    fl_dev = device_flops_per_sample(model, split_cfg, algo, seq_len=seq_len,
+                                     sizes=sizes)
     t_dev = fl_dev * n_samples / (tm.device_gflops * 1e9 * tm.speed_factor)
     srv_params = sizes.server / 4
     tokens = seq_len if model.kind == "lm" else 1

@@ -14,7 +14,11 @@ that is the point of UIT):
   Clients are vmapped over a leading axis that the launcher shards across
   the DP mesh axes, so per-client local SGD is embarrassingly parallel and
   the aggregation is one weighted psum — communication-wise this is
-  *exactly* local SGD with period H.
+  *exactly* local SGD with period H.  :func:`make_device_round_pool_step`
+  is the device-resident variant (batches gathered on device from a
+  (K, H, b) index matrix into a flat sample pool uploaded once; state
+  donated); :func:`make_client_round_fn` exposes the single-client round
+  both variants vmap over.
 
 * :func:`make_server_train_step` — one step of the centralized server phase
   over consolidated activations (Eq. 11+12): a standard DP x TP training
@@ -53,7 +57,15 @@ def _device_batch_slice(batch, idx):
 # ---------------------------------------------------------------------------
 
 
-def make_device_round_step(model, run_cfg, *, impl="xla", xent_impl="xla"):
+def make_client_round_fn(model, run_cfg, *, impl="xla", xent_impl="xla"):
+    """H local SGD iterations on ONE client (Eq. 9).
+
+    ``client_round(device_params, aux_params, client_batches, lr)`` with
+    batch leaves shaped (H, b, ...).  This is the unit the vectorized round
+    steps vmap over a leading client axis; exported on its own so the
+    fleet engine's sequential reference path and the equivalence tests run
+    the *same* jitted math as the vmapped cohort round.
+    """
     split_cfg = run_cfg.split
     p = split_cfg.split_point
     H = run_cfg.fed.local_steps
@@ -72,7 +84,6 @@ def make_device_round_step(model, run_cfg, *, impl="xla", xent_impl="xla"):
         return loss
 
     def client_round(device_params, aux_params, client_batches, lr):
-        """H local SGD iterations on one client (Eq. 9)."""
         def one_step(par, batch):
             loss, grads = jax.value_and_grad(local_loss)(par, batch)
             new_par = jax.tree.map(
@@ -87,19 +98,60 @@ def make_device_round_step(model, run_cfg, *, impl="xla", xent_impl="xla"):
             unroll=scan_unroll(H))
         return device_params, aux_params, jnp.mean(losses_h)
 
+    return client_round
+
+
+def _round_from_batches(client_round, state, batches, weights, lr):
+    """vmap ``client_round`` over the leading client axis + weighted FedAvg."""
+    dev_k, aux_k, loss_k = jax.vmap(
+        client_round, in_axes=(None, None, 0, None))(
+            state["device"], state["aux"], batches, lr)
+    new_device = aggregation.fedavg_stacked(dev_k, weights)
+    new_aux = aggregation.fedavg_stacked(aux_k, weights)
+    w = aggregation.normalize_weights(weights)
+    metrics = {"loss": jnp.sum(loss_k * w)}
+    return {"device": new_device, "aux": new_aux}, metrics
+
+
+def make_device_round_step(model, run_cfg, *, impl="xla", xent_impl="xla"):
+    client_round = make_client_round_fn(model, run_cfg, impl=impl,
+                                        xent_impl=xent_impl)
+
     def device_round_step(state, batches, weights, lr):
         """state: {"device":..., "aux":...}; batches leaves (K, H, b, ...);
-        weights: (K,) aggregation weights (zeros = dropped client)."""
-        dev_k, aux_k, loss_k = jax.vmap(
-            client_round, in_axes=(None, None, 0, None))(
-                state["device"], state["aux"], batches, lr)
-        new_device = aggregation.fedavg_stacked(dev_k, weights)
-        new_aux = aggregation.fedavg_stacked(aux_k, weights)
-        w = aggregation.normalize_weights(weights)
-        metrics = {"loss": jnp.sum(loss_k * w)}
-        return {"device": new_device, "aux": new_aux}, metrics
+        weights: (K,) aggregation weights (zeros = dropped client).
+
+        Intended jit: ``jax.jit(device_round_step, donate_argnums=(0,))``
+        — the round state threads through every round, so donating it
+        keeps one resident copy instead of two live copies per round.
+        """
+        return _round_from_batches(client_round, state, batches, weights, lr)
 
     return device_round_step
+
+
+def make_device_round_pool_step(model, run_cfg, *, impl="xla",
+                                xent_impl="xla"):
+    """Pool-fed federated round: the cohort's batches are *gathered on
+    device* from a resident flat sample pool instead of being re-uploaded
+    as a (K, H, b, ...) stack every round.
+
+    ``pool_round_step(state, pool, idx, weights, lr)`` where ``pool``
+    leaves are (N_total, ...) device-resident sample arrays (uploaded once
+    for the whole run), and ``idx`` is a (K, H, b) int32 matrix of global
+    sample indices — the only per-round host->device transfer besides the
+    scalar lr and (K,) weights.  Intended jit:
+    ``jax.jit(pool_round_step, donate_argnums=(0,))`` (donate the state,
+    NEVER the pool — it must survive across rounds).
+    """
+    client_round = make_client_round_fn(model, run_cfg, impl=impl,
+                                        xent_impl=xent_impl)
+
+    def pool_round_step(state, pool, idx, weights, lr):
+        batches = jax.tree.map(lambda a: jnp.take(a, idx, axis=0), pool)
+        return _round_from_batches(client_round, state, batches, weights, lr)
+
+    return pool_round_step
 
 
 # ---------------------------------------------------------------------------

@@ -20,6 +20,15 @@ restarted run resumes from (phase, round/epoch) — exercised by the tests.
 This driver runs at any scale; CPU experiments use smoke configs, the pod
 launcher reuses the same jitted steps (core/steps.py) under the production
 mesh.
+
+Two device-phase drivers share the jitted round math:
+
+* :meth:`AmpereTrainer.run_all` — the paper's fixed synchronous cohort
+  (``sample_cohort`` per round, device-resident pool feeding when it fits
+  the budget).
+* :meth:`AmpereTrainer.run_fleet` — rounds scheduled by the event-driven
+  fleet simulator (:mod:`repro.fleet`): churning N >> K populations,
+  elastic cohort sizing, straggler deadlines, heartbeat liveness.
 """
 
 from __future__ import annotations
@@ -34,7 +43,8 @@ import numpy as np
 
 from repro.core import aggregation, auxiliary, comm_model, evaluate, splitting, steps
 from repro.data.activation_store import ActivationStore
-from repro.data.pipeline import ClientData, DevicePrefetcher, round_batches
+from repro.data.pipeline import (ClientData, DevicePrefetcher, client_pool,
+                                 round_batches)
 from repro.models import build_model
 from repro.optim import make_schedule
 from repro.runtime.checkpoint import Checkpointer
@@ -65,8 +75,15 @@ class AmpereTrainer:
         self.history = {"device": [], "server": [], "comm_bytes": 0,
                         "sim_time": 0.0}
 
-        # step functions
-        self._device_round = jax.jit(steps.make_device_round_step(model, run_cfg))
+        # step functions (round state is donated: callers rebind per round)
+        self._device_round = jax.jit(steps.make_device_round_step(model, run_cfg),
+                                     donate_argnums=(0,))
+        # pool-fed federated round: the whole population's samples live on
+        # device (uploaded once), the round state is donated, and each
+        # round ships only a (K, H, b) int32 index matrix
+        self._device_round_pool = jax.jit(
+            steps.make_device_round_pool_step(model, run_cfg),
+            donate_argnums=(0,))
         self._server_step = jax.jit(steps.make_server_train_step(model, run_cfg))
         # whole-epoch server phase: device-resident pool, donated state,
         # one host sync per epoch
@@ -107,20 +124,43 @@ class AmpereTrainer:
                 dev_state = tree
                 start_round = meta["round"] + 1
 
+        # device-resident feeding: upload every client's samples ONCE and
+        # gather each round's (K, H, b, ...) batches on device from an
+        # int32 index matrix; the round state is donated.  Pools beyond
+        # the budget fall back to per-round host batch uploads (size is
+        # checked before any concatenation so the fallback case never
+        # duplicates the dataset on host).
+        total_bytes = sum(a.nbytes for c in self.clients
+                          for a in c.dataset.arrays.values())
+        resident = total_bytes <= self.run.device_pool_budget_mb * 2 ** 20
+        if resident:
+            pool_np, offsets = client_pool(self.clients)
+            pool_dev = {k: jnp.asarray(v) for k, v in pool_np.items()}
+            del pool_np
+        # both round steps donate their input state; copy once so the
+        # caller's buffers survive the first donation
+        dev_state = jax.tree.map(lambda a: jnp.array(a), dev_state)
+
         rounds = max_rounds if max_rounds is not None else fed.device_epochs
         for rnd in range(start_round, rounds):
             cohort = aggregation.sample_cohort(self.rng, fed, rnd)
-            ids = list(cohort["clients"])
-            w = list(cohort["weights"])
-            while len(ids) < K:           # pad dropped slots, weight 0
-                ids.append(ids[0])
-                w.append(0.0)
-            batches = round_batches(self.clients, ids, fed.local_steps,
-                                    fed.device_batch_size)
-            batches = {k: jnp.asarray(v) for k, v in batches.items()}
+            ids, w = aggregation.pad_cohort(cohort["clients"],
+                                            cohort["weights"], K)
             lr = self._sched(rnd)
-            dev_state, metrics = self._device_round(
-                dev_state, batches, jnp.asarray(w, jnp.float32), lr)
+            if resident:
+                idx = np.stack([
+                    offsets[int(c)] + self.clients[int(c)].batch_indices(
+                        fed.device_batch_size, fed.local_steps)
+                    for c in ids]).astype(np.int32)
+                dev_state, metrics = self._device_round_pool(
+                    dev_state, pool_dev, jnp.asarray(idx),
+                    jnp.asarray(w, jnp.float32), lr)
+            else:
+                batches = round_batches(self.clients, ids, fed.local_steps,
+                                        fed.device_batch_size)
+                batches = {k: jnp.asarray(v) for k, v in batches.items()}
+                dev_state, metrics = self._device_round(
+                    dev_state, batches, jnp.asarray(w, jnp.float32), lr)
             val = aux_eval(dev_state)
             self.history["device"].append(
                 {"round": rnd, "loss": float(metrics["loss"]), **val})
@@ -140,6 +180,95 @@ class AmpereTrainer:
         if self.ckpt is not None:
             self.ckpt.wait()
         return dev_state
+
+    # ------------------------------------------------------------------
+    # Phase 3 (fleet mode): trace-driven federated device training
+    # ------------------------------------------------------------------
+    def run_fleet_device_phase(self, dev_state, trace,
+                               max_rounds: Optional[int] = None):
+        """Device phase driven by a :class:`repro.fleet.FleetTrace`.
+
+        Cohorts, dropouts and wall-clock come from the event-driven
+        scheduler instead of ``sample_cohort``; training runs through the
+        vmapped pool-fed :class:`repro.fleet.FleetEngine` (donated state,
+        stateless per-round batch indices), so a run killed mid-phase
+        resumes from RoundJournal + Checkpointer onto byte-identical
+        batches.  Device ids in the trace index ``self.clients``.
+        """
+        from repro.fleet.engine import FleetEngine
+
+        fed = self.run.fed
+        engine = FleetEngine(self.model, self.run, self.clients,
+                             seed=fed.seed)
+        stopper = evaluate.EarlyStopper(self.patience, mode="min")
+        aux_eval = self._make_aux_eval()
+        start_round = 0
+        if self.ckpt is not None:
+            tree, meta = self.ckpt.restore()
+            if tree is not None and meta.get("phase") == "fleet":
+                dev_state = tree
+                start_round = meta["round"] + 1
+        dev_state = jax.tree.map(lambda a: jnp.array(a), dev_state)
+
+        plans = trace.rounds if max_rounds is None else \
+            trace.rounds[:max_rounds]
+        for plan in plans:
+            rnd = plan.round_idx
+            if rnd < start_round:
+                continue
+            lr = self._sched(rnd)
+            dev_state, metrics = engine.run_round(
+                dev_state, rnd, plan.clients, plan.weights, lr,
+                pad_to=plan.cohort_size)
+            val = aux_eval(dev_state)
+            self.history["device"].append(
+                {"round": rnd, "loss": float(metrics["loss"]),
+                 "t_end": plan.t_end, "cohort": plan.cohort_size,
+                 "survivors": len(plan.clients), **val})
+            self.history["sim_time"] += plan.round_time
+            self.history["comm_bytes"] += 2 * len(plan.clients) * (
+                self.sizes.device + self.sizes.aux)
+            self.log.log(phase="fleet", round=rnd,
+                         loss=float(metrics["loss"]), **val,
+                         survivors=len(plan.clients),
+                         dropped=len(plan.dropped),
+                         cohort=plan.cohort_size,
+                         sim_t=round(plan.t_end, 6))
+            if self.ckpt is not None and self.run.checkpoint_every and \
+                    rnd % self.run.checkpoint_every == 0:
+                self.ckpt.save_async(rnd, dev_state,
+                                     {"phase": "fleet", "round": rnd})
+                self.journal.append({"phase": "fleet", "round": rnd})
+            if stopper.update(val["val_loss"]):
+                break
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return dev_state
+
+    def run_fleet(self, trace, key=None, max_rounds=None,
+                  max_server_epochs=None,
+                  store: Optional[ActivationStore] = None):
+        """Full Ampere pipeline with the device phase driven by a fleet
+        trace (see :mod:`repro.fleet`): trace-scheduled federated rounds,
+        then the usual one-shot consolidation + server phase."""
+        key = key if key is not None else jax.random.PRNGKey(self.run.seed)
+        dev, srv, aux = self._init_states(key)
+        dev_state = {"device": dev, "aux": aux}
+        dev_state = self.run_fleet_device_phase(dev_state, trace, max_rounds)
+        store = store or ActivationStore(
+            directory=(os.path.join(self.workdir, "acts")
+                       if self.workdir else None),
+            consolidated=self.consolidate,
+            quantize_int8=self.run.split.quantize_activations,
+            seed=self.run.seed)
+        self.generate_activations(dev_state, store, upload="parallel")
+        srv_state = self.run_server_phase(dev_state, srv, store,
+                                          max_server_epochs)
+        merged = splitting.merge_params(self.model, dev_state["device"],
+                                        srv_state["server"],
+                                        self.run.split.split_point)
+        return {"device_state": dev_state, "server_state": srv_state,
+                "merged_params": merged, "history": self.history}
 
     def _make_aux_eval(self):
         model, run = self.model, self.run
@@ -173,7 +302,16 @@ class AmpereTrainer:
     # Phase 4: one-shot activation generation + upload
     # ------------------------------------------------------------------
     def generate_activations(self, dev_state, store: ActivationStore,
-                             batch_size: int = 64):
+                             batch_size: int = 64, upload: str = "serial"):
+        """``upload`` prices the one-shot transfer's simulated wall clock:
+        ``"serial"`` — all bytes through one shared server link (legacy
+        accounting); ``"parallel"`` — each device pushes its own shard on
+        its own link concurrently (fleet semantics), so the transfer takes
+        as long as the largest single-client shard.  Both price the
+        *actual* stored bytes (int8 quantization included); parallel mode
+        assumes the paper-testbed per-device link (BANDWIDTH_BPS) — a
+        conservative per-profile treatment would use the slowest
+        participating link."""
         model, run = self.model, self.run
         p = run.split.split_point
 
@@ -202,8 +340,16 @@ class AmpereTrainer:
             store.submit(cid, shard)
         store.finish()
         self.history["comm_bytes"] += store.bytes_received
-        self.history["sim_time"] += store.bytes_received / comm_model.BANDWIDTH_BPS
-        self.log.log(phase="transfer", bytes=store.bytes_received)
+        if upload == "parallel":
+            n = max(store.num_samples(), 1)
+            bytes_per_sample = store.bytes_received / n  # actual (incl int8)
+            biggest = max(len(c.dataset) for c in self.clients)
+            t_up = biggest * bytes_per_sample / comm_model.BANDWIDTH_BPS
+        else:
+            t_up = store.bytes_received / comm_model.BANDWIDTH_BPS
+        self.history["sim_time"] += t_up
+        self.log.log(phase="transfer", bytes=store.bytes_received,
+                     upload=upload)
         return store
 
     # ------------------------------------------------------------------

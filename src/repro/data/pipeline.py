@@ -5,6 +5,9 @@
 * :func:`federate` — dataset -> Dirichlet-partitioned list of ClientData.
 * :func:`round_batches` — stack (K, H, b, ...) arrays for
   ``device_round_step`` from a sampled cohort.
+* :func:`client_pool` — flatten all clients into one (N_total, ...) pool
+  + per-client offsets; uploaded once, the pool-fed round step gathers
+  cohort batches on device from (K, H, b) int32 indices.
 * :class:`Prefetcher` — background-thread prefetch of host batches so the
   accelerator step overlaps with batch assembly (the server phase's
   Algorithm-1 subprocess 2).
@@ -38,7 +41,8 @@ class ClientData:
     def __len__(self):
         return len(self.dataset)
 
-    def next_batch(self, batch_size: int) -> dict:
+    def next_indices(self, batch_size: int) -> np.ndarray:
+        """Dataset-local sample indices of the next shuffled batch."""
         n = len(self.dataset)
         take = []
         need = batch_size
@@ -50,8 +54,17 @@ class ClientData:
             take.append(self._order[self._cursor:self._cursor + got])
             self._cursor += got
             need -= got
-        idx = np.concatenate(take)
+        return np.concatenate(take)
+
+    def next_batch(self, batch_size: int) -> dict:
+        idx = self.next_indices(batch_size)
         return {k: v[idx] for k, v in self.dataset.arrays.items()}
+
+    def batch_indices(self, batch_size: int, steps: int) -> np.ndarray:
+        """(steps, b) dataset-local indices — the index-only twin of
+        :meth:`batches`, for feeding a device-resident sample pool."""
+        return np.stack([self.next_indices(batch_size)
+                         for _ in range(steps)])
 
     def batches(self, batch_size: int, steps: int) -> dict:
         """(steps, b, ...) stacked batches."""
@@ -64,6 +77,28 @@ def federate(dataset: Dataset, num_clients: int, alpha: float,
     rng = np.random.default_rng(seed)
     parts = dirichlet_partition(dataset.labels, num_clients, alpha, rng)
     return [ClientData(dataset.subset(ix), k, seed) for k, ix in enumerate(parts)]
+
+
+def client_pool(clients: List[ClientData]):
+    """Concatenate every client's samples into one flat pool.
+
+    Returns ``(pool, offsets)``: ``pool`` is a dict of (N_total, ...)
+    arrays, ``offsets[k]`` is client k's first row — a client's local
+    index ``i`` lives at global row ``offsets[k] + i``.  Uploaded once,
+    this is the device-resident sample store that
+    :func:`repro.core.steps.make_device_round_pool_step` gathers cohort
+    batches from (the per-round transfer drops from the full (K, H, b,
+    ...) stack to a (K, H, b) int32 index matrix).
+    """
+    keys = list(clients[0].dataset.arrays)
+    pool = {k: np.concatenate([c.dataset.arrays[k] for c in clients])
+            for k in keys}
+    offsets = np.cumsum([0] + [len(c) for c in clients])[:-1]
+    return pool, offsets
+
+
+def pool_nbytes(pool: dict) -> int:
+    return int(sum(a.nbytes for a in pool.values()))
 
 
 def round_batches(clients: List[ClientData], cohort_ids, local_steps: int,

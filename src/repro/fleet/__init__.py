@@ -1,0 +1,23 @@
+"""Event-driven heterogeneous fleet simulation.
+
+``profiles``  — device classes / population sampling (latencies priced by
+                :mod:`repro.core.comm_model`).
+``scheduler`` — deterministic heap-based discrete-event simulator that
+                drives ElasticCohort, Heartbeats and RoundJournal.
+``engine``    — vmapped multi-client round over a donated, device-resident
+                sample pool.
+
+See ``src/repro/fleet/README.md`` for the event model and profile schema.
+"""
+
+from repro.fleet.engine import FleetEngine
+from repro.fleet.profiles import (DEVICE_CLASSES, DeviceClass, DeviceProfile,
+                                  FleetConfig, make_latency_fn,
+                                  sample_population, trace_round_times)
+from repro.fleet.scheduler import FleetScheduler, FleetTrace, RoundPlan
+
+__all__ = [
+    "DEVICE_CLASSES", "DeviceClass", "DeviceProfile", "FleetConfig",
+    "FleetEngine", "FleetScheduler", "FleetTrace", "RoundPlan",
+    "make_latency_fn", "sample_population", "trace_round_times",
+]

@@ -1,0 +1,137 @@
+"""Vectorized multi-client round engine.
+
+One jitted call trains an entire heterogeneous cohort: the engine uploads
+the whole population's samples ONCE as a flat device-resident pool
+(:func:`repro.data.pipeline.client_pool`), then every round runs
+:func:`repro.core.steps.make_device_round_pool_step` — a
+``jax.vmap``-over-clients local-SGD round with the cohort's batches
+gathered on device from a (K, H, b) int32 index matrix, the round state
+donated, and zero-weight padding slots for partial participation.
+
+Batch indices are *stateless*: client c's round-r batch comes from
+``default_rng((seed, r, c))``, so a coordinator resumed from
+RoundJournal + Checkpointer replays byte-identical rounds, and the
+sequential reference path (:meth:`FleetEngine.sequential_round`) sees the
+same data as the vmapped path — the equivalence the tests and
+``benchmarks/bench_fleet.py`` check.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, steps
+from repro.data.pipeline import ClientData, client_pool
+
+
+class FleetEngine:
+    """Device-resident cohort trainer over a fixed client population."""
+
+    def __init__(self, model, run_cfg, clients: List[ClientData], *,
+                 seed: Optional[int] = None, donate: bool = True):
+        self.model = model
+        self.run = run_cfg
+        self.clients = clients
+        self.seed = run_cfg.fed.seed if seed is None else seed
+        self.client_sizes = np.asarray([len(c) for c in clients])
+        self.offsets = np.cumsum([0] + [len(c) for c in clients])[:-1]
+        self.pool_bytes = sum(a.nbytes for c in clients
+                              for a in c.dataset.arrays.values())
+        donate_args = (0,) if donate else ()
+        # population pools beyond the device budget stay on host: cohort
+        # batches are gathered per client from the ORIGINAL client arrays
+        # and uploaded per round (no concatenated duplicate is ever built
+        # — the same fallback split run_server_phase makes for the
+        # activation pool)
+        self.resident = self.pool_bytes <= \
+            run_cfg.device_pool_budget_mb * 2 ** 20
+        if self.resident:
+            pool_np, _ = client_pool(clients)
+            self.pool = {k: jnp.asarray(v) for k, v in pool_np.items()}
+            del pool_np
+            self._round = jax.jit(
+                steps.make_device_round_pool_step(model, run_cfg),
+                donate_argnums=donate_args)
+        else:
+            self.pool = None
+            self._round_batches = jax.jit(
+                steps.make_device_round_step(model, run_cfg),
+                donate_argnums=donate_args)
+        self._client_round = jax.jit(steps.make_client_round_fn(model,
+                                                                run_cfg))
+
+    # ------------------------------------------------------------------
+    def round_indices(self, round_idx: int, client_ids: Sequence[int]
+                      ) -> np.ndarray:
+        """(K, H, b) global pool indices for one round — stateless in
+        (seed, round, client), so resumed runs replay identical batches."""
+        fed = self.run.fed
+        H, b = fed.local_steps, fed.device_batch_size
+        idx = np.empty((len(client_ids), H, b), np.int32)
+        for j, c in enumerate(int(c) for c in client_ids):
+            rng = np.random.default_rng((self.seed, round_idx, c))
+            idx[j] = self.offsets[c] + rng.integers(
+                0, self.client_sizes[c], (H, b))
+        return idx
+
+    def pad_cohort(self, client_ids, weights, pad_to: Optional[int] = None):
+        """Pad a partial cohort with zero-weight slots so the jitted round
+        sees a fixed K (one compilation per distinct cohort size, not per
+        survivor count)."""
+        k = pad_to if pad_to is not None else len(list(client_ids))
+        return aggregation.pad_cohort(client_ids, weights, k)
+
+    def _client_batches(self, idx_row: np.ndarray, c: int) -> dict:
+        """(H, b, ...) host batches for client ``c`` from its own arrays
+        (``idx_row`` holds global pool indices)."""
+        local = idx_row - self.offsets[c]
+        return {k: v[local] for k, v in
+                self.clients[c].dataset.arrays.items()}
+
+    # ------------------------------------------------------------------
+    def run_round(self, state, round_idx: int, client_ids, weights, lr,
+                  pad_to: Optional[int] = None):
+        """One vmapped cohort round.  The state argument is DONATED —
+        callers must rebind: ``state, m = engine.run_round(state, ...)``."""
+        ids, w = self.pad_cohort(client_ids, weights, pad_to)
+        idx = self.round_indices(round_idx, ids)
+        if self.resident:
+            return self._round(state, self.pool, jnp.asarray(idx),
+                               jnp.asarray(w, jnp.float32), lr)
+        per = [self._client_batches(idx[j], c) for j, c in enumerate(ids)]
+        batches = {k: jnp.asarray(np.stack([p[k] for p in per]))
+                   for k in per[0]}
+        return self._round_batches(state, batches,
+                                   jnp.asarray(w, jnp.float32), lr)
+
+    def sequential_round(self, state, round_idx: int, client_ids, weights,
+                         lr):
+        """Reference implementation: Python loop over clients, one jitted
+        single-client round each, host-level FedAvg.  Mathematically
+        identical to :meth:`run_round` (same stateless batch indices, same
+        client_round function) — kept as the equivalence/benchmark
+        baseline for the vmapped path."""
+        ids = [int(c) for c in client_ids]
+        idx = self.round_indices(round_idx, ids)
+        dev_list, aux_list, losses = [], [], []
+        for j, c in enumerate(ids):
+            if self.resident:
+                batches = jax.tree.map(lambda a: a[idx[j]], self.pool)
+            else:
+                batches = self._client_batches(idx[j], c)
+            dev, aux, loss = self._client_round(state["device"],
+                                                state["aux"], batches, lr)
+            dev_list.append(dev)
+            aux_list.append(aux)
+            losses.append(loss)
+        w = np.asarray(weights, np.float64)
+        new_dev = aggregation.fedavg(dev_list, w)
+        new_aux = aggregation.fedavg(aux_list, w)
+        wn = w / max(w.sum(), 1e-12)
+        loss = float(np.sum(np.asarray(jax.device_get(losses)) * wn))
+        return ({"device": new_dev, "aux": new_aux},
+                {"loss": jnp.asarray(loss)})

@@ -1,0 +1,321 @@
+"""Deterministic discrete-event fleet scheduler.
+
+Replaces the implicit "all K clients, lock-step" cohort of
+:func:`repro.core.aggregation.sample_cohort` with an explicit event queue
+over a population of N >> K simulated devices.  The scheduler owns wall
+clock time; everything else is a consumer:
+
+* :class:`repro.runtime.elastic.ElasticCohort` — resized from *measured*
+  round durations (grow when rounds beat the target, shrink when they
+  blow it; the 0.8x / 1.25x hysteresis lives in ElasticCohort.adjust).
+* :class:`repro.runtime.fault_tolerance.Heartbeats` — fed from simulated
+  device heartbeat events; cohort selection only considers devices whose
+  last beat is within the timeout.
+* :class:`repro.runtime.fault_tolerance.RoundJournal` — one record per
+  finished round (optional), so a coordinator can replay the schedule.
+
+Event kinds (heap-ordered by (time, seq); seq breaks ties deterministically):
+
+  ``online`` / ``offline``  — churn transitions (exponential sessions)
+  ``assign``                — device picked into the active round's cohort
+  ``complete``              — device finished its H local steps + exchange
+  ``dropout``               — device failed mid-round (churn or hazard)
+  ``deadline``              — straggler deadline fired; stragglers dropped
+  ``heartbeat``             — periodic liveness beat while online
+  ``round_end``             — all participants resolved (or deadline)
+
+The simulation is *time-only*: it decides who trains when, never touching
+model math, so one trace can drive both the Ampere trainer and an SFL
+baseline (``examples/fleet_sim.py``) — and ``simulate()`` is pure given
+(population, latency_fn, seed): same seed => identical event trace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.fleet.profiles import DeviceProfile, FleetConfig
+from repro.runtime.elastic import ElasticCohort
+from repro.runtime.fault_tolerance import Heartbeats, RoundJournal
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """One scheduled federated round (the trace unit trainers consume)."""
+
+    round_idx: int
+    t_start: float
+    t_end: float
+    clients: Tuple[int, ...]       # surviving device ids
+    weights: Tuple[float, ...]     # aggregation weights over survivors
+    dropped: Tuple[int, ...]       # failed / straggler-dropped device ids
+    cohort_size: int               # K at selection time (elastic)
+    round_time: float              # t_end - t_start
+
+    def as_cohort(self) -> dict:
+        """``aggregation.sample_cohort``-shaped dict for legacy consumers.
+
+        Deliberately does NOT carry ``round_time``: the plan's time was
+        priced for the algorithm the trace was *scheduled* with, so a
+        baseline replaying the cohorts must either re-price it explicitly
+        (``dict(p.as_cohort(), round_time=t)`` with
+        :func:`repro.fleet.profiles.trace_round_times`) or let the
+        replaying trainer's own analytic model price the round."""
+        return {"clients": np.asarray(self.clients, np.int64),
+                "weights": np.asarray(self.weights, np.float64),
+                "dropped": np.asarray(self.dropped, np.int64),
+                "cohort_size": self.cohort_size}
+
+
+@dataclasses.dataclass
+class FleetTrace:
+    rounds: List[RoundPlan]
+    events: List[Tuple[float, str, int, int]]   # (time, kind, device, round)
+    cohort_sizes: List[int]                     # elastic K per round
+
+    @property
+    def total_time(self) -> float:
+        return self.rounds[-1].t_end if self.rounds else 0.0
+
+
+class _Round:
+    """Mutable state of the round currently in flight."""
+
+    __slots__ = ("idx", "t_start", "cohort_size", "pending", "expected",
+                 "survivors", "dropped")
+
+    def __init__(self, idx, t_start, cohort_size):
+        self.idx = idx
+        self.t_start = t_start
+        self.cohort_size = cohort_size
+        self.pending = {}     # device -> scheduled resolve time
+        self.expected = {}    # device -> planned completion (no failures)
+        self.survivors = {}   # device -> completion time
+        self.dropped = set()
+
+
+class FleetScheduler:
+    """Seeded heap-based simulator producing a :class:`FleetTrace`.
+
+    ``latency_fn(profile) -> seconds`` prices one round on one device
+    (see :func:`repro.fleet.profiles.make_latency_fn`); the population
+    median of it is the time unit that the config's round-denominated
+    churn/heartbeat/target knobs are scaled by.
+
+    ``simulate`` re-seeds all mutable state, so the same scheduler object
+    yields the identical trace on every call.
+    """
+
+    def __init__(self, population: Sequence[DeviceProfile],
+                 latency_fn: Callable[[DeviceProfile], float],
+                 cfg: Optional[FleetConfig] = None, *,
+                 seed: Optional[int] = None,
+                 journal: Optional[RoundJournal] = None):
+        self.pop = list(population)
+        self.cfg = cfg or FleetConfig(n_devices=len(self.pop))
+        self.latency_fn = latency_fn
+        self.seed = self.cfg.seed if seed is None else seed
+        self.journal = journal
+        self._lat = {p.device_id: float(latency_fn(p)) for p in self.pop}
+        self.base_latency = float(np.median(list(self._lat.values())))
+        self._by_id = {p.device_id: p for p in self.pop}
+        self._reset()
+
+    def _reset(self):
+        self.rng = np.random.default_rng(self.seed)
+        self.heartbeats = Heartbeats(
+            timeout=self.cfg.heartbeat_timeout_rounds * self.base_latency)
+        self.elastic = None
+        if self.cfg.target_round_time_factor > 0:
+            self.elastic = ElasticCohort(
+                min_clients=self.cfg.min_cohort,
+                max_clients=self.cfg.max_cohort,
+                current=self.cfg.init_cohort)
+        self._target = (self.cfg.target_round_time_factor * self.base_latency
+                        if self.elastic else 0.0)
+
+    # ------------------------------------------------------------------
+    def cohort_size(self) -> int:
+        return self.elastic.current if self.elastic else self.cfg.init_cohort
+
+    def _exp(self, mean_rounds: float) -> float:
+        return float(self.rng.exponential(mean_rounds * self.base_latency))
+
+    # ------------------------------------------------------------------
+    def simulate(self, num_rounds: int) -> FleetTrace:
+        self._reset()
+        cfg = self.cfg
+        heap: list = []
+        seq = [0]
+
+        def push(t, kind, dev=-1, rnd_idx=-1):
+            heapq.heappush(heap, (float(t), seq[0], kind, int(dev), rnd_idx))
+            seq[0] += 1
+
+        online = {}                 # device_id -> bool
+        next_offline = {}           # device_id -> scheduled churn-off time
+        busy = set()
+        events: List[Tuple[float, str, int, int]] = []
+        rounds: List[RoundPlan] = []
+        cohort_sizes: List[int] = []
+        hb_dt = cfg.heartbeat_interval_rounds * self.base_latency
+        cur = _Round(0, 0.0, 0)
+        waiting = [False]
+
+        for p in self.pop:
+            d = p.device_id
+            if self.rng.random() < p.p_online0:
+                online[d] = True
+                off_t = self._exp(p.mean_session_rounds)
+                next_offline[d] = off_t
+                push(off_t, "offline", d)
+                self.heartbeats.beat(d, now=0.0)
+                push(hb_dt * (0.5 + 0.5 * self.rng.random()), "heartbeat", d)
+            else:
+                online[d] = False
+                push(self._exp(p.mean_off_rounds), "online", d)
+
+        def available(now):
+            alive = self.heartbeats.alive(
+                [d for d, on in online.items() if on and d not in busy],
+                now=now)
+            return sorted(int(a) for a in alive)
+
+        def start_round(now) -> bool:
+            avail = available(now)
+            if not avail:
+                waiting[0] = True
+                return False
+            waiting[0] = False
+            K = min(self.cohort_size(), len(avail))
+            chosen = self.rng.choice(np.asarray(avail), size=K,
+                                     replace=False)
+            nonlocal cur
+            cur = _Round(cur.idx, now, K)
+            lats = []
+            for d in (int(c) for c in chosen):
+                busy.add(d)
+                events.append((now, "assign", d, cur.idx))
+                lat = self._lat[d] * (1.0 + cfg.latency_jitter
+                                      * self.rng.random())
+                done_t = now + lat
+                lats.append(lat)
+                cur.expected[d] = done_t
+                fail_t = None
+                if next_offline.get(d, np.inf) <= done_t:
+                    fail_t = next_offline[d]          # churns off mid-round
+                if self.rng.random() < self._by_id[d].dropout_hazard:
+                    hz_t = now + self.rng.random() * lat
+                    fail_t = hz_t if fail_t is None else min(fail_t, hz_t)
+                if fail_t is not None:
+                    cur.pending[d] = fail_t
+                    push(fail_t, "dropout", d, cur.idx)
+                else:
+                    cur.pending[d] = done_t
+                    push(done_t, "complete", d, cur.idx)
+            if cfg.deadline_factor > 0 and lats:
+                push(now + cfg.deadline_factor * float(np.median(lats)),
+                     "deadline", -1, cur.idx)
+            return True
+
+        def finish_round(now):
+            nonlocal cur
+            if not cur.survivors:
+                # never lose the whole round: keep the fastest participant.
+                # Its planned completion may lie beyond the last dropout,
+                # so the round ends when IT finishes, not at the failure.
+                fastest = min(cur.expected, key=cur.expected.get)
+                cur.survivors[fastest] = cur.expected[fastest]
+                cur.dropped.discard(fastest)
+                now = max(now, cur.expected[fastest])
+            ids = tuple(sorted(cur.survivors))
+            w = (1.0 / len(ids),) * len(ids)
+            for d in cur.expected:
+                busy.discard(d)
+            plan = RoundPlan(
+                round_idx=cur.idx, t_start=cur.t_start, t_end=now,
+                clients=ids, weights=w, dropped=tuple(sorted(cur.dropped)),
+                cohort_size=cur.cohort_size, round_time=now - cur.t_start)
+            rounds.append(plan)
+            cohort_sizes.append(cur.cohort_size)
+            events.append((now, "round_end", -1, cur.idx))
+            if self.elastic is not None:
+                self.elastic.adjust(plan.round_time, self._target)
+            if self.journal is not None:
+                self.journal.append({
+                    "phase": "fleet-sched", "round": cur.idx,
+                    "t_end": round(now, 9), "clients": list(ids),
+                    "dropped": [int(x) for x in plan.dropped],
+                    "cohort_size": cur.cohort_size})
+            cur = _Round(cur.idx + 1, now, 0)
+            return now
+
+        def maybe_advance(now):
+            if not cur.pending:
+                end = finish_round(now)
+                if len(rounds) < num_rounds:
+                    start_round(end)
+
+        start_round(0.0)
+        while heap and len(rounds) < num_rounds:
+            t, _, kind, d, rnd_idx = heapq.heappop(heap)
+            if kind == "online":
+                if online.get(d):
+                    continue
+                online[d] = True
+                events.append((t, "online", d, cur.idx))
+                off_t = t + self._exp(self._by_id[d].mean_session_rounds)
+                next_offline[d] = off_t
+                push(off_t, "offline", d)
+                self.heartbeats.beat(d, now=t)
+                push(t + hb_dt, "heartbeat", d)
+                if waiting[0]:
+                    start_round(t)
+            elif kind == "offline":
+                # stale if the device re-churned; trust next_offline
+                if not online.get(d) or next_offline.get(d, -1.0) > t:
+                    continue
+                online[d] = False
+                events.append((t, "offline", d, cur.idx))
+                push(t + self._exp(self._by_id[d].mean_off_rounds),
+                     "online", d)
+                # mid-round failures were pre-scheduled as dropout events
+            elif kind == "heartbeat":
+                if online.get(d):
+                    # beats can be lost in flight; enough consecutive
+                    # losses and cohort selection treats the device as
+                    # dead (Heartbeats timeout) until a beat lands again
+                    if self.rng.random() >= cfg.heartbeat_loss_prob:
+                        self.heartbeats.beat(d, now=t)
+                        events.append((t, "heartbeat", d, cur.idx))
+                    push(t + hb_dt, "heartbeat", d)
+            elif kind == "complete":
+                if rnd_idx != cur.idx or d not in cur.pending:
+                    continue   # stale: round already closed by deadline
+                del cur.pending[d]
+                cur.survivors[d] = t
+                self.heartbeats.beat(d, now=t)
+                events.append((t, "complete", d, cur.idx))
+                maybe_advance(t)
+            elif kind == "dropout":
+                if rnd_idx != cur.idx or d not in cur.pending:
+                    continue
+                del cur.pending[d]
+                cur.dropped.add(d)
+                events.append((t, "dropout", d, cur.idx))
+                maybe_advance(t)
+            elif kind == "deadline":
+                if rnd_idx != cur.idx or not cur.pending:
+                    continue
+                events.append((t, "deadline", -1, cur.idx))
+                for s in list(cur.pending):
+                    del cur.pending[s]
+                    cur.dropped.add(s)
+                maybe_advance(t)
+
+        return FleetTrace(rounds=rounds, events=events,
+                          cohort_sizes=cohort_sizes)

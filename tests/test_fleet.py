@@ -1,0 +1,315 @@
+"""Fleet simulator: deterministic scheduling, elastic hysteresis,
+vmap/loop round equivalence, and coordinator resume."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig, OptimConfig, RunConfig, replace
+from repro.fleet import (DEVICE_CLASSES, FleetConfig, FleetEngine,
+                         FleetScheduler, make_latency_fn, sample_population,
+                         trace_round_times)
+from repro.runtime.elastic import ElasticCohort
+from repro.runtime.fault_tolerance import RoundJournal
+
+
+def _speed_latency(p):
+    return 1.0 / p.speed_factor
+
+
+def _fleet_cfg(**kw):
+    base = dict(n_devices=40, seed=0, dropout_hazard=0.05,
+                deadline_factor=2.5, target_round_time_factor=1.5,
+                min_cohort=2, max_cohort=16, init_cohort=8)
+    base.update(kw)
+    return FleetConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# profiles / population
+# ---------------------------------------------------------------------------
+
+
+def test_population_deterministic_and_mixed():
+    cfg = _fleet_cfg(n_devices=200)
+    a = sample_population(cfg)
+    b = sample_population(cfg)
+    assert a == b
+    assert len(a) == 200
+    assert {p.cls for p in a} == {n for n, _ in cfg.class_mix}
+    assert all(p.gflops > 0 and p.bandwidth_bps > 0 for p in a)
+
+
+def test_latency_orders_by_device_class(vision_model_run):
+    model, run_cfg = vision_model_run
+    lat = make_latency_fn(model, run_cfg, algo="ampere")
+    mk = lambda name: sample_population(  # noqa: E731
+        _fleet_cfg(n_devices=1, class_mix=((name, 1.0),)))[0]
+    t_fast = lat(mk("jetson-fast"))
+    t_slow = lat(mk("jetson-slow"))
+    assert 0 < t_fast < t_slow
+    # a different algorithm prices the same profile differently (SFL ships
+    # per-iteration activations instead of Ampere's aux-net exchange)
+    lat_sfl = make_latency_fn(model, run_cfg, algo="splitfed")
+    t_sfl = lat_sfl(mk("jetson-fast"))
+    assert t_sfl > 0 and t_sfl != pytest.approx(t_fast, rel=1e-6)
+
+
+@pytest.fixture(scope="module")
+def vision_model_run():
+    from repro.configs import registry
+    from repro.models import build_model
+
+    cfg = registry.get_smoke_config("vit-s")
+    model = build_model(cfg)
+    run_cfg = RunConfig(
+        arch="vit-s",
+        fed=FedConfig(num_clients=12, clients_per_round=4, local_steps=2,
+                      device_batch_size=4, server_batch_size=8,
+                      dirichlet_alpha=0.5),
+        optim=OptimConfig(name="momentum", lr=0.1, schedule="inverse_time",
+                          decay_gamma=0.01))
+    return model, run_cfg
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_same_seed_identical_trace():
+    cfg = _fleet_cfg()
+    pop = sample_population(cfg)
+    t1 = FleetScheduler(pop, _speed_latency, cfg).simulate(15)
+    t2 = FleetScheduler(pop, _speed_latency, cfg).simulate(15)
+    assert t1.events == t2.events
+    assert t1.rounds == t2.rounds
+    assert t1.cohort_sizes == t2.cohort_sizes
+    # simulate() is idempotent on one scheduler object too
+    s = FleetScheduler(pop, _speed_latency, cfg)
+    assert s.simulate(15).events == t1.events
+    assert s.simulate(15).events == t1.events
+
+
+def test_scheduler_seed_changes_trace():
+    cfg = _fleet_cfg()
+    pop = sample_population(cfg)
+    t1 = FleetScheduler(pop, _speed_latency, cfg).simulate(15)
+    t3 = FleetScheduler(pop, _speed_latency, cfg, seed=123).simulate(15)
+    assert t1.events != t3.events
+
+
+def test_scheduler_round_invariants():
+    cfg = _fleet_cfg(n_devices=60)
+    pop = sample_population(cfg)
+    trace = FleetScheduler(pop, _speed_latency, cfg).simulate(25)
+    assert len(trace.rounds) == 25
+    ids = {p.device_id for p in pop}
+    prev_end = 0.0
+    for plan in trace.rounds:
+        assert len(plan.clients) >= 1            # never lose a whole round
+        assert set(plan.clients) <= ids
+        assert set(plan.dropped) <= ids
+        assert not (set(plan.clients) & set(plan.dropped))
+        assert len(plan.clients) + len(plan.dropped) == plan.cohort_size
+        assert cfg.min_cohort <= plan.cohort_size <= cfg.max_cohort
+        assert abs(sum(plan.weights) - 1.0) < 1e-9
+        assert plan.t_end >= plan.t_start >= prev_end - 1e-12
+        prev_end = plan.t_end
+    # churn + hazard + deadline actually fired somewhere in the trace
+    kinds = {e[1] for e in trace.events}
+    assert {"assign", "complete", "round_end", "heartbeat"} <= kinds
+    assert "dropout" in kinds or "deadline" in kinds
+
+
+def test_scheduler_journal_records(tmp_path):
+    cfg = _fleet_cfg()
+    pop = sample_population(cfg)
+    journal = RoundJournal(str(tmp_path / "sched.jsonl"))
+    trace = FleetScheduler(pop, _speed_latency, cfg,
+                           journal=journal).simulate(5)
+    last = journal.last()
+    assert last["phase"] == "fleet-sched"
+    assert last["round"] == 4
+    assert last["clients"] == list(trace.rounds[-1].clients)
+
+
+def test_trace_round_times_reprices_per_algo():
+    cfg = _fleet_cfg()
+    pop = sample_population(cfg)
+    trace = FleetScheduler(pop, _speed_latency, cfg).simulate(10)
+    t1 = trace_round_times(trace, pop, _speed_latency)
+    t2 = trace_round_times(trace, pop, lambda p: 3.0 / p.speed_factor)
+    assert len(t1) == 10
+    assert all(b == pytest.approx(3 * a) for a, b in zip(t1, t2))
+
+
+# ---------------------------------------------------------------------------
+# elastic cohort
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_hysteresis_boundaries():
+    T = 10.0
+    ec = ElasticCohort(min_clients=2, max_clients=32, current=8)
+    assert ec.adjust(0.8 * T, T) == 8        # exactly on the edge: hold
+    assert ec.adjust(0.8 * T - 1e-9, T) == 16    # just under: grow 2x
+    assert ec.adjust(1.25 * T, T) == 16      # exactly on the edge: hold
+    assert ec.adjust(1.25 * T + 1e-9, T) == 8    # just over: shrink 2x
+    # dead band between the thresholds never moves
+    for rt in (0.9 * T, T, 1.2 * T):
+        assert ec.adjust(rt, T) == 8
+    # clamped at the bounds
+    ec2 = ElasticCohort(2, 32, 32)
+    assert ec2.adjust(0.1 * T, T) == 32
+    ec3 = ElasticCohort(2, 32, 2)
+    assert ec3.adjust(10 * T, T) == 2
+
+
+def test_scheduler_drives_elastic_from_measured_times():
+    # straggler deadline off, jitter tiny, target below the slowest class's
+    # latency: rounds with slow devices blow the target and shrink K, fast
+    # cohorts beat it and grow K back -> sizes must move within bounds
+    cfg = _fleet_cfg(n_devices=60, dropout_hazard=0.0, deadline_factor=0.0,
+                     latency_jitter=0.01, target_round_time_factor=1.05,
+                     min_cohort=2, max_cohort=32, init_cohort=8)
+    pop = sample_population(cfg)
+    sched = FleetScheduler(pop, _speed_latency, cfg)
+    trace = sched.simulate(30)
+    sizes = trace.cohort_sizes
+    assert len(set(sizes)) > 1               # elastic actually moved
+    assert all(cfg.min_cohort <= s <= cfg.max_cohort for s in sizes)
+    # every move is a 2x grow / 2x shrink / hold (hysteresis semantics)
+    for a, b in zip(sizes, sizes[1:]):
+        assert b in (a, min(2 * a, 32), max(a // 2, 2))
+
+
+# ---------------------------------------------------------------------------
+# engine: vmapped round == sequential per-client loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_engine(vision_model_run):
+    from repro.data import federate, make_dataset_for_model
+
+    model, run_cfg = vision_model_run
+    train = make_dataset_for_model(model, 144, seed=0)
+    clients = federate(train, run_cfg.fed.num_clients, 0.5, seed=0)
+    engine = FleetEngine(model, run_cfg, clients, seed=0, donate=False)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.core import auxiliary, splitting
+    dev, _ = splitting.split_params(model, params,
+                                    run_cfg.split.split_point)
+    aux = auxiliary.init_aux(model, jax.random.PRNGKey(7), run_cfg.split)
+    return engine, {"device": dev, "aux": aux}
+
+
+def test_round_indices_stateless_and_in_bounds(small_engine):
+    engine, _ = small_engine
+    idx1 = engine.round_indices(3, [0, 4, 7])
+    idx2 = engine.round_indices(3, [0, 4, 7])
+    np.testing.assert_array_equal(idx1, idx2)
+    assert idx1.shape == (3, engine.run.fed.local_steps,
+                          engine.run.fed.device_batch_size)
+    for j, c in enumerate([0, 4, 7]):
+        lo = engine.offsets[c]
+        hi = lo + engine.client_sizes[c]
+        assert (idx1[j] >= lo).all() and (idx1[j] < hi).all()
+    assert not np.array_equal(idx1, engine.round_indices(4, [0, 4, 7]))
+
+
+def test_vmapped_round_matches_sequential(small_engine):
+    engine, state = small_engine
+    ids, w = [1, 3, 8, 10], [0.4, 0.3, 0.2, 0.1]
+    s_v, m_v = engine.run_round(dict(state), 2, ids, w, 0.1)
+    s_l, m_l = engine.sequential_round(dict(state), 2, ids, w, 0.1)
+    assert float(m_v["loss"]) == pytest.approx(float(m_l["loss"]), abs=1e-5)
+    for a, b in zip(jax.tree.leaves(s_v), jax.tree.leaves(s_l)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_host_pool_fallback_matches_resident(small_engine):
+    """A population pool beyond device_pool_budget_mb falls back to
+    host-side gathers — same math, batches uploaded per round."""
+    engine, state = small_engine
+    run_small = replace(engine.run, device_pool_budget_mb=0)
+    engine2 = FleetEngine(engine.model, run_small, engine.clients,
+                          seed=0, donate=False)
+    assert engine.resident and not engine2.resident
+    ids, w = [1, 3, 8], [0.5, 0.3, 0.2]
+    s_a, m_a = engine.run_round(dict(state), 5, ids, w, 0.1)
+    s_b, m_b = engine2.run_round(dict(state), 5, ids, w, 0.1)
+    assert float(m_a["loss"]) == pytest.approx(float(m_b["loss"]), abs=1e-5)
+    for a, b in zip(jax.tree.leaves(s_a), jax.tree.leaves(s_b)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_zero_weight_padding_matches_unpadded(small_engine):
+    engine, state = small_engine
+    ids, w = [2, 5], [0.5, 0.5]
+    s_a, m_a = engine.run_round(dict(state), 1, ids, w, 0.1)
+    s_b, m_b = engine.run_round(dict(state), 1, ids, w, 0.1, pad_to=4)
+    assert float(m_a["loss"]) == pytest.approx(float(m_b["loss"]), abs=1e-5)
+    for a, b in zip(jax.tree.leaves(s_a), jax.tree.leaves(s_b)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# coordinator resume (slow): killed mid-phase == uninterrupted
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_fleet_resume_matches_uninterrupted(vision_model_run, tmp_path):
+    from repro.core.uit import AmpereTrainer
+    from repro.data import federate, make_dataset_for_model
+
+    model, run_cfg = vision_model_run
+    run_cfg = replace(run_cfg, checkpoint_every=1)
+    train = make_dataset_for_model(model, 144, seed=0)
+    test = make_dataset_for_model(model, 48, seed=1)
+    clients = federate(train, run_cfg.fed.num_clients, 0.5, seed=0)
+
+    fcfg = _fleet_cfg(n_devices=run_cfg.fed.num_clients, init_cohort=4,
+                      min_cohort=2, max_cohort=8)
+    pop = sample_population(fcfg)
+    lat = make_latency_fn(model, run_cfg, algo="ampere")
+    trace = FleetScheduler(pop, lat, fcfg).simulate(6)
+
+    # uninterrupted reference
+    trA = AmpereTrainer(model, run_cfg, clients, test,
+                        workdir=str(tmp_path / "A"), patience=100)
+    outA = trA.run_fleet(trace, max_server_epochs=1)
+    lossesA = [r["loss"] for r in outA["history"]["device"]]
+    assert len(lossesA) == 6
+
+    # "kill" after 3 rounds: device phase only, checkpoints + journal land
+    trB = AmpereTrainer(model, run_cfg, clients, test,
+                        workdir=str(tmp_path / "B"), patience=100)
+    key = jax.random.PRNGKey(run_cfg.seed)
+    dev, srv, aux = trB._init_states(key)
+    trB.run_fleet_device_phase({"device": dev, "aux": aux}, trace,
+                               max_rounds=3)
+    assert trB.journal.last()["phase"] == "fleet"
+    assert trB.journal.last()["round"] == 2
+
+    # fresh coordinator on the same workdir resumes from round 3
+    trB2 = AmpereTrainer(model, run_cfg, clients, test,
+                         workdir=str(tmp_path / "B"), patience=100)
+    outB = trB2.run_fleet(trace, max_server_epochs=1)
+    roundsB = [r["round"] for r in outB["history"]["device"]]
+    assert roundsB and roundsB[0] == 3       # resumed, not recomputed
+    lossesB = ([r["loss"] for r in trB.history["device"]]
+               + [r["loss"] for r in outB["history"]["device"]])
+    np.testing.assert_allclose(lossesA, lossesB, rtol=1e-5, atol=1e-6)
+    # final states agree too (stateless per-round indices => same batches)
+    vA = outA["history"]["server"][-1]["val_loss"]
+    vB = outB["history"]["server"][-1]["val_loss"]
+    assert vA == pytest.approx(vB, rel=1e-4, abs=1e-5)
