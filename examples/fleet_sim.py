@@ -1,135 +1,74 @@
-"""Heterogeneous fleet simulation: Ampere vs. SplitFed under churn.
+"""Heterogeneous fleet comparison from ONE committed spec file.
 
-A 200-device population (five device classes: three Jetson tiers + two
-phone tiers) with exponential online/offline churn, mid-round dropout
-hazard, straggler deadlines, heartbeat liveness and elastic cohort sizing
-(16-cohort target) trains on Dirichlet non-IID data.  ONE event-driven
-fleet trace — who is online, who gets picked, who drops — drives both:
-
-* Ampere (``AmpereTrainer.run_fleet``): vmapped pool-fed device rounds,
-  one-shot activation consolidation, centralized server phase;
-* SplitFed (``SFLTrainer.run_rounds(cohort_plan=...)``): the same cohorts
-  replayed, with per-round wall-clock re-priced for SplitFed's
-  per-iteration activation/gradient exchange on the same device profiles.
-
-Prints per-round wall-clock/accuracy traces for both systems and writes
-``results/fleet_sim.json``.  Runs on CPU in a few minutes.
+``examples/specs/compare_smoke.json`` declares everything: four systems
+(Ampere, SplitFed, SplitGP, FedAvg), a 40-device five-class population
+with exponential churn / mid-round dropout hazard / straggler deadlines
+/ heartbeat liveness, Dirichlet non-IID data, and the shared fleet
+trace (``examples/specs/fleet_trace_smoke.jsonl``, generated once and
+committed).  Every system replays the identical cohort/dropout
+schedule; per-round wall-clock is re-priced per system on the same
+device profiles (Ampere exchanges models only, the SFL family ships
+activations+gradients every iteration, FedAvg moves the full model).
 
     PYTHONPATH=src python examples/fleet_sim.py
+
+Equivalent CLI:
+
+    PYTHONPATH=src python scripts/run_experiment.py \
+        examples/specs/compare_smoke.json
 """
 
-import json
 import os
 import time
 
-from repro.configs import registry
-from repro.configs.base import FedConfig, OptimConfig, RunConfig
-from repro.core.baselines import SFLTrainer
-from repro.core.uit import AmpereTrainer
-from repro.data import federate, make_dataset_for_model
-from repro.fleet import (FleetConfig, FleetScheduler, make_latency_fn,
-                         sample_population, trace_round_times)
-from repro.models import build_model
+from repro.experiments import ExperimentSpec, run_experiment
+from repro.fleet import FleetTrace
 
-ARCH = "mobilenet-l"
-N_DEVICES = 200
-ROUNDS = 20
-SERVER_EPOCHS = 4
+HERE = os.path.dirname(os.path.abspath(__file__))
+SPEC = os.path.join(HERE, "specs", "compare_smoke.json")
 
 t0 = time.time()
-cfg = registry.get_smoke_config(ARCH)
-model = build_model(cfg)
-run_cfg = RunConfig(
-    arch=ARCH,
-    fed=FedConfig(num_clients=N_DEVICES, clients_per_round=16,
-                  local_steps=2, device_batch_size=8, server_batch_size=64,
-                  dirichlet_alpha=0.33),
-    optim=OptimConfig(name="momentum", lr=0.2, schedule="inverse_time",
-                      decay_gamma=0.005),
-)
+spec = ExperimentSpec.load(SPEC)
+# resolve the committed trace path relative to the repo root
+os.chdir(os.path.dirname(HERE))
 
-train = make_dataset_for_model(model, 3200, seed=0)
-test = make_dataset_for_model(model, 256, seed=1)
-clients = federate(train, N_DEVICES, run_cfg.fed.dirichlet_alpha, seed=0)
-
-# ---------------------------------------------------------------- fleet trace
-fleet_cfg = FleetConfig(
-    n_devices=N_DEVICES, seed=0,
-    mean_session_rounds=8.0, mean_off_rounds=3.0, p_online0=0.7,
-    dropout_hazard=0.04, deadline_factor=2.5,
-    min_cohort=8, max_cohort=16, init_cohort=16,
-    target_round_time_factor=1.5)
-population = sample_population(fleet_cfg)
-lat_ampere = make_latency_fn(model, run_cfg, algo="ampere")
-scheduler = FleetScheduler(population, lat_ampere, fleet_cfg)
-trace = scheduler.simulate(ROUNDS)
+trace = FleetTrace.load(spec.trace_path)
 n_assign = sum(1 for e in trace.events if e[1] == "assign")
 n_drop = sum(1 for e in trace.events if e[1] == "dropout")
-print(f"fleet trace: {len(trace.events)} events, {ROUNDS} rounds, "
-      f"{n_assign} assignments, {n_drop} mid-round dropouts, "
+print(f"shared trace: {len(trace.rounds)} rounds, {len(trace.events)} "
+      f"events, {n_assign} assignments, {n_drop} mid-round dropouts, "
       f"cohorts={trace.cohort_sizes}")
 
-# ------------------------------------------------------------------- Ampere
-print("\n== Ampere under the fleet trace ==")
-ampere = AmpereTrainer(model, run_cfg, clients, test, log_echo=True)
-out = ampere.run_fleet(trace, max_server_epochs=SERVER_EPOCHS)
-acc_a = out["history"]["server"][-1]["val_acc"]
-time_a = out["history"]["sim_time"]
-comm_a = out["history"]["comm_bytes"] / 1e6
-
-# -------------------------------------------- SplitFed on the same trace
-# identical cohorts/dropouts; wall-clock re-priced for SplitFed's
-# per-iteration activation+gradient exchange on the same device profiles
-print("\n== SplitFed replaying the identical trace ==")
-lat_sfl = make_latency_fn(model, run_cfg, algo="splitfed")
-sfl_times = trace_round_times(trace, population, lat_sfl)
-plan = [dict(p.as_cohort(), round_time=t)
-        for p, t in zip(trace.rounds, sfl_times)]
-sfl = SFLTrainer(model, run_cfg, clients, test, variant="splitfed",
-                 log_echo=True)
-res = sfl.run_rounds(ROUNDS, cohort_plan=plan)
-acc_s = res["history"]["rounds"][-1]["val_acc"]
-time_s = res["history"]["sim_time"]
-comm_s = res["history"]["comm_bytes"] / 1e6
+out = run_experiment(spec, log_echo=True)
 
 # ------------------------------------------------------------------ report
-print("\nround |  K | surv | drop |   t_ampere |     t_sfl | acc_ampere | acc_sfl")
-tA = tS = 0.0
-rows = []
-for p, ts in zip(trace.rounds, sfl_times):
+amp_hist = out["results"]["ampere"]["history"]["device"]
+print("\nround |  K | surv | drop |" + "".join(
+    f" {s:>9} |" for s in spec.systems if s != "ampere") + " acc_ampere")
+for p in trace.rounds:
     r = p.round_idx
-    tA = p.t_end
-    tS += ts
-    da = out["history"]["device"][r] if r < len(out["history"]["device"]) \
-        else {}
-    ds = res["history"]["rounds"][r] if r < len(res["history"]["rounds"]) \
-        else {}
-    rows.append({"round": r, "cohort": p.cohort_size,
-                 "survivors": len(p.clients), "dropped": len(p.dropped),
-                 "t_ampere_s": tA, "t_sfl_s": tS,
-                 "acc_ampere_aux": da.get("val_acc"),
-                 "acc_sfl": ds.get("val_acc")})
-    fa = (f"{da['val_acc']:10.3f}" if "val_acc" in da
-          else "         -")  # device phase early-stopped on aux val
-    fs = f"{ds['val_acc']:7.3f}" if "val_acc" in ds else "      -"
+    cells = ""
+    for s in spec.systems:
+        if s == "ampere":
+            continue
+        rows = out["results"][s]["history"]["rounds"]
+        cells += (f" {rows[r]['val_acc']:9.3f} |" if r < len(rows)
+                  else "         - |")
+    da = amp_hist[r] if r < len(amp_hist) else {}
+    fa = f"{da['val_acc']:10.3f}" if "val_acc" in da else "         -"
     print(f"{r:5d} | {p.cohort_size:2d} | {len(p.clients):4d} "
-          f"| {len(p.dropped):4d} | {tA:10.3f} | {tS:9.3f} | {fa} | {fs}")
+          f"| {len(p.dropped):4d} |{cells}{fa}")
 
-print(f"\nAmpere:   acc={acc_a:.3f}  sim_time={time_a:.1f}s  comm={comm_a:.1f} MB")
-print(f"SplitFed: acc={acc_s:.3f}  sim_time={time_s:.1f}s  comm={comm_s:.1f} MB")
-if time_s > 0:
-    print(f"training-time reduction: {100 * (1 - time_a / time_s):.1f}%  "
-          f"comm reduction: {100 * (1 - comm_a / comm_s):.1f}%")
+print(f"\n{'system':>9} | {'final acc':>9} | {'sim time s':>10} | comm MB")
+for name, s in out["summary"].items():
+    print(f"{name:>9} | {s.get('final_val_acc', float('nan')):9.3f} "
+          f"| {s['sim_time_s']:10.3f} | {s['comm_bytes'] / 1e6:7.1f}")
+
+amp, sfl = out["summary"]["ampere"], out["summary"]["splitfed"]
+if sfl["sim_time_s"] > 0:
+    print(f"\nAmpere vs SplitFed: training-time reduction "
+          f"{100 * (1 - amp['sim_time_s'] / sfl['sim_time_s']):.1f}%  "
+          f"comm reduction "
+          f"{100 * (1 - amp['comm_bytes'] / sfl['comm_bytes']):.1f}%")
 print(f"wall clock: {time.time() - t0:.0f}s")
-
-os.makedirs("results", exist_ok=True)
-with open("results/fleet_sim.json", "w") as f:
-    json.dump({"config": {"arch": ARCH, "n_devices": N_DEVICES,
-                          "rounds": ROUNDS,
-                          "cohort_sizes": trace.cohort_sizes},
-               "per_round": rows,
-               "ampere": {"acc": acc_a, "sim_time_s": time_a,
-                          "comm_mb": comm_a},
-               "splitfed": {"acc": acc_s, "sim_time_s": time_s,
-                            "comm_mb": comm_s}}, f, indent=1)
-print("wrote results/fleet_sim.json")
+print(f"wrote {out['results_dir']}/summary.json")

@@ -1,51 +1,42 @@
-"""Quickstart: Ampere split-federated training in ~40 lines.
+"""Quickstart: declarative Ampere vs. SplitFed in ~30 lines.
 
-Trains the paper's MobileNet-L-style CNN (reduced config) on synthetic
-non-IID CIFAR-like data with the full three-phase Ampere pipeline —
-federated device phase, one-shot activation consolidation, centralized
-server phase — and compares communication against SplitFed.
+One :class:`~repro.experiments.ExperimentSpec` drives both systems on
+the paper's MobileNet-L-style CNN (reduced config) over the same
+synthetic non-IID partition: Ampere's three-phase pipeline (federated
+device phase, one-shot activation consolidation, centralized server
+phase) and the SplitFed baseline, through one
+:func:`~repro.experiments.run_experiment` call.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.configs import registry
 from repro.configs.base import FedConfig, OptimConfig, RunConfig
-from repro.core.uit import AmpereTrainer
-from repro.core.baselines import SFLTrainer
-from repro.data import federate, make_dataset_for_model
-from repro.models import build_model
+from repro.experiments import DataSpec, ExperimentSpec, run_experiment
 
-ARCH = "mobilenet-l"
-
-cfg = registry.get_smoke_config(ARCH)
-model = build_model(cfg)
-run_cfg = RunConfig(
-    arch=ARCH,
-    fed=FedConfig(num_clients=8, clients_per_round=4, local_steps=8,
-                  device_batch_size=16, server_batch_size=32,
-                  dirichlet_alpha=0.33),
-    optim=OptimConfig(name="momentum", lr=0.2, schedule="inverse_time",
-                      decay_gamma=0.005),
+spec = ExperimentSpec(
+    name="quickstart",
+    systems=("ampere", "splitfed"),
+    arch="mobilenet-l",
+    run=RunConfig(
+        arch="mobilenet-l",
+        fed=FedConfig(num_clients=8, clients_per_round=4, local_steps=8,
+                      device_batch_size=16, server_batch_size=32,
+                      dirichlet_alpha=0.33),
+        optim=OptimConfig(name="momentum", lr=0.2, schedule="inverse_time",
+                          decay_gamma=0.005),
+    ),
+    data=DataSpec(train_samples=1536, eval_samples=384),
+    max_rounds=10, max_server_epochs=8,
 )
 
-train = make_dataset_for_model(model, 1536, seed=0)
-test = make_dataset_for_model(model, 384, seed=1)
-clients = federate(train, run_cfg.fed.num_clients,
-                   run_cfg.fed.dirichlet_alpha, seed=0)
+out = run_experiment(spec, log_echo=True)
 
-print("== Ampere (UIT + auxiliary net + activation consolidation) ==")
-ampere = AmpereTrainer(model, run_cfg, clients, test, log_echo=True)
-out = ampere.run_all(max_device_rounds=10, max_server_epochs=8)
-acc_a = out["history"]["server"][-1]["val_acc"]
-comm_a = out["history"]["comm_bytes"] / 1e6
-
-print("\n== SplitFed baseline (same budget of rounds) ==")
-sfl = SFLTrainer(model, run_cfg, clients, test, variant="splitfed",
-                 log_echo=True)
-res = sfl.run_rounds(10)
-acc_s = res["history"]["rounds"][-1]["val_acc"]
-comm_s = res["history"]["comm_bytes"] / 1e6
+acc_a = out["results"]["ampere"]["history"]["server"][-1]["val_acc"]
+comm_a = out["summary"]["ampere"]["comm_bytes"] / 1e6
+acc_s = out["results"]["splitfed"]["history"]["rounds"][-1]["val_acc"]
+comm_s = out["summary"]["splitfed"]["comm_bytes"] / 1e6
 
 print(f"\nAmpere:   acc={acc_a:.3f}  comm={comm_a:.1f} MB")
 print(f"SplitFed: acc={acc_s:.3f}  comm={comm_s:.1f} MB")
 print(f"comm reduction: {100 * (1 - comm_a / comm_s):.1f}%")
+print(f"wrote {out['results_dir']}/summary.json")

@@ -16,4 +16,6 @@ python -m pytest -q -m "not slow"
 if [[ "${CI_SLOW:-0}" == "1" ]]; then
     python -m pytest -q -m slow
 fi
+# spec validation + system registry smoke over the committed comparison spec
+python scripts/run_experiment.py examples/specs/compare_smoke.json --dry-run
 python -m benchmarks.run --gate

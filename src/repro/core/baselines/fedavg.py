@@ -8,7 +8,6 @@ estimates in benchmarks use the analytic model either way.
 
 from __future__ import annotations
 
-import os
 from typing import List, Optional
 
 import jax
@@ -17,8 +16,8 @@ import numpy as np
 
 from repro.core import aggregation, comm_model, evaluate, losses, steps
 from repro.data.pipeline import ClientData, round_batches
+from repro.experiments.runner import Runner, StepOutcome
 from repro.optim import make_schedule
-from repro.runtime.metrics import MetricsLogger
 
 
 def make_fedavg_round_step(model, run_cfg):
@@ -66,42 +65,75 @@ class FedAvgTrainer:
         self.clients = clients
         self.eval_data = eval_data
         self.rng = np.random.default_rng(run_cfg.fed.seed)
-        self.log = MetricsLogger(
-            os.path.join(workdir, "fedavg.jsonl") if workdir else None,
-            echo=log_echo)
+        self.runner = Runner(workdir, patience=patience, log_echo=log_echo,
+                             log_name="fedavg.jsonl",
+                             history={"rounds": [], "comm_bytes": 0,
+                                      "sim_time": 0.0})
+        self.log = self.runner.log
         self.patience = patience
         self._round = jax.jit(make_fedavg_round_step(model, run_cfg))
         self._sched = make_schedule(run_cfg.optim)
-        self.history = {"rounds": [], "comm_bytes": 0, "sim_time": 0.0}
+        seq = (clients[0].dataset.arrays["tokens"].shape[1]
+               if model.kind == "lm" else 0)
+        self.seq_len = seq
+        self.sizes = comm_model.split_sizes(model, run_cfg.split,
+                                            seq_len=max(seq, 1))
+        self.history = self.runner.history
 
-    def run_rounds(self, max_rounds: int, key=None):
+    def run_rounds(self, max_rounds: int, key=None, cohort_plan=None):
+        """``cohort_plan`` replays a shared fleet-trace schedule (same
+        semantics as :meth:`SFLTrainer.run_rounds`): plan entries carrying
+        a ``round_time`` are trusted for the simulated wall clock,
+        otherwise the analytic full-model FedAvg cost prices the round."""
         fed = self.run.fed
         key = key if key is not None else jax.random.PRNGKey(self.run.seed)
-        params = self.model.init(key)
+        params, start_round = self.runner.restore("fedavg",
+                                                  self.model.init(key))
         full_bytes = comm_model.tree_bytes(params)
-        stopper = evaluate.EarlyStopper(self.patience, mode="min")
         eval_step = evaluate.make_eval_step(self.model)
         K = fed.clients_per_round
-        for rnd in range(max_rounds):
-            cohort = aggregation.sample_cohort(self.rng, fed, rnd)
-            ids = list(cohort["clients"])
-            w = list(cohort["weights"])
-            while len(ids) < K:
-                ids.append(ids[0])
-                w.append(0.0)
+        tm = comm_model.TimeModel()
+        if cohort_plan is not None:
+            max_rounds = min(max_rounds, len(cohort_plan))
+
+        def body(params, rnd, _plan):
+            if cohort_plan is not None:
+                cohort = cohort_plan[rnd]
+            else:
+                cohort = aggregation.sample_cohort(self.rng, fed, rnd)
+            pad_k = (K if cohort_plan is None
+                     else int(cohort.get("cohort_size",
+                                         len(cohort["clients"]))))
+            ids, w = aggregation.pad_cohort(cohort["clients"],
+                                            cohort["weights"], pad_k)
             batches = round_batches(self.clients, ids, fed.local_steps,
                                     fed.device_batch_size)
             batches = {k: jnp.asarray(v) for k, v in batches.items()}
-            params, metrics = self._round(params, batches,
-                                          jnp.asarray(w, jnp.float32),
-                                          self._sched(rnd))
-            val = evaluate.evaluate(self.model, params, self.eval_data,
+            params_new, metrics = self._round(params, batches,
+                                              jnp.asarray(w, jnp.float32),
+                                              self._sched(rnd))
+            val = evaluate.evaluate(self.model, params_new, self.eval_data,
                                     eval_step=eval_step)
-            self.history["comm_bytes"] += 2 * len(cohort["clients"]) * full_bytes
-            rec = {"round": rnd, "loss": float(metrics["loss"]),
-                   "val_loss": val["loss"], "val_acc": val["acc"]}
-            self.history["rounds"].append(rec)
-            self.log.log(variant="fedavg", **rec)
-            if stopper.update(val["loss"]):
-                break
+            if cohort_plan is not None and \
+                    cohort.get("round_time") is not None:
+                t = float(cohort["round_time"])
+            else:
+                t = comm_model.epoch_time(
+                    "fedavg", self.model, self.run.split, tm,
+                    n_samples=fed.local_steps * fed.device_batch_size,
+                    batch_size=fed.device_batch_size, seq_len=self.seq_len,
+                    sizes=self.sizes)
+            return StepOutcome(
+                state=params_new,
+                record={"round": rnd, "loss": float(metrics["loss"]),
+                        "val_loss": val["loss"], "val_acc": val["acc"]},
+                comm_bytes=2 * len(cohort["clients"]) * full_bytes,
+                sim_time=t,
+                log={"variant": "fedavg"})
+
+        params = self.runner.run_phase(
+            "fedavg", params,
+            ((r, None) for r in range(start_round, max_rounds)),
+            body, history_key="rounds", monitor="val_loss",
+            checkpoint_every=self.run.checkpoint_every)
         return {"params": params, "history": self.history}

@@ -22,7 +22,6 @@ comm accounting in the trainer reflects it.
 
 from __future__ import annotations
 
-import os
 from typing import List, Optional
 
 import jax
@@ -32,9 +31,9 @@ import numpy as np
 from repro.core import (aggregation, auxiliary, comm_model, evaluate, losses,
                         splitting, steps)
 from repro.data.pipeline import ClientData, round_batches
+from repro.experiments.runner import Runner, StepOutcome
 from repro.models import build_model
 from repro.optim import make_schedule
-from repro.runtime.metrics import MetricsLogger
 
 _SGD = lambda par, grads, lr: jax.tree.map(
     lambda q, g: (q.astype(jnp.float32) - lr * g.astype(jnp.float32)
@@ -170,9 +169,11 @@ class SFLTrainer:
         self.clients = clients
         self.eval_data = eval_data
         self.rng = np.random.default_rng(run_cfg.fed.seed)
-        self.log = MetricsLogger(
-            os.path.join(workdir, f"{variant}.jsonl") if workdir else None,
-            echo=log_echo)
+        self.runner = Runner(workdir, patience=patience, log_echo=log_echo,
+                             log_name=f"{variant}.jsonl",
+                             history={"rounds": [], "comm_bytes": 0,
+                                      "sim_time": 0.0})
+        self.log = self.runner.log
         self.patience = patience
         self._round = jax.jit(make_sfl_round_step(model, run_cfg, variant))
         self._sched = make_schedule(run_cfg.optim)
@@ -180,7 +181,7 @@ class SFLTrainer:
                if model.kind == "lm" else 0)
         self.sizes = comm_model.split_sizes(model, run_cfg.split, seq_len=max(seq, 1))
         self.seq_len = seq
-        self.history = {"rounds": [], "comm_bytes": 0, "sim_time": 0.0}
+        self.history = self.runner.history
 
     def _init_state(self, key):
         params = self.model.init(key)
@@ -212,25 +213,28 @@ class SFLTrainer:
         omits its (scheduling-algorithm-priced) round_time, so the plain
         ``[p.as_cohort() for p in trace.rounds]`` replay falls through to
         this trainer's analytic pricing; to use the fleet profiles
-        instead, re-price per round as ``examples/fleet_sim.py`` does::
+        instead, re-price per round with
+        :func:`repro.experiments.systems.replay_plan` (what
+        ``run_experiment`` does for every baseline sharing a trace)::
 
-            times = trace_round_times(trace, population,
-                                      make_latency_fn(..., algo="splitfed"))
-            plan = [dict(p.as_cohort(), round_time=t)
-                    for p, t in zip(trace.rounds, times)]
+            plan = replay_plan(ctx, algo="splitfed")
         """
         fed = self.run.fed
         key = key if key is not None else jax.random.PRNGKey(self.run.seed)
-        state, controls = self._init_state(key)
-        stopper = evaluate.EarlyStopper(self.patience, mode="min")
+        pack, start_round = self.runner.restore(f"sfl-{self.variant}",
+                                                self._init_state(key))
+        if start_round:   # restored trees are numpy; scaffold's .at[] update
+            pack = jax.tree.map(jnp.asarray, pack)   # needs jax arrays
         merged_model = build_model(splitting.merged_config(self.model))
         eval_step = evaluate.make_eval_step(merged_model)
         K = fed.clients_per_round
         tm = comm_model.TimeModel()
         if cohort_plan is not None:
             max_rounds = min(max_rounds, len(cohort_plan))
+        last = {"merged": None}
 
-        for rnd in range(max_rounds):
+        def body(pack, rnd, _plan):
+            state, controls = pack
             if cohort_plan is not None:
                 cohort = cohort_plan[rnd]
             else:
@@ -263,6 +267,7 @@ class SFLTrainer:
             merged = splitting.merge_params(self.model, state["device"],
                                             state["server"],
                                             self.run.split.split_point)
+            last["merged"] = merged
             val = evaluate.evaluate(merged_model, merged, self.eval_data,
                                     eval_step=eval_step)
             # per-round comm: model exchanges + per-iteration act/grad
@@ -274,8 +279,6 @@ class SFLTrainer:
                                   else 0))
             if self.variant == "scaffold":
                 model_bytes *= 2
-            self.history["comm_bytes"] += len(cohort["clients"]) * (
-                act_bytes + model_bytes)
             n_round_samples = b * iters
             if cohort_plan is not None and \
                     cohort.get("round_time") is not None:
@@ -285,12 +288,22 @@ class SFLTrainer:
                     "pipar" if self.variant == "pipar" else "splitfed",
                     self.model, self.run.split, tm, n_samples=n_round_samples,
                     batch_size=b, seq_len=self.seq_len, sizes=self.sizes)
-            self.history["sim_time"] += t
-            rec = {"round": rnd, "loss": float(metrics["loss"]),
-                   "val_loss": val["loss"], "val_acc": val["acc"]}
-            self.history["rounds"].append(rec)
-            self.log.log(variant=self.variant, **rec)
-            if stopper.update(val["loss"]):
-                break
+            return StepOutcome(
+                state=(state, controls),
+                record={"round": rnd, "loss": float(metrics["loss"]),
+                        "val_loss": val["loss"], "val_acc": val["acc"]},
+                comm_bytes=len(cohort["clients"]) * (act_bytes + model_bytes),
+                sim_time=t,
+                log={"variant": self.variant})
+
+        state, controls = self.runner.run_phase(
+            f"sfl-{self.variant}", pack,
+            ((r, None) for r in range(start_round, max_rounds)),
+            body, history_key="rounds", monitor="val_loss",
+            checkpoint_every=self.run.checkpoint_every)
+        if last["merged"] is None:   # zero rounds ran (e.g. resumed at end)
+            last["merged"] = splitting.merge_params(
+                self.model, state["device"], state["server"],
+                self.run.split.split_point)
         return {"state": state, "history": self.history,
-                "merged_params": merged}
+                "merged_params": last["merged"]}

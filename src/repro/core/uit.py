@@ -23,18 +23,25 @@ mesh.
 
 Two device-phase drivers share the jitted round math:
 
-* :meth:`AmpereTrainer.run_all` — the paper's fixed synchronous cohort
-  (``sample_cohort`` per round, device-resident pool feeding when it fits
-  the budget).
-* :meth:`AmpereTrainer.run_fleet` — rounds scheduled by the event-driven
-  fleet simulator (:mod:`repro.fleet`): churning N >> K populations,
-  elastic cohort sizing, straggler deadlines, heartbeat liveness.
+* :meth:`AmpereTrainer.run_device_phase` — the paper's fixed synchronous
+  cohort (``sample_cohort`` per round, device-resident pool feeding when
+  it fits the budget).
+* :meth:`AmpereTrainer.run_fleet_device_phase` — rounds scheduled by the
+  event-driven fleet simulator (:mod:`repro.fleet`): churning N >> K
+  populations, elastic cohort sizing, straggler deadlines, heartbeat
+  liveness.
+
+The cross-cutting loop machinery (checkpoint/resume, RoundJournal, early
+stopping, metrics, comm/sim-time accounting) lives in the shared
+:class:`repro.experiments.runner.Runner`; the full pipelines are
+composed by :class:`repro.experiments.systems.AmpereSystem`, and
+:meth:`AmpereTrainer.run_all` / :meth:`AmpereTrainer.run_fleet` are
+deprecation shims over it — prefer
+:func:`repro.experiments.run_experiment` with a declarative spec.
 """
 
 from __future__ import annotations
 
-import os
-import time
 from typing import List, Optional
 
 import jax
@@ -45,11 +52,9 @@ from repro.core import aggregation, auxiliary, comm_model, evaluate, splitting, 
 from repro.data.activation_store import ActivationStore
 from repro.data.pipeline import (ClientData, DevicePrefetcher, client_pool,
                                  round_batches)
+from repro.experiments.runner import Runner, StepOutcome
 from repro.models import build_model
 from repro.optim import make_schedule
-from repro.runtime.checkpoint import Checkpointer
-from repro.runtime.fault_tolerance import RoundJournal
-from repro.runtime.metrics import MetricsLogger
 
 
 class AmpereTrainer:
@@ -65,15 +70,16 @@ class AmpereTrainer:
         self.patience = patience
         self.consolidate = consolidate
         self.rng = np.random.default_rng(run_cfg.fed.seed)
-        self.log = MetricsLogger(
-            os.path.join(workdir, "metrics.jsonl") if workdir else None,
-            echo=log_echo)
-        self.ckpt = Checkpointer(os.path.join(workdir, "ckpt")) if workdir \
-            else None
-        self.journal = RoundJournal(os.path.join(workdir, "journal.jsonl")) \
-            if workdir else None
-        self.history = {"device": [], "server": [], "comm_bytes": 0,
-                        "sim_time": 0.0}
+        # cross-cutting loop machinery (metrics, checkpoint/journal,
+        # accounting, early stop) lives in the shared Runner; the legacy
+        # attribute names stay as aliases for existing callers/tests
+        self.runner = Runner(workdir, patience=patience, log_echo=log_echo,
+                             history={"device": [], "server": [],
+                                      "comm_bytes": 0, "sim_time": 0.0})
+        self.log = self.runner.log
+        self.ckpt = self.runner.ckpt
+        self.journal = self.runner.journal
+        self.history = self.runner.history
 
         # step functions (round state is donated: callers rebind per round)
         self._device_round = jax.jit(steps.make_device_round_step(model, run_cfg),
@@ -115,14 +121,8 @@ class AmpereTrainer:
     def run_device_phase(self, dev_state, max_rounds: Optional[int] = None):
         fed = self.run.fed
         K = fed.clients_per_round
-        stopper = evaluate.EarlyStopper(self.patience, mode="min")
         aux_eval = self._make_aux_eval()
-        start_round = 0
-        if self.ckpt is not None:
-            tree, meta = self.ckpt.restore()
-            if tree is not None and meta.get("phase") == "device":
-                dev_state = tree
-                start_round = meta["round"] + 1
+        dev_state, start_round = self.runner.restore("device", dev_state)
 
         # device-resident feeding: upload every client's samples ONCE and
         # gather each round's (K, H, b, ...) batches on device from an
@@ -141,8 +141,7 @@ class AmpereTrainer:
         # caller's buffers survive the first donation
         dev_state = jax.tree.map(lambda a: jnp.array(a), dev_state)
 
-        rounds = max_rounds if max_rounds is not None else fed.device_epochs
-        for rnd in range(start_round, rounds):
+        def body(state, rnd, _plan):
             cohort = aggregation.sample_cohort(self.rng, fed, rnd)
             ids, w = aggregation.pad_cohort(cohort["clients"],
                                             cohort["weights"], K)
@@ -152,34 +151,30 @@ class AmpereTrainer:
                     offsets[int(c)] + self.clients[int(c)].batch_indices(
                         fed.device_batch_size, fed.local_steps)
                     for c in ids]).astype(np.int32)
-                dev_state, metrics = self._device_round_pool(
-                    dev_state, pool_dev, jnp.asarray(idx),
+                state, metrics = self._device_round_pool(
+                    state, pool_dev, jnp.asarray(idx),
                     jnp.asarray(w, jnp.float32), lr)
             else:
                 batches = round_batches(self.clients, ids, fed.local_steps,
                                         fed.device_batch_size)
                 batches = {k: jnp.asarray(v) for k, v in batches.items()}
-                dev_state, metrics = self._device_round(
-                    dev_state, batches, jnp.asarray(w, jnp.float32), lr)
-            val = aux_eval(dev_state)
-            self.history["device"].append(
-                {"round": rnd, "loss": float(metrics["loss"]), **val})
-            self.history["sim_time"] += cohort["round_time"]
-            self.history["comm_bytes"] += 2 * len(cohort["clients"]) * (
-                self.sizes.device + self.sizes.aux)
-            self.log.log(phase="device", round=rnd,
-                         loss=float(metrics["loss"]), **val,
-                         dropped=len(cohort["dropped"]))
-            if self.ckpt is not None and self.run.checkpoint_every and \
-                    rnd % self.run.checkpoint_every == 0:
-                self.ckpt.save_async(rnd, dev_state,
-                                     {"phase": "device", "round": rnd})
-                self.journal.append({"phase": "device", "round": rnd})
-            if stopper.update(val["val_loss"]):
-                break
-        if self.ckpt is not None:
-            self.ckpt.wait()
-        return dev_state
+                state, metrics = self._device_round(
+                    state, batches, jnp.asarray(w, jnp.float32), lr)
+            val = aux_eval(state)
+            return StepOutcome(
+                state=state,
+                record={"round": rnd, "loss": float(metrics["loss"]), **val},
+                comm_bytes=2 * len(cohort["clients"]) * (
+                    self.sizes.device + self.sizes.aux),
+                sim_time=cohort["round_time"],
+                log={"dropped": len(cohort["dropped"])})
+
+        rounds = max_rounds if max_rounds is not None else fed.device_epochs
+        return self.runner.run_phase(
+            "device", dev_state, ((r, None) for r in range(start_round,
+                                                           rounds)),
+            body, history_key="device", monitor="val_loss",
+            checkpoint_every=self.run.checkpoint_every)
 
     # ------------------------------------------------------------------
     # Phase 3 (fleet mode): trace-driven federated device training
@@ -197,78 +192,55 @@ class AmpereTrainer:
         """
         from repro.fleet.engine import FleetEngine
 
-        fed = self.run.fed
         engine = FleetEngine(self.model, self.run, self.clients,
-                             seed=fed.seed)
-        stopper = evaluate.EarlyStopper(self.patience, mode="min")
+                             seed=self.run.fed.seed)
         aux_eval = self._make_aux_eval()
-        start_round = 0
-        if self.ckpt is not None:
-            tree, meta = self.ckpt.restore()
-            if tree is not None and meta.get("phase") == "fleet":
-                dev_state = tree
-                start_round = meta["round"] + 1
+        dev_state, start_round = self.runner.restore("fleet", dev_state)
         dev_state = jax.tree.map(lambda a: jnp.array(a), dev_state)
+
+        def body(state, rnd, plan):
+            lr = self._sched(rnd)
+            state, metrics = engine.run_round(
+                state, rnd, plan.clients, plan.weights, lr,
+                pad_to=plan.cohort_size)
+            val = aux_eval(state)
+            return StepOutcome(
+                state=state,
+                record={"round": rnd, "loss": float(metrics["loss"]),
+                        "t_end": plan.t_end, "cohort": plan.cohort_size,
+                        "survivors": len(plan.clients), **val},
+                comm_bytes=2 * len(plan.clients) * (
+                    self.sizes.device + self.sizes.aux),
+                sim_time=plan.round_time,
+                log={"dropped": len(plan.dropped),
+                     "sim_t": round(plan.t_end, 6)})
 
         plans = trace.rounds if max_rounds is None else \
             trace.rounds[:max_rounds]
-        for plan in plans:
-            rnd = plan.round_idx
-            if rnd < start_round:
-                continue
-            lr = self._sched(rnd)
-            dev_state, metrics = engine.run_round(
-                dev_state, rnd, plan.clients, plan.weights, lr,
-                pad_to=plan.cohort_size)
-            val = aux_eval(dev_state)
-            self.history["device"].append(
-                {"round": rnd, "loss": float(metrics["loss"]),
-                 "t_end": plan.t_end, "cohort": plan.cohort_size,
-                 "survivors": len(plan.clients), **val})
-            self.history["sim_time"] += plan.round_time
-            self.history["comm_bytes"] += 2 * len(plan.clients) * (
-                self.sizes.device + self.sizes.aux)
-            self.log.log(phase="fleet", round=rnd,
-                         loss=float(metrics["loss"]), **val,
-                         survivors=len(plan.clients),
-                         dropped=len(plan.dropped),
-                         cohort=plan.cohort_size,
-                         sim_t=round(plan.t_end, 6))
-            if self.ckpt is not None and self.run.checkpoint_every and \
-                    rnd % self.run.checkpoint_every == 0:
-                self.ckpt.save_async(rnd, dev_state,
-                                     {"phase": "fleet", "round": rnd})
-                self.journal.append({"phase": "fleet", "round": rnd})
-            if stopper.update(val["val_loss"]):
-                break
-        if self.ckpt is not None:
-            self.ckpt.wait()
-        return dev_state
+        return self.runner.run_phase(
+            "fleet", dev_state,
+            ((p.round_idx, p) for p in plans if p.round_idx >= start_round),
+            body, history_key="device", monitor="val_loss",
+            checkpoint_every=self.run.checkpoint_every)
 
     def run_fleet(self, trace, key=None, max_rounds=None,
                   max_server_epochs=None,
-                  store: Optional[ActivationStore] = None):
-        """Full Ampere pipeline with the device phase driven by a fleet
-        trace (see :mod:`repro.fleet`): trace-scheduled federated rounds,
-        then the usual one-shot consolidation + server phase."""
-        key = key if key is not None else jax.random.PRNGKey(self.run.seed)
-        dev, srv, aux = self._init_states(key)
-        dev_state = {"device": dev, "aux": aux}
-        dev_state = self.run_fleet_device_phase(dev_state, trace, max_rounds)
-        store = store or ActivationStore(
-            directory=(os.path.join(self.workdir, "acts")
-                       if self.workdir else None),
-            consolidated=self.consolidate,
-            quantize_int8=self.run.split.quantize_activations,
-            seed=self.run.seed)
-        self.generate_activations(dev_state, store, upload="parallel")
-        srv_state = self.run_server_phase(dev_state, srv, store,
-                                          max_server_epochs)
-        merged = splitting.merge_params(self.model, dev_state["device"],
-                                        srv_state["server"],
-                                        self.run.split.split_point)
-        return {"device_state": dev_state, "server_state": srv_state,
-                "merged_params": merged, "history": self.history}
+                  store: Optional[ActivationStore] = None,
+                  population=None):
+        """Deprecated shim: full trace-driven Ampere pipeline via the
+        unified :class:`repro.experiments.systems.AmpereSystem` adapter —
+        prefer :func:`repro.experiments.run_experiment` with a spec that
+        sets ``trace_path``/``fleet``.  ``population`` (the trace's
+        :class:`~repro.fleet.DeviceProfile` list) prices the one-shot
+        upload on each participant's own link."""
+        from repro.experiments.systems import SystemContext, get_system
+
+        ctx = SystemContext(
+            model=self.model, run_cfg=self.run, clients=self.clients,
+            eval_data=self.eval_data, trainer=self, trace=trace,
+            population=population, max_rounds=max_rounds,
+            max_server_epochs=max_server_epochs, key=key, store=store)
+        return get_system("ampere")().run(ctx)
 
     def _make_aux_eval(self):
         model, run = self.model, self.run
@@ -302,16 +274,19 @@ class AmpereTrainer:
     # Phase 4: one-shot activation generation + upload
     # ------------------------------------------------------------------
     def generate_activations(self, dev_state, store: ActivationStore,
-                             batch_size: int = 64, upload: str = "serial"):
+                             batch_size: int = 64, upload: str = "serial",
+                             client_bandwidth_bps=None):
         """``upload`` prices the one-shot transfer's simulated wall clock:
         ``"serial"`` — all bytes through one shared server link (legacy
         accounting); ``"parallel"`` — each device pushes its own shard on
-        its own link concurrently (fleet semantics), so the transfer takes
-        as long as the largest single-client shard.  Both price the
-        *actual* stored bytes (int8 quantization included); parallel mode
-        assumes the paper-testbed per-device link (BANDWIDTH_BPS) — a
-        conservative per-profile treatment would use the slowest
-        participating link."""
+        its own link concurrently (fleet semantics), so the transfer
+        takes as long as the slowest participating (shard, link) pair.
+        Both price the *actual* stored bytes (int8 quantization
+        included).  ``client_bandwidth_bps`` maps client_id -> link
+        bytes/s (e.g. from :class:`~repro.fleet.DeviceProfile`
+        ``bandwidth_bps``); without it parallel mode falls back to the
+        paper-testbed per-device link (``BANDWIDTH_BPS``), under which
+        the slowest pair is simply the largest shard."""
         model, run = self.model, self.run
         p = run.split.split_point
 
@@ -339,15 +314,23 @@ class AmpereTrainer:
                      lab_key: labels}
             store.submit(cid, shard)
         store.finish()
-        self.history["comm_bytes"] += store.bytes_received
         if upload == "parallel":
             n = max(store.num_samples(), 1)
             bytes_per_sample = store.bytes_received / n  # actual (incl int8)
-            biggest = max(len(c.dataset) for c in self.clients)
-            t_up = biggest * bytes_per_sample / comm_model.BANDWIDTH_BPS
+            if client_bandwidth_bps is not None:
+                # per-profile links: the transfer ends when the slowest
+                # (shard bytes / own link) participant finishes
+                t_up = max(
+                    len(c.dataset) * bytes_per_sample /
+                    client_bandwidth_bps.get(c.client_id,
+                                             comm_model.BANDWIDTH_BPS)
+                    for c in self.clients)
+            else:
+                biggest = max(len(c.dataset) for c in self.clients)
+                t_up = biggest * bytes_per_sample / comm_model.BANDWIDTH_BPS
         else:
             t_up = store.bytes_received / comm_model.BANDWIDTH_BPS
-        self.history["sim_time"] += t_up
+        self.runner.account(comm_bytes=store.bytes_received, sim_time=t_up)
         self.log.log(phase="transfer", bytes=store.bytes_received,
                      upload=upload)
         return store
@@ -368,13 +351,8 @@ class AmpereTrainer:
         """
         run = self.run
         srv_state = steps.init_server_state(self.model, run, srv_params)
-        start_epoch = 0
-        if self.ckpt is not None:
-            tree, meta = self.ckpt.restore()
-            if tree is not None and meta.get("phase") == "server":
-                srv_state = tree
-                start_epoch = meta["epoch"] + 1
-        stopper = evaluate.EarlyStopper(self.patience, mode="min")
+        srv_state, start_epoch = self.runner.restore("server", srv_state,
+                                                     step_name="epoch")
         merged_model = build_model(splitting.merged_config(self.model))
         eval_step = evaluate.make_eval_step(merged_model)
         epochs = max_epochs if max_epochs is not None else run.fed.server_epochs
@@ -392,7 +370,12 @@ class AmpereTrainer:
             srv_state = jax.tree.map(lambda a: jnp.array(a), srv_state)
 
         p = run.split.split_point
-        for epoch in range(start_epoch, epochs):
+        epoch_sim_time = comm_model.ampere_server_epoch_time(
+            self.model, run.split, comm_model.TimeModel(),
+            n_samples=store.num_samples(), seq_len=self._seq_len(),
+            sizes=self.sizes)
+
+        def body(srv_state, epoch, _plan):
             if resident:
                 idx = jnp.asarray(store.epoch_indices(bs))
                 srv_state, losses = self._server_epoch(srv_state, pool_dev,
@@ -411,45 +394,30 @@ class AmpereTrainer:
                                             srv_state["server"], p)
             val = evaluate.evaluate(merged_model, merged, self.eval_data,
                                     eval_step=eval_step)
-            self.history["server"].append(
-                {"epoch": epoch, "loss": float(np.mean(ls)),
-                 "val_loss": val["loss"], "val_acc": val["acc"]})
-            self.history["sim_time"] += comm_model.ampere_server_epoch_time(
-                self.model, run.split, comm_model.TimeModel(),
-                n_samples=store.num_samples(), seq_len=self._seq_len(),
-                sizes=self.sizes)
-            self.log.log(phase="server", epoch=epoch,
-                         loss=float(np.mean(ls)), **{f"val_{k}": v
-                                                     for k, v in val.items()})
-            if self.ckpt is not None and run.checkpoint_every and \
-                    epoch % run.checkpoint_every == 0:
-                self.ckpt.save_async(10_000 + epoch, srv_state,
-                                     {"phase": "server", "epoch": epoch})
-                self.journal.append({"phase": "server", "epoch": epoch})
-            if stopper.update(val["loss"]):
-                break
-        if self.ckpt is not None:
-            self.ckpt.wait()
-        return srv_state
+            return StepOutcome(
+                state=srv_state,
+                record={"epoch": epoch, "loss": float(np.mean(ls)),
+                        "val_loss": val["loss"], "val_acc": val["acc"]},
+                sim_time=epoch_sim_time)
+
+        return self.runner.run_phase(
+            "server", srv_state,
+            ((e, None) for e in range(start_epoch, epochs)),
+            body, history_key="server", monitor="val_loss",
+            checkpoint_every=run.checkpoint_every, ckpt_offset=10_000,
+            step_name="epoch")
 
     # ------------------------------------------------------------------
     def run_all(self, key=None, max_device_rounds=None, max_server_epochs=None,
                 store: Optional[ActivationStore] = None):
-        key = key if key is not None else jax.random.PRNGKey(self.run.seed)
-        dev, srv, aux = self._init_states(key)
-        dev_state = {"device": dev, "aux": aux}
-        dev_state = self.run_device_phase(dev_state, max_device_rounds)
-        store = store or ActivationStore(
-            directory=(os.path.join(self.workdir, "acts")
-                       if self.workdir else None),
-            consolidated=self.consolidate,
-            quantize_int8=self.run.split.quantize_activations,
-            seed=self.run.seed)
-        self.generate_activations(dev_state, store)
-        srv_state = self.run_server_phase(dev_state, srv, store,
-                                          max_server_epochs)
-        merged = splitting.merge_params(self.model, dev_state["device"],
-                                        srv_state["server"],
-                                        self.run.split.split_point)
-        return {"device_state": dev_state, "server_state": srv_state,
-                "merged_params": merged, "history": self.history}
+        """Deprecated shim: the paper's fixed-cohort pipeline via the
+        unified :class:`repro.experiments.systems.AmpereSystem` adapter —
+        prefer :func:`repro.experiments.run_experiment`."""
+        from repro.experiments.systems import SystemContext, get_system
+
+        ctx = SystemContext(
+            model=self.model, run_cfg=self.run, clients=self.clients,
+            eval_data=self.eval_data, trainer=self,
+            max_rounds=max_device_rounds,
+            max_server_epochs=max_server_epochs, key=key, store=store)
+        return get_system("ampere")().run(ctx)

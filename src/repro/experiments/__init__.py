@@ -1,0 +1,29 @@
+"""Unified declarative experiment API.
+
+``spec``    — frozen, JSON-serializable :class:`ExperimentSpec`.
+``systems`` — :class:`System` protocol + ``@register_system`` registry
+              (ampere, splitfed, splitfedv2, splitgp, scaffold, pipar,
+              fedavg).
+``runner``  — shared federated-loop machinery (checkpoint/resume,
+              journal, early stop, metrics, comm/sim-time accounting).
+``api``     — :func:`run_experiment`, the one entrypoint; CLI in
+              ``scripts/run_experiment.py``.
+
+See ``src/repro/experiments/README.md`` for the spec schema and how to
+add a system.
+"""
+
+from repro.experiments.api import resolve_trace, run_experiment
+from repro.experiments.runner import Runner, StepOutcome
+from repro.experiments.spec import (DataSpec, ExperimentSpec,
+                                    dataclass_from_dict, dataclass_to_dict)
+from repro.experiments.systems import (System, SystemContext, get_system,
+                                       list_systems, register_system,
+                                       replay_plan)
+
+__all__ = [
+    "DataSpec", "ExperimentSpec", "Runner", "StepOutcome", "System",
+    "SystemContext", "dataclass_from_dict", "dataclass_to_dict",
+    "get_system", "list_systems", "register_system", "replay_plan",
+    "resolve_trace", "run_experiment",
+]

@@ -1,0 +1,147 @@
+"""``run_experiment(spec)`` — one declarative entrypoint for every system.
+
+Resolves an :class:`~repro.experiments.spec.ExperimentSpec` into live
+objects (model from the arch registry, synthetic non-IID data, optional
+JSONL-loaded fleet trace + device population) and runs every listed
+system on them in sequence, writing one results directory with a
+``summary.json`` plus per-system history files.  The CLI wrapper is
+``scripts/run_experiment.py`` (``--dry-run`` validates the spec and the
+system registry without building anything).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional, Tuple
+
+from repro.experiments.spec import ExperimentSpec
+from repro.experiments.systems import SystemContext, get_system
+
+
+def _history_summary(history: dict) -> dict:
+    """Small cross-system summary of one history dict."""
+    out = {"comm_bytes": int(history.get("comm_bytes", 0)),
+           "sim_time_s": float(history.get("sim_time", 0.0))}
+    # precedence: server (Ampere's merged-model eval) > rounds > device
+    # (the device phase evaluates only the auxiliary head)
+    for key in ("server", "rounds", "device"):
+        recs = history.get(key)
+        if recs:
+            out[f"num_{key}"] = len(recs)
+            if "final_val_loss" not in out:
+                out["final_val_loss"] = recs[-1].get("val_loss")
+                out["final_val_acc"] = recs[-1].get("val_acc")
+    return out
+
+
+def resolve_trace(spec: ExperimentSpec, model, run_cfg, *,
+                  seq_len: int = 0) -> Tuple[Optional[object],
+                                             Optional[list]]:
+    """(trace, population) for a spec, or (None, None) without a fleet.
+
+    Prefers loading the JSONL at ``spec.trace_path``; otherwise simulates
+    a fresh trace from ``spec.fleet`` (priced with Ampere's per-round
+    latency, the schedule donor) and saves it to ``trace_path`` when one
+    is given — generate once, replay everywhere.
+    """
+    from repro.fleet import (FleetScheduler, FleetTrace, make_latency_fn,
+                             sample_population)
+
+    if spec.trace_path is None and spec.fleet is None:
+        return None, None
+    population = sample_population(spec.fleet) if spec.fleet is not None \
+        else None
+    rounds = spec.max_rounds if spec.max_rounds is not None \
+        else run_cfg.fed.device_epochs
+    if spec.trace_path is not None and os.path.exists(spec.trace_path):
+        trace = FleetTrace.load(spec.trace_path)
+        if len(trace.rounds) < rounds:
+            raise ValueError(
+                f"trace {spec.trace_path!r} has {len(trace.rounds)} rounds "
+                f"but the spec asks for {rounds}; regenerate it (delete the "
+                "file) or lower max_rounds — silently capping every system "
+                "at the shorter trace would skew the comparison")
+        return trace, population
+    if spec.fleet is None:
+        raise FileNotFoundError(
+            f"trace_path {spec.trace_path!r} missing and spec.fleet is null")
+    lat = make_latency_fn(model, run_cfg, algo="ampere", seq_len=seq_len)
+    trace = FleetScheduler(population, lat, spec.fleet).simulate(rounds)
+    if spec.trace_path is not None:
+        trace.save(spec.trace_path)
+    return trace, population
+
+
+def run_experiment(spec: ExperimentSpec, *, log_echo: bool = False,
+                   dry_run: bool = False, write_results: bool = True) -> dict:
+    """Run every system in ``spec.systems`` on one shared setup.
+
+    Returns ``{"spec", "results": {system: result}, "summary",
+    "results_dir"}`` where each system result carries the full
+    ``history`` (and model states for the systems that expose them).
+    With ``dry_run=True`` only validation + system resolution happen.
+    """
+    problems = spec.validate()
+    if problems:
+        raise ValueError("invalid ExperimentSpec:\n  - "
+                         + "\n  - ".join(problems))
+    systems = {name: get_system(name) for name in spec.systems}
+    if dry_run:
+        return {"spec": spec, "systems": list(systems), "valid": True}
+
+    import dataclasses
+
+    from repro.configs import registry
+    from repro.data import federate, make_dataset_for_model
+    from repro.models import build_model
+
+    # spec.arch is canonical; keep the (informational) run.arch in sync so
+    # the persisted summary never misrecords what was trained
+    if spec.run.arch != spec.arch:
+        spec = dataclasses.replace(
+            spec, run=dataclasses.replace(spec.run, arch=spec.arch))
+    cfg = registry.get_smoke_config(spec.arch) if spec.smoke \
+        else registry.get_config(spec.arch)
+    model = build_model(cfg)
+    data_kw = {"seq_len": spec.data.seq_len} if (
+        model.kind == "lm" and spec.data.seq_len) else {}
+    train = make_dataset_for_model(model, spec.data.train_samples,
+                                   seed=spec.data.train_seed, **data_kw)
+    eval_data = make_dataset_for_model(model, spec.data.eval_samples,
+                                       seed=spec.data.eval_seed, **data_kw)
+    clients = federate(train, spec.run.fed.num_clients,
+                       spec.run.fed.dirichlet_alpha,
+                       seed=spec.data.partition_seed)
+    seq = int(train.arrays["tokens"].shape[1]) if model.kind == "lm" else 0
+    trace, population = resolve_trace(spec, model, spec.run, seq_len=seq)
+
+    results_dir = spec.results_dir or os.path.join("results", spec.name)
+    results, summary = {}, {}
+    for name, sys_cls in systems.items():
+        workdir = os.path.join(results_dir, name) if spec.persist else None
+        ctx = SystemContext(
+            model=model, run_cfg=spec.run, clients=clients,
+            eval_data=eval_data, workdir=workdir, trace=trace,
+            population=population, max_rounds=spec.max_rounds,
+            max_server_epochs=spec.max_server_epochs,
+            patience=spec.patience, log_echo=log_echo)
+        system = sys_cls()
+        system.on_start(ctx)
+        result = system.run(ctx)
+        system.on_finish(ctx, result)
+        results[name] = result
+        summary[name] = _history_summary(result["history"])
+
+    out = {"spec": spec, "results": results, "summary": summary,
+           "results_dir": results_dir}
+    if write_results:
+        os.makedirs(results_dir, exist_ok=True)
+        with open(os.path.join(results_dir, "summary.json"), "w") as f:
+            json.dump({"spec": spec.to_dict(), "summary": summary},
+                      f, indent=1)
+        for name, result in results.items():
+            with open(os.path.join(results_dir, f"{name}_history.json"),
+                      "w") as f:
+                json.dump(result["history"], f, indent=1)
+    return out

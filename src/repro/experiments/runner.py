@@ -1,0 +1,140 @@
+"""Shared federated-loop machinery.
+
+Every trainer in this repo used to hand-roll the same host loop: restore
+the latest checkpoint for its phase, iterate rounds/epochs, append a
+history record, accumulate comm-bytes / simulated wall-clock, emit a
+metrics line, checkpoint + journal periodically, early-stop on a
+validation metric, and join the async checkpoint writer on exit.  That
+machinery now lives here, once: a :class:`Runner` owns the
+:class:`~repro.runtime.metrics.MetricsLogger`,
+:class:`~repro.runtime.checkpoint.Checkpointer`,
+:class:`~repro.runtime.fault_tolerance.RoundJournal` and the shared
+``history`` dict, and :meth:`Runner.run_phase` drives one phase given a
+*body* callback that does only the step math.
+
+The body returns a :class:`StepOutcome`: the new loop-carried state, the
+history record (which must contain the monitored key when early stopping
+is on), and the per-step accounting.  Trainers
+(:class:`repro.core.uit.AmpereTrainer`,
+:class:`repro.core.baselines.SFLTrainer`,
+:class:`repro.core.baselines.FedAvgTrainer`) are thin adapters over the
+jitted steps; systems (:mod:`repro.experiments.systems`) compose phases
+into full pipelines.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, Iterable, Optional, Tuple
+
+from repro.core import evaluate
+from repro.runtime.checkpoint import Checkpointer
+from repro.runtime.fault_tolerance import RoundJournal
+from repro.runtime.metrics import MetricsLogger
+
+
+@dataclasses.dataclass
+class StepOutcome:
+    """What one loop step hands back to the :class:`Runner`.
+
+    ``record`` is appended verbatim to ``history[history_key]`` (and must
+    carry the monitored key when early stopping is enabled); ``log``
+    holds extra log-only fields that should not enter the history.
+    """
+
+    state: Any
+    record: dict
+    comm_bytes: int = 0
+    sim_time: float = 0.0
+    log: dict = dataclasses.field(default_factory=dict)
+
+
+class Runner:
+    """Owns the cross-cutting pieces of every federated training loop.
+
+    One Runner is shared by all phases of one experiment run: the
+    ``history`` dict accumulates ``comm_bytes`` / ``sim_time`` across
+    phases (Ampere's device + transfer + server accounting lands in one
+    place), and the checkpoint/journal pair is phase-tagged so a
+    restarted coordinator resumes exactly where the dead one stopped.
+    """
+
+    def __init__(self, workdir: Optional[str] = None, *,
+                 patience: int = 15, log_echo: bool = False,
+                 log_name: str = "metrics.jsonl",
+                 history: Optional[dict] = None):
+        self.workdir = workdir
+        self.patience = patience
+        self.log = MetricsLogger(
+            os.path.join(workdir, log_name) if workdir else None,
+            echo=log_echo)
+        self.ckpt = Checkpointer(os.path.join(workdir, "ckpt")) if workdir \
+            else None
+        self.journal = RoundJournal(os.path.join(workdir, "journal.jsonl")) \
+            if workdir else None
+        self.history = history if history is not None else {}
+        self.history.setdefault("comm_bytes", 0)
+        self.history.setdefault("sim_time", 0.0)
+
+    # ------------------------------------------------------------------
+    def restore(self, phase: str, state, *, step_name: str = "round"
+                ) -> Tuple[Any, int]:
+        """(state, first_step) from the latest checkpoint of ``phase``.
+
+        Looks up the newest checkpoint *tagged with this phase* (not
+        whichever phase wrote last), so a coordinator restarted after a
+        later phase began still resumes each phase from its own newest
+        state; checkpoints of other phases are never resurrected.
+        """
+        if self.ckpt is None:
+            return state, 0
+        step = self.ckpt.latest_step(lambda m: m.get("phase") == phase)
+        if step is None:
+            return state, 0
+        tree, meta = self.ckpt.restore(step)
+        return tree, meta[step_name] + 1
+
+    def account(self, *, comm_bytes: int = 0, sim_time: float = 0.0):
+        """Out-of-loop accounting (e.g. the one-shot activation upload)."""
+        self.history["comm_bytes"] += comm_bytes
+        self.history["sim_time"] += sim_time
+
+    # ------------------------------------------------------------------
+    def run_phase(self, phase: str, state,
+                  plans: Iterable[Tuple[int, Any]],
+                  body: Callable[[Any, int, Any], StepOutcome], *,
+                  history_key: str, monitor: Optional[str] = None,
+                  mode: str = "min", checkpoint_every: int = 0,
+                  ckpt_offset: int = 0, step_name: str = "round",
+                  patience: Optional[int] = None):
+        """Drive one phase.
+
+        ``plans`` yields ``(step_idx, plan)`` pairs — a plain
+        ``range``-derived generator for i.i.d. cohort sampling, or a
+        fleet trace's :class:`~repro.fleet.RoundPlan`s for shared-trace
+        replay.  ``body(state, step_idx, plan)`` does the step math and
+        returns a :class:`StepOutcome`; everything else (history,
+        accounting, logging, checkpointing, journaling, early stopping,
+        the final async-writer join) happens here.
+        """
+        self.history.setdefault(history_key, [])
+        stopper = evaluate.EarlyStopper(
+            self.patience if patience is None else patience, mode=mode)
+        for step_idx, plan in plans:
+            out = body(state, step_idx, plan)
+            state = out.state
+            self.history[history_key].append(out.record)
+            self.history["comm_bytes"] += out.comm_bytes
+            self.history["sim_time"] += out.sim_time
+            self.log.log(phase=phase, **out.record, **out.log)
+            if self.ckpt is not None and checkpoint_every and \
+                    step_idx % checkpoint_every == 0:
+                self.ckpt.save_async(ckpt_offset + step_idx, state,
+                                     {"phase": phase, step_name: step_idx})
+                self.journal.append({"phase": phase, step_name: step_idx})
+            if monitor is not None and stopper.update(out.record[monitor]):
+                break
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return state

@@ -1,0 +1,201 @@
+"""Declarative experiment specification.
+
+An :class:`ExperimentSpec` is *plain data*: system names (registry keys
+from :mod:`repro.experiments.systems`), an architecture id (resolved
+through :mod:`repro.configs.registry`), the :class:`~repro.configs.base.
+RunConfig` bundle, a synthetic-data spec, an optional fleet section
+(JSONL trace path and/or a :class:`~repro.fleet.FleetConfig` the trace
+and device population are regenerated from), and round/epoch budgets.
+It serializes losslessly to JSON (``to_json`` / ``from_json``), so one
+committed file can drive Ampere, the SFL family, and FedAvg over a
+single shared fleet trace via :func:`repro.experiments.run_experiment`
+or ``scripts/run_experiment.py``.
+
+Nothing here touches jax device state; the codec is generic over the
+frozen config dataclasses (nested dataclasses recurse, JSON lists come
+back as tuples), so new config fields serialize without codec changes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import typing
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+from repro.configs.base import RunConfig
+from repro.fleet.profiles import FleetConfig
+
+
+# ---------------------------------------------------------------------------
+# generic frozen-dataclass <-> JSON-dict codec
+# ---------------------------------------------------------------------------
+
+
+def _tuplify(value):
+    """JSON arrays -> (nested) tuples, matching the frozen configs."""
+    if isinstance(value, list):
+        return tuple(_tuplify(v) for v in value)
+    return value
+
+
+def _unwrap_optional(tp):
+    origin = typing.get_origin(tp)
+    if origin is typing.Union:
+        args = [a for a in typing.get_args(tp) if a is not type(None)]
+        if len(args) == 1:
+            return args[0]
+    return tp
+
+
+def dataclass_from_dict(cls, data: dict):
+    """Build ``cls`` from a (possibly partial) plain dict.
+
+    Missing fields keep their dataclass defaults; nested dataclass
+    fields recurse; list values become tuples.  Unknown keys raise so a
+    typo in a committed spec fails loudly instead of silently using the
+    default.
+    """
+    if not isinstance(data, dict):
+        raise TypeError(f"{cls.__name__} spec section must be a dict, "
+                        f"got {type(data).__name__}")
+    hints = typing.get_type_hints(cls)
+    names = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(data) - names
+    if unknown:
+        raise KeyError(f"unknown {cls.__name__} field(s): {sorted(unknown)}")
+    kwargs = {}
+    for f in dataclasses.fields(cls):
+        if f.name not in data:
+            continue
+        value = data[f.name]
+        tp = _unwrap_optional(hints[f.name])
+        if dataclasses.is_dataclass(tp) and isinstance(value, dict):
+            value = dataclass_from_dict(tp, value)
+        else:
+            value = _tuplify(value)
+        kwargs[f.name] = value
+    return cls(**kwargs)
+
+
+def dataclass_to_dict(obj) -> dict:
+    """``dataclasses.asdict`` (tuples serialize as JSON arrays)."""
+    return dataclasses.asdict(obj)
+
+
+# ---------------------------------------------------------------------------
+# the spec
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DataSpec:
+    """Synthetic dataset + Dirichlet partition seeds/sizes.
+
+    The partition shape itself (num_clients, dirichlet_alpha) lives in
+    ``run.fed`` so data and cohort topology can never disagree.
+    """
+
+    train_samples: int = 1536
+    eval_samples: int = 384
+    seq_len: int = 0            # LM archs only; 0 = dataset default
+    train_seed: int = 0
+    eval_seed: int = 1
+    partition_seed: int = 0
+
+
+@dataclass(frozen=True)
+class ExperimentSpec:
+    """One declarative experiment: systems x (model, data, trace, budgets).
+
+    ``systems`` may name several registry entries — they share the model
+    init seed, the partitioned data, and (when ``trace_path``/``fleet``
+    is set) one fleet trace, which is exactly the paper's comparative
+    setup.  ``fleet`` doubles as the population description used to
+    re-price the shared trace for each baseline's per-round exchange.
+    """
+
+    name: str = "experiment"
+    systems: Tuple[str, ...] = ("ampere",)
+    arch: str = "mobilenet-l"
+    smoke: bool = True               # registry smoke config vs full config
+    run: RunConfig = field(default_factory=RunConfig)
+    data: DataSpec = field(default_factory=DataSpec)
+    # fleet-trace replay (optional): load a JSONL trace, or simulate one
+    # from ``fleet`` (saved to ``trace_path`` when given, so the schedule
+    # is generated once and replayed everywhere)
+    trace_path: Optional[str] = None
+    fleet: Optional[FleetConfig] = None
+    # budgets
+    max_rounds: Optional[int] = None          # None = run.fed.device_epochs
+    max_server_epochs: Optional[int] = None   # None = run.fed.server_epochs
+    patience: int = 15
+    # outputs
+    results_dir: Optional[str] = None         # None = results/<name>
+    persist: bool = False       # give each system a workdir (ckpt + journal)
+
+    # ------------------------------------------------------------------
+    def to_dict(self) -> dict:
+        return dataclass_to_dict(self)
+
+    def to_json(self, indent: int = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_dict(cls, data: dict) -> "ExperimentSpec":
+        return dataclass_from_dict(cls, data)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path: str):
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "ExperimentSpec":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    # ------------------------------------------------------------------
+    def validate(self) -> list:
+        """Return a list of human-readable problems (empty = valid)."""
+        from repro.configs import registry
+        from repro.experiments.systems import list_systems
+
+        problems = []
+        if not self.name:
+            problems.append("spec.name must be non-empty")
+        if not self.systems:
+            problems.append("spec.systems must name at least one system")
+        known = set(list_systems())
+        for s in self.systems:
+            if s not in known:
+                problems.append(
+                    f"unknown system {s!r}; registered: {sorted(known)}")
+        if self.arch not in registry.list_archs():
+            problems.append(f"unknown arch {self.arch!r}; known: "
+                            f"{registry.list_archs()}")
+        if self.data.train_samples <= 0 or self.data.eval_samples <= 0:
+            problems.append("data.train_samples / eval_samples must be > 0")
+        if self.max_rounds is not None and self.max_rounds < 1:
+            problems.append("max_rounds must be >= 1 (or null)")
+        if self.max_server_epochs is not None and self.max_server_epochs < 1:
+            problems.append("max_server_epochs must be >= 1 (or null)")
+        if self.run.fed.num_clients < self.run.fed.clients_per_round:
+            problems.append("run.fed.num_clients < clients_per_round")
+        if self.fleet is not None and \
+                self.fleet.n_devices != self.run.fed.num_clients:
+            problems.append(
+                f"fleet.n_devices ({self.fleet.n_devices}) must equal "
+                f"run.fed.num_clients ({self.run.fed.num_clients}) — trace "
+                "device ids index the federated clients")
+        if self.trace_path is not None and self.fleet is None:
+            import os
+            if not os.path.exists(self.trace_path):
+                problems.append(
+                    f"trace_path {self.trace_path!r} does not exist and no "
+                    "fleet config was given to regenerate it")
+        return problems

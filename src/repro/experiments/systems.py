@@ -1,0 +1,272 @@
+"""System registry: every trainable algorithm behind one protocol.
+
+A *system* is one end-to-end training pipeline — Ampere's three phases,
+an SFL-family baseline's round loop, or classic FedAvg.  Each is a thin
+adapter over the existing jitted steps: the trainers in
+:mod:`repro.core` own step construction and per-phase loops (driven by
+the shared :class:`repro.experiments.runner.Runner`), and the system's
+:meth:`System.run` composes them into the full pipeline for one
+:class:`SystemContext`.
+
+Registering a new system is ~50 lines: write the round-step logic (see
+``make_sfl_round_step`` for the idiom), subclass :class:`System`, and
+decorate with ``@register_system("name")`` — it is then addressable from
+any :class:`~repro.experiments.spec.ExperimentSpec`, shares the Runner's
+checkpoint/resume/early-stop/accounting machinery, and can replay any
+fleet trace.
+
+The legacy entrypoints (``AmpereTrainer.run_all`` / ``run_fleet``,
+``SFLTrainer.run_rounds``, ``FedAvgTrainer.run_rounds``) are shims over
+these adapters, so both surfaces stay history-identical by construction
+(asserted by ``tests/test_experiments.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Dict, List, Optional, Type
+
+import jax
+
+from repro.data.activation_store import ActivationStore
+from repro.fleet.profiles import make_latency_fn, trace_round_times
+
+
+@dataclasses.dataclass
+class SystemContext:
+    """Everything a system needs to run, resolved to live objects.
+
+    Built by :func:`repro.experiments.api.run_experiment` from a spec, or
+    synthesized by the legacy trainer shims from their constructor args.
+    """
+
+    model: Any
+    run_cfg: Any
+    clients: List[Any]
+    eval_data: Any
+    workdir: Optional[str] = None
+    trace: Any = None              # FleetTrace: shared-schedule replay
+    population: Any = None         # Sequence[DeviceProfile]: trace pricing
+    max_rounds: Optional[int] = None
+    max_server_epochs: Optional[int] = None
+    patience: int = 15
+    log_echo: bool = False
+    key: Any = None                # model-init PRNG key (None = from seed)
+    store: Any = None              # pre-built ActivationStore (Ampere only)
+    trainer: Any = None            # reuse a live trainer (legacy shims)
+
+    @property
+    def seq_len(self) -> int:
+        if self.model.kind != "lm":
+            return 0
+        return int(self.clients[0].dataset.arrays["tokens"].shape[1])
+
+
+class System:
+    """Protocol every registered system implements.
+
+    ``init_state(ctx, key)`` builds the initial trainable state;
+    ``run(ctx)`` executes the full pipeline and returns a result dict
+    whose ``"history"`` entry follows the shared schema (per-round /
+    per-epoch records + ``comm_bytes`` + ``sim_time``).  ``on_start`` /
+    ``on_finish`` are lifecycle hooks subclasses may override (the
+    default implementation does nothing).
+    """
+
+    name: str = "?"
+
+    def init_state(self, ctx: SystemContext, key):
+        raise NotImplementedError
+
+    def run(self, ctx: SystemContext) -> dict:
+        raise NotImplementedError
+
+    # lifecycle hooks -------------------------------------------------
+    def on_start(self, ctx: SystemContext):
+        pass
+
+    def on_finish(self, ctx: SystemContext, result: dict):
+        pass
+
+
+_REGISTRY: Dict[str, Type[System]] = {}
+
+
+def register_system(name: str):
+    """Class decorator: make a :class:`System` spec-addressable."""
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def get_system(name: str) -> Type[System]:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown system {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_systems() -> list:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# shared-trace replay pricing
+# ---------------------------------------------------------------------------
+
+
+def replay_plan(ctx: SystemContext, *, algo: str) -> Optional[list]:
+    """Cohort plan replaying ``ctx.trace`` under ``algo``'s cost model.
+
+    The trace was scheduled once (who is online, who is picked, who
+    drops); each baseline re-prices every round's wall-clock for its own
+    per-round exchange on the same device profiles — synchronous round =
+    slowest surviving participant.  Without a population the plan falls
+    back to the replaying trainer's analytic pricing (``as_cohort``
+    deliberately drops the trace's Ampere-priced round_time).
+    """
+    if ctx.trace is None:
+        return None
+    if ctx.population is None:
+        return [p.as_cohort() for p in ctx.trace.rounds]
+    lat = make_latency_fn(ctx.model, ctx.run_cfg, algo=algo,
+                          seq_len=ctx.seq_len)
+    times = trace_round_times(ctx.trace, ctx.population, lat)
+    return [dict(p.as_cohort(), round_time=t)
+            for p, t in zip(ctx.trace.rounds, times)]
+
+
+# ---------------------------------------------------------------------------
+# adapters
+# ---------------------------------------------------------------------------
+
+
+@register_system("ampere")
+class AmpereSystem(System):
+    """The paper's system: federated device phase (trace-driven or i.i.d.
+    cohorts), one-shot activation consolidation, centralized server
+    phase."""
+
+    def _trainer(self, ctx: SystemContext):
+        from repro.core.uit import AmpereTrainer
+        if ctx.trainer is not None:
+            return ctx.trainer
+        return AmpereTrainer(ctx.model, ctx.run_cfg, ctx.clients,
+                             ctx.eval_data, workdir=ctx.workdir,
+                             patience=ctx.patience, log_echo=ctx.log_echo)
+
+    def init_state(self, ctx: SystemContext, key):
+        tr = self._trainer(ctx)
+        dev, srv, aux = tr._init_states(key)
+        return {"device": dev, "aux": aux}, srv
+
+    def run(self, ctx: SystemContext) -> dict:
+        from repro.core import splitting
+
+        tr = self._trainer(ctx)
+        key = ctx.key if ctx.key is not None \
+            else jax.random.PRNGKey(tr.run.seed)
+        dev, srv, aux = tr._init_states(key)
+        dev_state = {"device": dev, "aux": aux}
+        if ctx.trace is not None:
+            dev_state = tr.run_fleet_device_phase(dev_state, ctx.trace,
+                                                  ctx.max_rounds)
+        else:
+            dev_state = tr.run_device_phase(dev_state, ctx.max_rounds)
+        store = ctx.store or ActivationStore(
+            directory=(os.path.join(tr.workdir, "acts")
+                       if tr.workdir else None),
+            consolidated=tr.consolidate,
+            quantize_int8=tr.run.split.quantize_activations,
+            seed=tr.run.seed)
+        bw = None
+        if ctx.population is not None:
+            bw = {p.device_id: p.bandwidth_bps for p in ctx.population}
+        tr.generate_activations(
+            dev_state, store,
+            upload="parallel" if ctx.trace is not None else "serial",
+            client_bandwidth_bps=bw)
+        srv_state = tr.run_server_phase(dev_state, srv, store,
+                                        ctx.max_server_epochs)
+        merged = splitting.merge_params(tr.model, dev_state["device"],
+                                        srv_state["server"],
+                                        tr.run.split.split_point)
+        return {"device_state": dev_state, "server_state": srv_state,
+                "merged_params": merged, "history": tr.history}
+
+
+class SFLSystem(System):
+    """SFL-family baselines: per-iteration activation/gradient exchange,
+    one shared round loop (see ``make_sfl_round_step`` variants)."""
+
+    variant = "splitfed"
+
+    def _trainer(self, ctx: SystemContext):
+        from repro.core.baselines import SFLTrainer
+        if ctx.trainer is not None:
+            return ctx.trainer
+        return SFLTrainer(ctx.model, ctx.run_cfg, ctx.clients,
+                          ctx.eval_data, variant=self.variant,
+                          workdir=ctx.workdir, patience=ctx.patience,
+                          log_echo=ctx.log_echo)
+
+    def init_state(self, ctx: SystemContext, key):
+        return self._trainer(ctx)._init_state(key)
+
+    def run(self, ctx: SystemContext) -> dict:
+        tr = self._trainer(ctx)
+        plan = replay_plan(ctx, algo=self.variant)
+        rounds = ctx.max_rounds if ctx.max_rounds is not None \
+            else tr.run.fed.device_epochs
+        return tr.run_rounds(rounds, key=ctx.key, cohort_plan=plan)
+
+
+@register_system("splitfed")
+class SplitFedSystem(SFLSystem):
+    variant = "splitfed"
+
+
+@register_system("splitfedv2")
+class SplitFedV2System(SFLSystem):
+    variant = "splitfedv2"
+
+
+@register_system("splitgp")
+class SplitGPSystem(SFLSystem):
+    variant = "splitgp"
+
+
+@register_system("scaffold")
+class ScaffoldSystem(SFLSystem):
+    variant = "scaffold"
+
+
+@register_system("pipar")
+class PiParSystem(SFLSystem):
+    variant = "pipar"
+
+
+@register_system("fedavg")
+class FedAvgSystem(System):
+    """Classic FL: the whole model trains on-device, FedAvg'd per round."""
+
+    def _trainer(self, ctx: SystemContext):
+        from repro.core.baselines import FedAvgTrainer
+        if ctx.trainer is not None:
+            return ctx.trainer
+        return FedAvgTrainer(ctx.model, ctx.run_cfg, ctx.clients,
+                             ctx.eval_data, workdir=ctx.workdir,
+                             patience=ctx.patience, log_echo=ctx.log_echo)
+
+    def init_state(self, ctx: SystemContext, key):
+        return ctx.model.init(key)
+
+    def run(self, ctx: SystemContext) -> dict:
+        tr = self._trainer(ctx)
+        plan = replay_plan(ctx, algo="fedavg")
+        rounds = ctx.max_rounds if ctx.max_rounds is not None \
+            else tr.run.fed.device_epochs
+        return tr.run_rounds(rounds, key=ctx.key, cohort_plan=plan)

@@ -81,6 +81,68 @@ class FleetTrace:
     def total_time(self) -> float:
         return self.rounds[-1].t_end if self.rounds else 0.0
 
+    # ------------------------------------------------------------------
+    # JSONL (de)serialization — generate a schedule once, replay it
+    # anywhere (floats round-trip exactly through repr, so a loaded trace
+    # replays byte-identical rounds)
+    # ------------------------------------------------------------------
+    def save(self, path: str, *, events: bool = True):
+        """Stream the trace to JSONL: one header line, one line per
+        round, then (optionally) one line per raw scheduler event.
+        Round records stream out one at a time — a multi-million-device
+        schedule never needs to materialize a second copy in memory."""
+        import json
+        import os
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            f.write(json.dumps({"kind": "header",
+                                "format": "fleet-trace-v1",
+                                "num_rounds": len(self.rounds)}) + "\n")
+            for p in self.rounds:
+                f.write(json.dumps({
+                    "kind": "round", "round_idx": p.round_idx,
+                    "t_start": p.t_start, "t_end": p.t_end,
+                    "clients": list(p.clients),
+                    "weights": list(p.weights),
+                    "dropped": list(p.dropped),
+                    "cohort_size": p.cohort_size,
+                    "round_time": p.round_time}) + "\n")
+            if events:
+                for t, kind, dev, rnd in self.events:
+                    f.write(json.dumps({"kind": "event", "t": t, "e": kind,
+                                        "dev": dev, "round": rnd}) + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "FleetTrace":
+        """Stream a JSONL trace back; tolerates event lines being absent
+        (``save(events=False)``) and ignores unknown record kinds so the
+        format can grow."""
+        import json
+        rounds: List[RoundPlan] = []
+        events: List[Tuple[float, str, int, int]] = []
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                rec = json.loads(line)
+                kind = rec.get("kind")
+                if kind == "round":
+                    rounds.append(RoundPlan(
+                        round_idx=int(rec["round_idx"]),
+                        t_start=float(rec["t_start"]),
+                        t_end=float(rec["t_end"]),
+                        clients=tuple(int(c) for c in rec["clients"]),
+                        weights=tuple(float(w) for w in rec["weights"]),
+                        dropped=tuple(int(d) for d in rec["dropped"]),
+                        cohort_size=int(rec["cohort_size"]),
+                        round_time=float(rec["round_time"])))
+                elif kind == "event":
+                    events.append((float(rec["t"]), str(rec["e"]),
+                                   int(rec["dev"]), int(rec["round"])))
+        return cls(rounds=rounds, events=events,
+                   cohort_sizes=[p.cohort_size for p in rounds])
+
 
 class _Round:
     """Mutable state of the round currently in flight."""

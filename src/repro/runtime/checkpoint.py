@@ -37,12 +37,13 @@ def _flatten(tree):
             for k, v in t.items():
                 rec(f"{prefix}/{k}" if prefix else str(k), v)
         elif isinstance(t, (list, tuple)):
-            flat[f"{prefix}/__len__"] = np.asarray(
+            flat[f"{prefix}/__len__" if prefix else "__len__"] = np.asarray(
                 [len(t), int(isinstance(t, tuple))])
             for i, v in enumerate(t):
-                rec(f"{prefix}/{i}", v)
+                rec(f"{prefix}/{i}" if prefix else str(i), v)
         elif t is None:
-            flat[f"{prefix}/__none__"] = np.asarray(0)
+            flat[f"{prefix}/__none__" if prefix else "__none__"] = \
+                np.asarray(0)
         else:
             flat[prefix] = np.asarray(t)
     rec("", tree)
@@ -96,9 +97,25 @@ class Checkpointer:
                 out.append((int(m.group(1)), os.path.join(self.dir, d)))
         return sorted(out)
 
-    def latest_step(self) -> Optional[int]:
+    def _meta_of(self, d: str) -> dict:
+        try:
+            with open(os.path.join(d, "meta.json")) as f:
+                return json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return {}
+
+    def latest_step(self, predicate=None) -> Optional[int]:
+        """Newest step on disk; with ``predicate`` (meta dict -> bool),
+        the newest step whose metadata matches — phase-aware restarts
+        resume each phase from ITS latest checkpoint, not whichever
+        phase happened to write last."""
         dirs = self._step_dirs()
-        return dirs[-1][0] if dirs else None
+        if predicate is None:
+            return dirs[-1][0] if dirs else None
+        for step, d in reversed(dirs):
+            if predicate(self._meta_of(d)):
+                return step
+        return None
 
     # ------------------------------------------------------------------
     def save(self, step: int, tree, metadata: Optional[dict] = None):
@@ -133,9 +150,17 @@ class Checkpointer:
         self._gc()
 
     def _gc(self):
-        dirs = self._step_dirs()
-        for _, d in dirs[:-self.keep] if self.keep else []:
-            shutil.rmtree(d, ignore_errors=True)
+        """Keep the newest ``keep`` checkpoints PER PHASE (meta "phase",
+        absent = one shared group), so a later phase's saves never evict
+        an earlier phase's resume point."""
+        if not self.keep:
+            return
+        by_phase: dict = {}
+        for step, d in self._step_dirs():
+            by_phase.setdefault(self._meta_of(d).get("phase"), []).append(d)
+        for dirs in by_phase.values():
+            for d in dirs[:-self.keep]:
+                shutil.rmtree(d, ignore_errors=True)
 
     # ------------------------------------------------------------------
     def restore(self, step: Optional[int] = None):

@@ -1,0 +1,399 @@
+"""Unified experiment API: spec JSON round-trip, system registry,
+trace JSONL round-trip, per-profile upload pricing, and parity between
+the declarative ``run_experiment`` path and the legacy trainer
+entrypoints.  Note the parity tests pin the spec->model/data/system
+resolution plumbing against the trainer surface — both sides share the
+Runner implementation by construction, so behavioral drift of the loop
+machinery itself is guarded by the pre-existing integration tests
+(test_steps_integration, test_fleet, test_server_epoch), which encode
+the pre-redesign trainers' expected histories and resume semantics."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig, OptimConfig, RunConfig, replace
+from repro.experiments import (DataSpec, ExperimentSpec, list_systems,
+                               run_experiment)
+from repro.fleet import FleetConfig, FleetScheduler, FleetTrace, \
+    sample_population
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+ARCH = "vit-s"
+
+
+def _run_cfg(num_clients=6, clients_per_round=3):
+    return RunConfig(
+        arch=ARCH,
+        fed=FedConfig(num_clients=num_clients,
+                      clients_per_round=clients_per_round, local_steps=2,
+                      device_batch_size=4, server_batch_size=8,
+                      dirichlet_alpha=0.5),
+        optim=OptimConfig(name="momentum", lr=0.1, schedule="inverse_time",
+                          decay_gamma=0.01))
+
+
+def _spec(**kw):
+    base = dict(name="t", systems=("ampere",), arch=ARCH,
+                run=_run_cfg(), data=DataSpec(train_samples=144,
+                                              eval_samples=48),
+                max_rounds=2, max_server_epochs=1, patience=50)
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+def _legacy_setup(spec):
+    from repro.configs import registry
+    from repro.data import federate, make_dataset_for_model
+    from repro.models import build_model
+
+    model = build_model(registry.get_smoke_config(spec.arch))
+    train = make_dataset_for_model(model, spec.data.train_samples,
+                                   seed=spec.data.train_seed)
+    test = make_dataset_for_model(model, spec.data.eval_samples,
+                                  seed=spec.data.eval_seed)
+    clients = federate(train, spec.run.fed.num_clients,
+                       spec.run.fed.dirichlet_alpha,
+                       seed=spec.data.partition_seed)
+    return model, test, clients
+
+
+# ---------------------------------------------------------------------------
+# spec: JSON round-trip + validation + registry
+# ---------------------------------------------------------------------------
+
+
+def test_spec_json_roundtrip_nested():
+    spec = _spec(
+        systems=("ampere", "splitfed", "scaffold", "fedavg"),
+        trace_path="/tmp/nowhere.jsonl",
+        fleet=FleetConfig(n_devices=6, class_mix=(("jetson-fast", 0.5),
+                                                  ("phone-3g", 0.5)),
+                          deadline_factor=2.0),
+        results_dir="results/t")
+    j = spec.to_json()
+    back = ExperimentSpec.from_json(j)
+    assert back == spec                      # frozen dataclass equality
+    # tuples (incl. nested class_mix) survive the JSON list round-trip
+    assert isinstance(back.systems, tuple)
+    assert back.fleet.class_mix == spec.fleet.class_mix
+    # and a second round-trip is byte-stable
+    assert back.to_json() == j
+
+
+def test_spec_partial_dict_keeps_defaults_and_rejects_typos():
+    spec = ExperimentSpec.from_dict(
+        {"name": "x", "run": {"fed": {"num_clients": 9,
+                                      "clients_per_round": 3}}})
+    assert spec.run.fed.num_clients == 9
+    assert spec.run.fed.local_steps == FedConfig().local_steps
+    assert spec.run.optim == OptimConfig()
+    with pytest.raises(KeyError):
+        ExperimentSpec.from_dict({"name": "x", "sytems": ["ampere"]})
+    with pytest.raises(KeyError):
+        ExperimentSpec.from_dict({"run": {"fed": {"num_cilents": 9}}})
+
+
+def test_spec_validation_reports_problems():
+    assert _spec().validate() == []
+    bad = _spec(systems=("ampere", "nope"), arch="zzz",
+                max_rounds=0,
+                fleet=FleetConfig(n_devices=99))
+    problems = "\n".join(bad.validate())
+    assert "nope" in problems
+    assert "zzz" in problems
+    assert "max_rounds" in problems
+    assert "n_devices" in problems
+    with pytest.raises(ValueError):
+        run_experiment(bad, dry_run=True)
+
+
+def test_registry_covers_all_systems():
+    assert list_systems() == ["ampere", "fedavg", "pipar", "scaffold",
+                              "splitfed", "splitfedv2", "splitgp"]
+    out = run_experiment(_spec(systems=tuple(list_systems())), dry_run=True)
+    assert out["valid"] and len(out["systems"]) == 7
+
+
+# ---------------------------------------------------------------------------
+# fleet trace JSONL round-trip
+# ---------------------------------------------------------------------------
+
+
+def _small_trace(n_rounds=6):
+    cfg = FleetConfig(n_devices=12, seed=0, dropout_hazard=0.05,
+                      deadline_factor=2.5, min_cohort=2, max_cohort=8,
+                      init_cohort=4, target_round_time_factor=1.5)
+    pop = sample_population(cfg)
+    return FleetScheduler(pop, lambda p: 1.0 / p.speed_factor,
+                          cfg).simulate(n_rounds)
+
+
+def test_trace_jsonl_roundtrip(tmp_path):
+    trace = _small_trace()
+    path = str(tmp_path / "trace.jsonl")
+    trace.save(path)
+    back = FleetTrace.load(path)
+    assert back.rounds == trace.rounds       # exact: floats repr-round-trip
+    assert back.events == trace.events
+    assert back.cohort_sizes == trace.cohort_sizes
+    assert back.total_time == trace.total_time
+    # header + one line per round + one per event
+    with open(path) as f:
+        lines = [json.loads(l) for l in f if l.strip()]
+    assert lines[0]["kind"] == "header"
+    assert lines[0]["num_rounds"] == len(trace.rounds)
+    assert sum(1 for l in lines if l["kind"] == "round") == len(trace.rounds)
+
+
+def test_resolve_trace_rejects_shorter_saved_trace(tmp_path):
+    from repro.experiments import resolve_trace
+
+    path = str(tmp_path / "short.jsonl")
+    _small_trace(2).save(path)
+    spec = _spec(trace_path=path, max_rounds=5,
+                 run=_run_cfg(num_clients=12, clients_per_round=4),
+                 fleet=FleetConfig(n_devices=12))
+    with pytest.raises(ValueError, match="2 rounds"):
+        resolve_trace(spec, model=None, run_cfg=spec.run)
+    # a trace at least as long as the budget is fine
+    spec_ok = replace(spec, max_rounds=2)
+    trace, pop = resolve_trace(spec_ok, model=None, run_cfg=spec_ok.run)
+    assert len(trace.rounds) == 2 and len(pop) == 12
+
+
+def test_checkpointer_keeps_latest_per_phase(tmp_path):
+    from repro.runtime.checkpoint import Checkpointer
+
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for r in range(4):
+        ck.save(r, {"x": np.full(2, r)}, {"phase": "device", "round": r})
+    for e in range(3):
+        ck.save(10_000 + e, {"x": np.full(2, 100 + e)},
+                {"phase": "server", "epoch": e})
+    # the server phase's saves must not evict the device resume point
+    dev_step = ck.latest_step(lambda m: m.get("phase") == "device")
+    srv_step = ck.latest_step(lambda m: m.get("phase") == "server")
+    assert dev_step == 3 and srv_step == 10_002
+    tree, meta = ck.restore(dev_step)
+    assert meta == {"step": 3, "phase": "device", "round": 3}
+    assert tree["x"][0] == 3
+    assert ck.latest_step(lambda m: m.get("phase") == "nope") is None
+
+
+def test_trace_jsonl_without_events(tmp_path):
+    trace = _small_trace(4)
+    path = str(tmp_path / "lean.jsonl")
+    trace.save(path, events=False)
+    back = FleetTrace.load(path)
+    assert back.rounds == trace.rounds
+    assert back.events == []
+
+
+# ---------------------------------------------------------------------------
+# parallel upload pricing on per-profile links
+# ---------------------------------------------------------------------------
+
+
+def test_parallel_upload_prices_slowest_participating_link():
+    from repro.core import comm_model
+    from repro.core.uit import AmpereTrainer
+    from repro.data import ActivationStore
+    import jax
+
+    spec = _spec()
+    model, test, clients = _legacy_setup(spec)
+    run = spec.run
+
+    def upload_time(bw_map):
+        tr = AmpereTrainer(model, run, clients, test, patience=50)
+        dev, srv, aux = tr._init_states(jax.random.PRNGKey(0))
+        store = ActivationStore(seed=0)
+        tr.generate_activations({"device": dev, "aux": aux}, store,
+                                upload="parallel",
+                                client_bandwidth_bps=bw_map)
+        return tr.history["sim_time"], store
+
+    # uniform per-profile map == legacy fixed-link pricing
+    uniform = {c.client_id: comm_model.BANDWIDTH_BPS for c in clients}
+    t_uniform, store = upload_time(uniform)
+    t_legacy, _ = upload_time(None)
+    assert t_uniform == pytest.approx(t_legacy)
+
+    # throttle one client's link 100x: it becomes the bottleneck even if
+    # its shard is not the biggest
+    slow_id = clients[0].client_id
+    slow = dict(uniform)
+    slow[slow_id] = comm_model.BANDWIDTH_BPS / 100.0
+    t_slow, _ = upload_time(slow)
+    bytes_per_sample = store.bytes_received / store.num_samples()
+    expect = len(clients[0].dataset) * bytes_per_sample / slow[slow_id]
+    assert t_slow == pytest.approx(expect)
+    assert t_slow > t_uniform
+
+
+# ---------------------------------------------------------------------------
+# parity: run_experiment == legacy entrypoints (byte-identical history)
+# ---------------------------------------------------------------------------
+
+
+def test_run_experiment_matches_legacy_ampere():
+    from repro.core.uit import AmpereTrainer
+
+    spec = _spec()
+    out = run_experiment(spec, write_results=False)
+    model, test, clients = _legacy_setup(spec)
+    tr = AmpereTrainer(model, spec.run, clients, test, patience=spec.patience)
+    legacy = tr.run_all(max_device_rounds=2, max_server_epochs=1)
+    assert out["results"]["ampere"]["history"] == legacy["history"]
+
+
+def test_run_experiment_matches_legacy_sfl_and_fedavg():
+    from repro.core.baselines import FedAvgTrainer, SFLTrainer
+
+    spec = _spec(systems=("splitfed", "fedavg"))
+    out = run_experiment(spec, write_results=False)
+    model, test, clients = _legacy_setup(spec)
+    sfl = SFLTrainer(model, spec.run, clients, test, variant="splitfed",
+                     patience=spec.patience)
+    assert out["results"]["splitfed"]["history"] == \
+        sfl.run_rounds(2)["history"]
+    fa = FedAvgTrainer(model, spec.run, clients, test,
+                       patience=spec.patience)
+    assert out["results"]["fedavg"]["history"] == fa.run_rounds(2)["history"]
+
+
+# ---------------------------------------------------------------------------
+# the committed comparison spec + CLI dry-run
+# ---------------------------------------------------------------------------
+
+
+def test_committed_spec_validates_and_cli_dry_runs():
+    spec = ExperimentSpec.load(
+        os.path.join(REPO, "examples", "specs", "compare_smoke.json"))
+    assert spec.validate() == []
+    assert {"ampere", "fedavg"} < set(spec.systems)
+    assert sum(1 for s in spec.systems
+               if s in ("splitfed", "splitfedv2", "splitgp", "scaffold",
+                        "pipar")) >= 2
+    # the shared trace is committed next to the spec and loads
+    trace = FleetTrace.load(os.path.join(REPO, spec.trace_path))
+    assert len(trace.rounds) == spec.max_rounds
+
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "scripts/run_experiment.py",
+         "examples/specs/compare_smoke.json", "--dry-run"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "dry-run OK" in proc.stdout
+
+
+def test_cli_rejects_invalid_spec(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"name": "b", "systems": ["nope"]}))
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "scripts/run_experiment.py", str(bad), "--dry-run"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 1
+    assert "nope" in proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# baselines inherit checkpoint/resume from the shared Runner (slow)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_sfl_scaffold_resume_continues_from_checkpoint(tmp_path):
+    """SFL baselines now checkpoint through the shared Runner: a killed
+    scaffold run restores its (state, controls) tuple — a root-level
+    tuple, exercising the Checkpointer fix — and continues at the next
+    round.  (Byte-identical continuation is not expected: ClientData
+    batch sampling is stateful; the fleet engine's stateless indices are
+    the replayable path.)"""
+    from repro.core import aggregation
+    from repro.core.baselines import SFLTrainer
+
+    spec = _spec()
+    model, test, clients = _legacy_setup(spec)
+    run = replace(spec.run, checkpoint_every=1)
+    # stateless-in-round cohorts so a resumed rng can't diverge
+    rng = np.random.default_rng(0)
+    plan = [aggregation.sample_cohort(rng, run.fed, r) for r in range(4)]
+
+    tr = SFLTrainer(model, run, clients, test, variant="scaffold",
+                    patience=50, workdir=str(tmp_path / "w"))
+    tr.run_rounds(2, cohort_plan=plan)          # "killed" after 2 rounds
+    assert tr.runner.journal.last() == {"phase": "sfl-scaffold", "round": 1}
+    pack, meta = tr.runner.ckpt.restore()
+    state, controls = pack      # root-level tuple survives the round-trip
+    assert meta == {"step": 1, "phase": "sfl-scaffold", "round": 1}
+    assert set(state) == {"device", "server"}
+    c_global, c_k_all = controls
+    # the per-client control variates have been updated away from zero
+    assert any(np.abs(np.asarray(l)).sum() > 0 for l in _leaves(c_k_all))
+
+    tr2 = SFLTrainer(model, run, clients, test, variant="scaffold",
+                     patience=50, workdir=str(tmp_path / "w"))
+    out = tr2.run_rounds(4, cohort_plan=plan)   # resumes (incl. controls)
+    assert [r["round"] for r in out["history"]["rounds"]] == [2, 3]
+    assert all(np.isfinite(r["loss"]) for r in out["history"]["rounds"])
+
+
+def _leaves(tree):
+    import jax
+    return jax.tree.leaves(tree)
+
+
+# ---------------------------------------------------------------------------
+# one spec -> many systems over one shared JSONL trace (slow)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_suite_shared_trace_drives_all_systems(tmp_path):
+    spec = _spec(
+        name="suite",
+        systems=("ampere", "splitfed", "splitgp", "fedavg"),
+        run=_run_cfg(num_clients=12, clients_per_round=4),
+        trace_path=str(tmp_path / "trace.jsonl"),
+        fleet=FleetConfig(n_devices=12, seed=0, dropout_hazard=0.05,
+                          deadline_factor=2.5, min_cohort=2, max_cohort=8,
+                          init_cohort=4),
+        results_dir=str(tmp_path / "res"))
+    out = run_experiment(spec)
+    assert os.path.exists(spec.trace_path)   # generated once, saved
+    trace = FleetTrace.load(spec.trace_path)
+    assert len(trace.rounds) == 2
+
+    # every system ran every trace round on the same cohorts
+    amp = out["results"]["ampere"]["history"]["device"]
+    assert [r["round"] for r in amp] == [0, 1]
+    for name in ("splitfed", "splitgp", "fedavg"):
+        rounds = out["results"][name]["history"]["rounds"]
+        assert [r["round"] for r in rounds] == [0, 1]
+    # replay re-prices wall-clock per system (per-iteration exchange vs
+    # Ampere's model-only rounds), so the totals must differ
+    assert out["summary"]["splitfed"]["sim_time_s"] > 0
+    assert out["summary"]["splitfed"]["sim_time_s"] != \
+        out["summary"]["ampere"]["sim_time_s"]
+    # one results dir: summary + per-system histories
+    files = sorted(os.listdir(spec.results_dir))
+    assert "summary.json" in files
+    for name in spec.systems:
+        assert f"{name}_history.json" in files
+    with open(os.path.join(spec.results_dir, "summary.json")) as f:
+        summary = json.load(f)
+    assert set(summary["summary"]) == set(spec.systems)
+
+    # rerun loads the saved trace -> byte-identical replay
+    out2 = run_experiment(spec, write_results=False)
+    assert out2["results"]["splitfed"]["history"]["rounds"] == \
+        out["results"]["splitfed"]["history"]["rounds"]
