@@ -10,6 +10,12 @@ Measured:
   to simulate 100 rounds over a churning 512-device population (the
   coordinator hot loop: heap ops, cohort selection, heartbeat/churn
   events); ``events_per_sec`` lands in the payload for trend reading.
+* ``sched_async_512dev_100rounds`` — same population through the buffered
+  semi-synchronous (FedBuff) mode: 100 aggregations of a 32-update buffer
+  with 64 concurrent devices.  ``async_sim_speedup`` compares the two
+  modes' *simulated* wall clocks over the same straggler-heavy population
+  (sync closes each round on the slowest survivor; async overlaps them) —
+  the fleet-level number the async mode exists for.
 * ``fleet_round_vmap_k16`` / ``fleet_round_loop_k16`` (and _k64) — one
   federated cohort round through the vmapped pool-fed step vs. the naive
   Python per-client loop (per-client batch gather + jitted single-client
@@ -48,6 +54,8 @@ def _best(fn, reps: int) -> float:
 
 
 def _bench_scheduler(reps: int):
+    import dataclasses
+
     from repro.fleet import (FleetConfig, FleetScheduler, sample_population)
 
     cfg = FleetConfig(n_devices=512, seed=0, dropout_hazard=0.03,
@@ -60,10 +68,28 @@ def _bench_scheduler(reps: int):
     trace = sched.simulate(n_rounds)           # warm-up + event count
     n_events = len(trace.events)
     t = _best(lambda: sched.simulate(n_rounds), reps)
-    return ({"sched_512dev_100rounds": t},
+
+    # buffered semi-synchronous mode over the same population: straggler
+    # deadline off in BOTH modes so the sim-time comparison isolates the
+    # aggregation discipline (sync waits for the slowest survivor, async
+    # aggregates every 32 completions)
+    sync_cfg = dataclasses.replace(cfg, deadline_factor=0.0,
+                                   target_round_time_factor=0.0)
+    async_cfg = dataclasses.replace(sync_cfg, async_buffer_size=32,
+                                    max_staleness=8, max_concurrent=64)
+    sync_trace = FleetScheduler(pop, lat, sync_cfg).simulate(n_rounds)
+    a_sched = FleetScheduler(pop, lat, async_cfg)
+    async_trace = a_sched.simulate(n_rounds)
+    t_async = _best(lambda: a_sched.simulate(n_rounds), reps)
+    return ({"sched_512dev_100rounds": t,
+             "sched_async_512dev_100rounds": t_async},
             {"sched_devices": 512, "sched_rounds": n_rounds,
              "sched_events": n_events,
-             "events_per_sec": int(n_events / t)})
+             "events_per_sec": int(n_events / t),
+             "sync_sim_total_s": round(sync_trace.total_time, 6),
+             "async_sim_total_s": round(async_trace.total_time, 6),
+             "async_sim_speedup": round(
+                 sync_trace.total_time / async_trace.total_time, 3)})
 
 
 def _bench_rounds(reps: int):
@@ -130,6 +156,7 @@ def run(quick: bool = True):
                "speedup_k16": config.pop("speedup_k16"),
                "speedup_k64": config.pop("speedup_k64"),
                "events_per_sec": config.pop("events_per_sec"),
+               "async_sim_speedup": config.pop("async_sim_speedup"),
                "loss_absdiff_k16": config.pop("loss_absdiff_k16")}
     with open(BENCH_PATH, "w") as f:
         json.dump(payload, f, indent=1)
@@ -142,7 +169,9 @@ def run(quick: bool = True):
              {"metric": "speedup k64 (loop/vmap)",
               "value": payload["speedup_k64"]},
              {"metric": "scheduler events/sec",
-              "value": payload["events_per_sec"]}]
+              "value": payload["events_per_sec"]},
+             {"metric": "async sim speedup (sync/async wall clock)",
+              "value": payload["async_sim_speedup"]}]
     table(rows, ["metric", "value"], "bench_fleet — fleet-path wall clock")
     return payload
 

@@ -44,6 +44,46 @@ def fedavg(trees, weights):
     return jax.tree.map(agg, *trees)
 
 
+def staleness_weights(staleness):
+    """Normalized polynomial staleness scaling ``1/sqrt(1+s)`` (FedBuff).
+
+    ``staleness[i]`` counts the aggregations between the global-model
+    version client i trained from and the one being produced; fresher
+    updates get proportionally more weight.  All-zero staleness reduces
+    to the uniform FedAvg weighting.
+    """
+    s = np.asarray(staleness, np.float64)
+    w = 1.0 / np.sqrt(1.0 + s)
+    return w / max(w.sum(), 1e-12)
+
+
+def fedbuff_stacked(global_tree, trained_k, snapshot_k, weights,
+                    server_lr: float = 1.0):
+    """Buffered staleness-weighted delta aggregation (FedBuff).
+
+    Each buffered client trained from its own (possibly stale) snapshot
+    of the global model; the server folds the weighted *deltas* into the
+    current global state::
+
+        new = global + server_lr * sum_i w_i * (trained_i - snapshot_i)
+
+    ``trained_k`` / ``snapshot_k`` leaves carry a leading client axis;
+    ``weights`` are the (already staleness-scaled) aggregation weights —
+    zero-weight slots contribute nothing, mirroring ``fedavg_stacked``
+    padding semantics.  With every snapshot equal to the current global
+    state and uniform weights this reduces exactly to weighted FedAvg.
+    """
+    w = normalize_weights(weights)
+
+    def agg(g, t, s):
+        wf = w.reshape((-1,) + (1,) * (t.ndim - 1))
+        delta = jnp.sum((t.astype(jnp.float32) - s.astype(jnp.float32))
+                        * wf, axis=0)
+        return (g.astype(jnp.float32)
+                + server_lr * delta).astype(g.dtype)
+    return jax.tree.map(agg, global_tree, trained_k, snapshot_k)
+
+
 def tree_sub(a, b):
     return jax.tree.map(lambda x, y: (x.astype(jnp.float32)
                                       - y.astype(jnp.float32)), a, b)

@@ -1,4 +1,6 @@
 from repro.core.baselines.sfl_family import SFLTrainer, make_sfl_round_step
 from repro.core.baselines.fedavg import FedAvgTrainer
+from repro.core.baselines.fedbuff import FedBuffTrainer
 
-__all__ = ["SFLTrainer", "make_sfl_round_step", "FedAvgTrainer"]
+__all__ = ["SFLTrainer", "make_sfl_round_step", "FedAvgTrainer",
+           "FedBuffTrainer"]

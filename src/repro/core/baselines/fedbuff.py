@@ -1,0 +1,110 @@
+"""FedBuff-style buffered semi-synchronous aggregation
+[Nguyen et al., AISTATS'22], composed with the Ampere pipeline.
+
+The synchronous fleet device phase closes every round on the slowest
+surviving participant, so one straggler gates the whole cohort's
+wall-clock.  The buffered mode removes that barrier: devices train
+continuously (up to ``FleetConfig.max_concurrent`` at once), each from
+the global-model version current at its dispatch, and the server
+aggregates whenever ``async_buffer_size`` updates have buffered —
+staleness-weighted delta aggregation
+(:func:`repro.core.aggregation.fedbuff_stacked`), the overlap move of
+the collaborative/parallel-aggregation SFL line (arXiv:2504.15724,
+minibatch-SFL framing in arXiv:2308.11953).
+
+:class:`FedBuffTrainer` extends :class:`~repro.core.uit.AmpereTrainer`
+with the buffered device phase; phases 4/5 (one-shot activation
+consolidation, centralized server training) are inherited unchanged, so
+``fedbuff`` results are directly comparable with every other system in
+the registry.
+
+Crash-resume: the loop-carried state is a *ring* of recent global-model
+versions (still-in-flight clients reference stale snapshots), keyed by
+version number and pruned to the trace's maximum staleness.  The ring is
+what the shared :class:`~repro.experiments.runner.Runner` checkpoints,
+and batch indices are stateless in (seed, round, slot, client)
+(:meth:`repro.fleet.FleetEngine.buffered_round_indices`), so a resumed
+coordinator replays byte-identical aggregations.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.uit import AmpereTrainer
+from repro.experiments.runner import StepOutcome
+
+
+class FedBuffTrainer(AmpereTrainer):
+    """Ampere pipeline whose device phase aggregates buffered,
+    staleness-weighted updates instead of closing synchronous rounds."""
+
+    def run_buffered_device_phase(self, dev_state, trace,
+                                  max_rounds: Optional[int] = None):
+        """Device phase driven by an *async* :class:`~repro.fleet.
+        FleetTrace` (every plan must carry per-client staleness).
+
+        ``plan.round_idx`` is the aggregation counter; client i of plan
+        r trained from global version ``r - plan.staleness[i]``, so the
+        loop carries a ring ``{str(version): state}`` of the last
+        ``max staleness + 1`` aggregated states.  The ring is the
+        checkpointed tree — a restart restores every version an
+        in-flight update may still reference.
+        """
+        from repro.fleet.engine import FleetEngine
+
+        plans = trace.rounds if max_rounds is None else \
+            trace.rounds[:max_rounds]
+        if not plans:
+            return dev_state
+        if not all(p.staleness for p in plans):
+            raise ValueError(
+                "buffered device phase needs an async trace (plans must "
+                "carry per-client staleness); simulate one with "
+                "FleetConfig(async_buffer_size > 0)")
+        # prune bound from the FULL trace, never the max_rounds-truncated
+        # plan list: a run killed early must checkpoint every version a
+        # resumed full-length run may still reference (a later plan's
+        # staleness can exceed the truncated prefix's maximum)
+        s_max = max(max(p.staleness) for p in trace.rounds if p.staleness)
+
+        engine = FleetEngine(self.model, self.run, self.clients,
+                             seed=self.run.fed.seed, donate=False)
+        aux_eval = self._make_aux_eval()
+        ring, start_round = self.runner.restore("fedbuff",
+                                                {"0": dev_state})
+        ring = {k: jax.tree.map(jnp.asarray, v) for k, v in ring.items()}
+
+        def body(ring, rnd, plan):
+            cur = ring[str(rnd)]
+            snaps = engine.stack_states(
+                [ring[str(rnd - s)] for s in plan.staleness])
+            new, metrics = engine.run_buffered_round(
+                cur, snaps, rnd, plan.clients, plan.weights,
+                self._sched(rnd))
+            ring = dict(ring)
+            ring[str(rnd + 1)] = new
+            for k in [k for k in ring if int(k) < rnd + 1 - s_max]:
+                del ring[k]
+            val = aux_eval(new)
+            return StepOutcome(
+                state=ring,
+                record={"round": rnd, "loss": float(metrics["loss"]),
+                        "t_end": plan.t_end,
+                        "buffered": len(plan.clients),
+                        "staleness_max": int(max(plan.staleness)), **val},
+                comm_bytes=2 * len(plan.clients) * (
+                    self.sizes.device + self.sizes.aux),
+                sim_time=plan.round_time,
+                log={"dropped": len(plan.dropped),
+                     "sim_t": round(plan.t_end, 6)})
+
+        ring = self.runner.run_phase(
+            "fedbuff", ring,
+            ((p.round_idx, p) for p in plans if p.round_idx >= start_round),
+            body, history_key="device", monitor="val_loss",
+            checkpoint_every=self.run.checkpoint_every)
+        return ring[str(max(int(k) for k in ring))]

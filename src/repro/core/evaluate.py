@@ -75,3 +75,17 @@ class EarlyStopper:
         else:
             self.bad += 1
         return self.bad >= self.patience
+
+    # ------------------------------------------------------------------
+    # checkpointable state: a resumed coordinator must stop at the same
+    # round an uninterrupted run would have (Runner persists this in the
+    # checkpoint metadata; json handles the +-inf sentinel)
+    def state_dict(self) -> dict:
+        return {"best": float(self.best), "bad": int(self.bad),
+                "best_round": int(self.best_round), "round": int(self.round)}
+
+    def load_state_dict(self, state: dict):
+        self.best = float(state["best"])
+        self.bad = int(state["bad"])
+        self.best_round = int(state["best_round"])
+        self.round = int(state["round"])

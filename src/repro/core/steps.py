@@ -154,6 +154,69 @@ def make_device_round_pool_step(model, run_cfg, *, impl="xla",
     return pool_round_step
 
 
+def _buffered_from_batches(client_round, state, snapshots, batches,
+                           weights, lr):
+    """vmap ``client_round`` with PER-CLIENT init params + FedBuff agg.
+
+    Unlike :func:`_round_from_batches` (every client starts from the one
+    shared state), each buffered client trains from its own stale
+    snapshot of the global model (leading client axis on ``snapshots``
+    leaves), and the weighted *deltas* are folded into the current
+    global ``state`` (:func:`repro.core.aggregation.fedbuff_stacked`).
+    """
+    dev_k, aux_k, loss_k = jax.vmap(
+        client_round, in_axes=(0, 0, 0, None))(
+            snapshots["device"], snapshots["aux"], batches, lr)
+    new_device = aggregation.fedbuff_stacked(state["device"], dev_k,
+                                             snapshots["device"], weights)
+    new_aux = aggregation.fedbuff_stacked(state["aux"], aux_k,
+                                          snapshots["aux"], weights)
+    w = aggregation.normalize_weights(weights)
+    metrics = {"loss": jnp.sum(loss_k * w)}
+    return {"device": new_device, "aux": new_aux}, metrics
+
+
+def make_buffered_round_step(model, run_cfg, *, impl="xla",
+                             xent_impl="xla"):
+    """Buffered (FedBuff-style) federated round from uploaded batches.
+
+    ``buffered_round_step(state, snapshots, batches, weights, lr)`` —
+    ``state`` is the current global {"device", "aux"} (NOT donated: past
+    versions stay live as snapshots for still-in-flight clients),
+    ``snapshots`` stacks each buffered client's init params over a
+    leading K axis, batch leaves are (K, H, b, ...).
+    """
+    client_round = make_client_round_fn(model, run_cfg, impl=impl,
+                                        xent_impl=xent_impl)
+
+    def buffered_round_step(state, snapshots, batches, weights, lr):
+        return _buffered_from_batches(client_round, state, snapshots,
+                                      batches, weights, lr)
+
+    return buffered_round_step
+
+
+def make_buffered_round_pool_step(model, run_cfg, *, impl="xla",
+                                  xent_impl="xla"):
+    """Pool-fed buffered round: like :func:`make_device_round_pool_step`
+    but with per-client init snapshots and FedBuff delta aggregation.
+
+    Intended jit: NO donation — ``state`` remains a live entry of the
+    trainer's version ring (stale in-flight clients still reference it),
+    the pool must survive across rounds, and the (K, ...) snapshot stack
+    cannot alias the un-stacked output.
+    """
+    client_round = make_client_round_fn(model, run_cfg, impl=impl,
+                                        xent_impl=xent_impl)
+
+    def buffered_pool_round_step(state, snapshots, pool, idx, weights, lr):
+        batches = jax.tree.map(lambda a: jnp.take(a, idx, axis=0), pool)
+        return _buffered_from_batches(client_round, state, snapshots,
+                                      batches, weights, lr)
+
+    return buffered_pool_round_step
+
+
 # ---------------------------------------------------------------------------
 # Ampere server phase
 # ---------------------------------------------------------------------------

@@ -44,7 +44,15 @@ def resolve_trace(spec: ExperimentSpec, model, run_cfg, *,
     a fresh trace from ``spec.fleet`` (priced with Ampere's per-round
     latency, the schedule donor) and saves it to ``trace_path`` when one
     is given — generate once, replay everywhere.
+
+    The shared donor is always the *synchronous* schedule (async knobs
+    are zeroed before simulating): the buffered systems derive their
+    semi-synchronous schedule from the same population + the spec's
+    async knobs (:func:`repro.experiments.systems.fedbuff_schedule`), so
+    one spec compares both disciplines over one churn realization.
     """
+    import dataclasses
+
     from repro.fleet import (FleetScheduler, FleetTrace, make_latency_fn,
                              sample_population)
 
@@ -67,7 +75,9 @@ def resolve_trace(spec: ExperimentSpec, model, run_cfg, *,
         raise FileNotFoundError(
             f"trace_path {spec.trace_path!r} missing and spec.fleet is null")
     lat = make_latency_fn(model, run_cfg, algo="ampere", seq_len=seq_len)
-    trace = FleetScheduler(population, lat, spec.fleet).simulate(rounds)
+    sim_cfg = spec.fleet if spec.fleet.async_buffer_size == 0 else \
+        dataclasses.replace(spec.fleet, async_buffer_size=0)
+    trace = FleetScheduler(population, lat, sim_cfg).simulate(rounds)
     if spec.trace_path is not None:
         trace.save(spec.trace_path)
     return trace, population
@@ -123,7 +133,8 @@ def run_experiment(spec: ExperimentSpec, *, log_echo: bool = False,
         ctx = SystemContext(
             model=model, run_cfg=spec.run, clients=clients,
             eval_data=eval_data, workdir=workdir, trace=trace,
-            population=population, max_rounds=spec.max_rounds,
+            population=population, fleet_cfg=spec.fleet,
+            max_rounds=spec.max_rounds,
             max_server_epochs=spec.max_server_epochs,
             patience=spec.patience, log_echo=log_echo)
         system = sys_cls()

@@ -76,6 +76,10 @@ class Runner:
         self.history = history if history is not None else {}
         self.history.setdefault("comm_bytes", 0)
         self.history.setdefault("sim_time", 0.0)
+        # early-stop state restored per phase by restore(); consumed by the
+        # next run_phase of that phase so a resumed run stops at the same
+        # round an uninterrupted run would have
+        self._stopper_state: dict = {}
 
     # ------------------------------------------------------------------
     def restore(self, phase: str, state, *, step_name: str = "round"
@@ -93,6 +97,8 @@ class Runner:
         if step is None:
             return state, 0
         tree, meta = self.ckpt.restore(step)
+        if meta.get("stopper") is not None:
+            self._stopper_state[phase] = meta["stopper"]
         return tree, meta[step_name] + 1
 
     def account(self, *, comm_bytes: int = 0, sim_time: float = 0.0):
@@ -121,6 +127,14 @@ class Runner:
         self.history.setdefault(history_key, [])
         stopper = evaluate.EarlyStopper(
             self.patience if patience is None else patience, mode=mode)
+        restored = self._stopper_state.pop(phase, None)
+        if restored is not None:
+            stopper.load_state_dict(restored)
+        if monitor is not None and stopper.bad >= stopper.patience:
+            # the phase already early-stopped before the coordinator died
+            # (in a LATER phase) — don't train rounds the uninterrupted
+            # run never trained
+            return state
         for step_idx, plan in plans:
             out = body(state, step_idx, plan)
             state = out.state
@@ -128,12 +142,17 @@ class Runner:
             self.history["comm_bytes"] += out.comm_bytes
             self.history["sim_time"] += out.sim_time
             self.log.log(phase=phase, **out.record, **out.log)
+            # update the stopper BEFORE checkpointing so the persisted
+            # stopper state covers this step (restore resumes at step+1)
+            stop = (monitor is not None
+                    and stopper.update(out.record[monitor]))
             if self.ckpt is not None and checkpoint_every and \
-                    step_idx % checkpoint_every == 0:
+                    (step_idx + 1) % checkpoint_every == 0:
                 self.ckpt.save_async(ckpt_offset + step_idx, state,
-                                     {"phase": phase, step_name: step_idx})
+                                     {"phase": phase, step_name: step_idx,
+                                      "stopper": stopper.state_dict()})
                 self.journal.append({"phase": phase, step_name: step_idx})
-            if monitor is not None and stopper.update(out.record[monitor]):
+            if stop:
                 break
         if self.ckpt is not None:
             self.ckpt.wait()

@@ -186,16 +186,48 @@ class ExperimentSpec:
             problems.append("max_server_epochs must be >= 1 (or null)")
         if self.run.fed.num_clients < self.run.fed.clients_per_round:
             problems.append("run.fed.num_clients < clients_per_round")
+        if "fedbuff" in self.systems and self.fleet is None and \
+                self.trace_path is None:
+            problems.append(
+                "system 'fedbuff' needs a fleet section (its buffered "
+                "schedule is derived from the device population) or a "
+                "trace_path pointing at an async trace")
+        if self.fleet is not None and (
+                self.fleet.async_buffer_size < 0
+                or self.fleet.max_staleness < 0
+                or self.fleet.max_concurrent < 0):
+            problems.append("fleet async knobs (async_buffer_size, "
+                            "max_staleness, max_concurrent) must be >= 0")
         if self.fleet is not None and \
                 self.fleet.n_devices != self.run.fed.num_clients:
             problems.append(
                 f"fleet.n_devices ({self.fleet.n_devices}) must equal "
                 f"run.fed.num_clients ({self.run.fed.num_clients}) — trace "
                 "device ids index the federated clients")
+        import os
         if self.trace_path is not None and self.fleet is None:
-            import os
             if not os.path.exists(self.trace_path):
                 problems.append(
                     f"trace_path {self.trace_path!r} does not exist and no "
                     "fleet config was given to regenerate it")
+        if self.trace_path is not None and os.path.exists(self.trace_path):
+            from repro.fleet.scheduler import FleetTrace
+            try:
+                trace_async = FleetTrace.peek_is_async(self.trace_path)
+            except Exception:
+                trace_async = None   # unreadable; load() will raise loudly
+            sync_systems = [s for s in self.systems if s != "fedbuff"]
+            if trace_async and sync_systems:
+                problems.append(
+                    f"trace_path {self.trace_path!r} is a buffered-async "
+                    f"trace but {sync_systems} replay rounds "
+                    "synchronously — staleness-weighted buffer groups are "
+                    "not synchronous cohorts; give the sync systems a sync "
+                    "trace (or a fleet section to regenerate one)")
+            if trace_async is False and "fedbuff" in self.systems and \
+                    self.fleet is None:
+                problems.append(
+                    "system 'fedbuff' with a synchronous trace_path needs "
+                    "a fleet section too — its buffered schedule is "
+                    "derived from the device population")
         return problems

@@ -48,6 +48,7 @@ class SystemContext:
     workdir: Optional[str] = None
     trace: Any = None              # FleetTrace: shared-schedule replay
     population: Any = None         # Sequence[DeviceProfile]: trace pricing
+    fleet_cfg: Any = None          # FleetConfig: async knobs for fedbuff
     max_rounds: Optional[int] = None
     max_server_epochs: Optional[int] = None
     patience: int = 15
@@ -163,6 +164,13 @@ class AmpereSystem(System):
         dev, srv, aux = tr._init_states(key)
         return {"device": dev, "aux": aux}, srv
 
+    def _device_phase(self, tr, ctx: SystemContext, dev_state):
+        """Phase 3 — overridden by :class:`FedBuffSystem` (buffered)."""
+        if ctx.trace is not None:
+            return tr.run_fleet_device_phase(dev_state, ctx.trace,
+                                             ctx.max_rounds)
+        return tr.run_device_phase(dev_state, ctx.max_rounds)
+
     def run(self, ctx: SystemContext) -> dict:
         from repro.core import splitting
 
@@ -171,11 +179,7 @@ class AmpereSystem(System):
             else jax.random.PRNGKey(tr.run.seed)
         dev, srv, aux = tr._init_states(key)
         dev_state = {"device": dev, "aux": aux}
-        if ctx.trace is not None:
-            dev_state = tr.run_fleet_device_phase(dev_state, ctx.trace,
-                                                  ctx.max_rounds)
-        else:
-            dev_state = tr.run_device_phase(dev_state, ctx.max_rounds)
+        dev_state = self._device_phase(tr, ctx, dev_state)
         store = ctx.store or ActivationStore(
             directory=(os.path.join(tr.workdir, "acts")
                        if tr.workdir else None),
@@ -196,6 +200,62 @@ class AmpereSystem(System):
                                         tr.run.split.split_point)
         return {"device_state": dev_state, "server_state": srv_state,
                 "merged_params": merged, "history": tr.history}
+
+
+def fedbuff_schedule(ctx: SystemContext, rounds: int):
+    """The buffered-async schedule a fedbuff run trains on.
+
+    A trace that is already async (plans carry staleness) is replayed
+    as-is — the saved-trace path.  Otherwise the schedule is *derived*
+    from the same device population the synchronous systems share: the
+    spec's fleet config (async knobs filled with defaults when unset)
+    drives :meth:`~repro.fleet.FleetScheduler._simulate_async` with
+    Ampere's per-round pricing, so the comparison holds everything but
+    the aggregation discipline fixed.  Deterministic in the spec — a
+    resumed run re-derives the identical schedule.
+    """
+    if ctx.trace is not None and getattr(ctx.trace, "is_async", False):
+        return ctx.trace
+    if ctx.population is None:
+        raise ValueError(
+            "fedbuff needs an async trace or a device population to "
+            "derive one from — set spec.fleet (or point trace_path at a "
+            "trace simulated with async_buffer_size > 0)")
+    import dataclasses
+
+    from repro.fleet import FleetConfig, FleetScheduler
+
+    fcfg = ctx.fleet_cfg if ctx.fleet_cfg is not None else \
+        FleetConfig(n_devices=len(ctx.population))
+    if fcfg.async_buffer_size <= 0:
+        fcfg = dataclasses.replace(
+            fcfg, async_buffer_size=max(2, fcfg.init_cohort // 2))
+    lat = make_latency_fn(ctx.model, ctx.run_cfg, algo="ampere",
+                          seq_len=ctx.seq_len)
+    return FleetScheduler(ctx.population, lat, fcfg).simulate(rounds)
+
+
+@register_system("fedbuff")
+class FedBuffSystem(AmpereSystem):
+    """Buffered semi-synchronous aggregation (FedBuff) on the Ampere
+    pipeline: async device phase (completions buffer; the server
+    aggregates staleness-weighted deltas every ``async_buffer_size``
+    updates), then the inherited one-shot transfer + server phase."""
+
+    def _trainer(self, ctx: SystemContext):
+        from repro.core.baselines import FedBuffTrainer
+        if ctx.trainer is not None:
+            return ctx.trainer
+        return FedBuffTrainer(ctx.model, ctx.run_cfg, ctx.clients,
+                              ctx.eval_data, workdir=ctx.workdir,
+                              patience=ctx.patience, log_echo=ctx.log_echo)
+
+    def _device_phase(self, tr, ctx: SystemContext, dev_state):
+        rounds = ctx.max_rounds if ctx.max_rounds is not None \
+            else tr.run.fed.device_epochs
+        trace = fedbuff_schedule(ctx, rounds)
+        return tr.run_buffered_device_phase(dev_state, trace,
+                                            ctx.max_rounds)
 
 
 class SFLSystem(System):

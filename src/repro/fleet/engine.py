@@ -63,6 +63,10 @@ class FleetEngine:
                 donate_argnums=donate_args)
         self._client_round = jax.jit(steps.make_client_round_fn(model,
                                                                 run_cfg))
+        # buffered (FedBuff) round steps are built lazily on first use —
+        # synchronous consumers never pay for them
+        self._buffered = None
+        self._buffered_batches = None
 
     # ------------------------------------------------------------------
     def round_indices(self, round_idx: int, client_ids: Sequence[int]
@@ -107,6 +111,63 @@ class FleetEngine:
                    for k in per[0]}
         return self._round_batches(state, batches,
                                    jnp.asarray(w, jnp.float32), lr)
+
+    # ------------------------------------------------------------------
+    # buffered semi-synchronous (FedBuff) path
+    # ------------------------------------------------------------------
+    @staticmethod
+    def stack_states(states):
+        """Stack a list of {"device","aux"} trees over a new leading
+        client axis — the per-client init snapshots of a buffered round."""
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+    def buffered_round_indices(self, round_idx: int,
+                               client_ids: Sequence[int]) -> np.ndarray:
+        """(K, H, b) pool indices for one buffered aggregation.
+
+        Seeded by (seed, round, slot, client) — the extra slot term
+        matters because an async cohort may legitimately contain the
+        same device twice (completed, was re-dispatched, completed again
+        before the buffer filled); slot-aware seeding keeps those two
+        updates trained on distinct batches while staying stateless for
+        byte-identical resume replay.
+        """
+        fed = self.run.fed
+        H, b = fed.local_steps, fed.device_batch_size
+        idx = np.empty((len(client_ids), H, b), np.int32)
+        for j, c in enumerate(int(c) for c in client_ids):
+            rng = np.random.default_rng((self.seed, round_idx, j, c))
+            idx[j] = self.offsets[c] + rng.integers(
+                0, self.client_sizes[c], (H, b))
+        return idx
+
+    def run_buffered_round(self, state, snapshots, round_idx: int,
+                           client_ids, weights, lr):
+        """One buffered aggregation: each client trains from its own
+        stale snapshot (``snapshots`` leaves carry a leading K axis, see
+        :meth:`stack_states`), and the staleness-weighted deltas fold
+        into the current global ``state`` — which is NOT donated, since
+        past versions must stay live for still-in-flight clients."""
+        ids = [int(c) for c in client_ids]
+        idx = self.buffered_round_indices(round_idx, ids)
+        w = jnp.asarray(weights, jnp.float32)
+        if self.resident:
+            if self._buffered is None:
+                # nothing is donated: the global state stays live in the
+                # version ring, and the (K, ...) snapshot stack can't be
+                # reused for the un-stacked output anyway
+                self._buffered = jax.jit(
+                    steps.make_buffered_round_pool_step(self.model,
+                                                        self.run))
+            return self._buffered(state, snapshots, self.pool,
+                                  jnp.asarray(idx), w, lr)
+        if self._buffered_batches is None:
+            self._buffered_batches = jax.jit(
+                steps.make_buffered_round_step(self.model, self.run))
+        per = [self._client_batches(idx[j], c) for j, c in enumerate(ids)]
+        batches = {k: jnp.asarray(np.stack([p[k] for p in per]))
+                   for k in per[0]}
+        return self._buffered_batches(state, snapshots, batches, w, lr)
 
     def sequential_round(self, state, round_idx: int, client_ids, weights,
                          lr):

@@ -104,6 +104,17 @@ class FleetConfig:
     max_cohort: int = 32
     init_cohort: int = 16
     target_round_time_factor: float = 0.0   # 0 = elastic sizing off
+    # buffered semi-synchronous (FedBuff-style) aggregation: > 0 switches
+    # FleetScheduler.simulate to the async mode — device completions no
+    # longer close a round; the server aggregates whenever the update
+    # buffer reaches async_buffer_size, and each RoundPlan records the
+    # per-client staleness (aggregations since the model version the
+    # client trained from).  Elastic sizing and straggler deadlines are
+    # synchronous-round policies and are ignored in async mode
+    # (max_staleness plays the deadline's role).
+    async_buffer_size: int = 0        # M; 0 = synchronous rounds
+    max_staleness: int = 0            # discard updates staler than this; 0 = unbounded
+    max_concurrent: int = 0           # devices training at once; 0 = init_cohort
 
 
 def sample_population(cfg: FleetConfig,

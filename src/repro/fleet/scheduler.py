@@ -45,7 +45,14 @@ from repro.runtime.fault_tolerance import Heartbeats, RoundJournal
 
 @dataclasses.dataclass(frozen=True)
 class RoundPlan:
-    """One scheduled federated round (the trace unit trainers consume)."""
+    """One scheduled federated round (the trace unit trainers consume).
+
+    Synchronous plans leave ``staleness`` empty.  Buffered-async plans
+    (``FleetConfig.async_buffer_size > 0``) fill it with one entry per
+    client: how many aggregations happened between the global-model
+    version the client trained from and this one (``round_idx -
+    staleness[i]`` is the version it started from), and ``weights``
+    carry the normalized ``1/sqrt(1+s)`` staleness scaling."""
 
     round_idx: int
     t_start: float
@@ -55,6 +62,7 @@ class RoundPlan:
     dropped: Tuple[int, ...]       # failed / straggler-dropped device ids
     cohort_size: int               # K at selection time (elastic)
     round_time: float              # t_end - t_start
+    staleness: Tuple[int, ...] = ()  # async only: per-client staleness
 
     def as_cohort(self) -> dict:
         """``aggregation.sample_cohort``-shaped dict for legacy consumers.
@@ -81,6 +89,28 @@ class FleetTrace:
     def total_time(self) -> float:
         return self.rounds[-1].t_end if self.rounds else 0.0
 
+    @property
+    def is_async(self) -> bool:
+        """True for buffered-async traces (plans carry staleness)."""
+        return bool(self.rounds) and all(p.staleness for p in self.rounds)
+
+    @staticmethod
+    def peek_is_async(path: str) -> bool:
+        """Cheaply determine a saved trace's kind without a full load:
+        stream to the first round record and check for staleness (spec
+        validation uses this to reject sync/async system-trace
+        mismatches up front)."""
+        import json
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                rec = json.loads(line)
+                if rec.get("kind") == "round":
+                    return bool(rec.get("staleness"))
+        return False
+
     # ------------------------------------------------------------------
     # JSONL (de)serialization — generate a schedule once, replay it
     # anywhere (floats round-trip exactly through repr, so a loaded trace
@@ -99,14 +129,17 @@ class FleetTrace:
                                 "format": "fleet-trace-v1",
                                 "num_rounds": len(self.rounds)}) + "\n")
             for p in self.rounds:
-                f.write(json.dumps({
+                rec = {
                     "kind": "round", "round_idx": p.round_idx,
                     "t_start": p.t_start, "t_end": p.t_end,
                     "clients": list(p.clients),
                     "weights": list(p.weights),
                     "dropped": list(p.dropped),
                     "cohort_size": p.cohort_size,
-                    "round_time": p.round_time}) + "\n")
+                    "round_time": p.round_time}
+                if p.staleness:    # async plans only; sync format unchanged
+                    rec["staleness"] = list(p.staleness)
+                f.write(json.dumps(rec) + "\n")
             if events:
                 for t, kind, dev, rnd in self.events:
                     f.write(json.dumps({"kind": "event", "t": t, "e": kind,
@@ -116,10 +149,13 @@ class FleetTrace:
     def load(cls, path: str) -> "FleetTrace":
         """Stream a JSONL trace back; tolerates event lines being absent
         (``save(events=False)``) and ignores unknown record kinds so the
-        format can grow."""
+        format can grow.  The header's ``num_rounds`` is validated
+        against the parsed round count: a trace truncated by a killed
+        writer raises instead of silently replaying fewer rounds."""
         import json
         rounds: List[RoundPlan] = []
         events: List[Tuple[float, str, int, int]] = []
+        declared = None
         with open(path) as f:
             for line in f:
                 line = line.strip()
@@ -127,7 +163,9 @@ class FleetTrace:
                     continue
                 rec = json.loads(line)
                 kind = rec.get("kind")
-                if kind == "round":
+                if kind == "header":
+                    declared = rec.get("num_rounds")
+                elif kind == "round":
                     rounds.append(RoundPlan(
                         round_idx=int(rec["round_idx"]),
                         t_start=float(rec["t_start"]),
@@ -136,10 +174,17 @@ class FleetTrace:
                         weights=tuple(float(w) for w in rec["weights"]),
                         dropped=tuple(int(d) for d in rec["dropped"]),
                         cohort_size=int(rec["cohort_size"]),
-                        round_time=float(rec["round_time"])))
+                        round_time=float(rec["round_time"]),
+                        staleness=tuple(int(s) for s in
+                                        rec.get("staleness", ()))))
                 elif kind == "event":
                     events.append((float(rec["t"]), str(rec["e"]),
                                    int(rec["dev"]), int(rec["round"])))
+        if declared is not None and len(rounds) != int(declared):
+            raise ValueError(
+                f"trace {path!r} is truncated: header declares "
+                f"{int(declared)} rounds but {len(rounds)} were read — the "
+                "writer likely died mid-save; regenerate the trace")
         return cls(rounds=rounds, events=events,
                    cohort_sizes=[p.cohort_size for p in rounds])
 
@@ -209,6 +254,99 @@ class FleetScheduler:
 
     # ------------------------------------------------------------------
     def simulate(self, num_rounds: int) -> FleetTrace:
+        """Produce a ``num_rounds``-round trace.
+
+        Synchronous by default; with ``cfg.async_buffer_size > 0`` each
+        "round" is one buffered aggregation (see :meth:`_simulate_async`).
+        """
+        if self.cfg.async_buffer_size > 0:
+            return self._simulate_async(num_rounds)
+        return self._simulate_sync(num_rounds)
+
+    def _seed_population(self, push, online, next_offline, hb_dt):
+        """t=0 churn/heartbeat seeding shared by both simulation modes."""
+        for p in self.pop:
+            d = p.device_id
+            if self.rng.random() < p.p_online0:
+                online[d] = True
+                off_t = self._exp(p.mean_session_rounds)
+                next_offline[d] = off_t
+                push(off_t, "offline", d)
+                self.heartbeats.beat(d, now=0.0)
+                push(hb_dt * (0.5 + 0.5 * self.rng.random()), "heartbeat", d)
+            else:
+                online[d] = False
+                push(self._exp(p.mean_off_rounds), "online", d)
+
+    def _available(self, online, busy, now):
+        alive = self.heartbeats.alive(
+            [d for d, on in online.items() if on and d not in busy],
+            now=now)
+        return sorted(int(a) for a in alive)
+
+    def _make_churn_handler(self, online, next_offline, push, events,
+                            hb_dt):
+        """Online/offline churn handling shared by both simulation modes
+        (the subtle re-churn staleness logic lives in exactly one place).
+
+        Returns a closure ``handle(kind, d, t, rnd_idx)`` over the
+        caller's loop state; it returns the consumed kind ("online" lets
+        the caller react to a device becoming dispatchable), "stale" for
+        events obsoleted by a re-churn, or None when ``kind`` is not a
+        churn event.  The even hotter *heartbeat* branch is deliberately
+        NOT here: it fires for most of a multi-100k-event simulation, so
+        both loops inline it to keep the per-event call overhead off the
+        hot path (``sched_512dev_100rounds`` in BENCH_fleet.json gates
+        this).
+        """
+        exp = self._exp
+        by_id = self._by_id
+        beat = self.heartbeats.beat
+
+        def handle(kind, d, t, rnd_idx):
+            if kind == "online":
+                if online.get(d):
+                    return "stale"
+                online[d] = True
+                events.append((t, "online", d, rnd_idx))
+                off_t = t + exp(by_id[d].mean_session_rounds)
+                next_offline[d] = off_t
+                push(off_t, "offline", d)
+                beat(d, now=t)
+                push(t + hb_dt, "heartbeat", d)
+                return "online"
+            if kind == "offline":
+                # stale if the device re-churned; trust next_offline
+                if not online.get(d) or next_offline.get(d, -1.0) > t:
+                    return "stale"
+                online[d] = False
+                events.append((t, "offline", d, rnd_idx))
+                push(t + exp(by_id[d].mean_off_rounds), "online", d)
+                # mid-round failures were pre-scheduled as dropout events
+                return "offline"
+            return None
+
+        return handle
+
+    def _price_dispatch(self, d, now, next_offline):
+        """Jittered latency + failure time for one dispatched device.
+
+        ``fail_t`` is None when the device will complete; otherwise the
+        earlier of its scheduled churn-off and a mid-round hazard draw.
+        """
+        lat = self._lat[d] * (1.0 + self.cfg.latency_jitter
+                              * self.rng.random())
+        done_t = now + lat
+        fail_t = None
+        if next_offline.get(d, np.inf) <= done_t:
+            fail_t = next_offline[d]              # churns off mid-round
+        if self.rng.random() < self._by_id[d].dropout_hazard:
+            hz_t = now + self.rng.random() * lat
+            fail_t = hz_t if fail_t is None else min(fail_t, hz_t)
+        return lat, done_t, fail_t
+
+    # ------------------------------------------------------------------
+    def _simulate_sync(self, num_rounds: int) -> FleetTrace:
         self._reset()
         cfg = self.cfg
         heap: list = []
@@ -228,24 +366,10 @@ class FleetScheduler:
         cur = _Round(0, 0.0, 0)
         waiting = [False]
 
-        for p in self.pop:
-            d = p.device_id
-            if self.rng.random() < p.p_online0:
-                online[d] = True
-                off_t = self._exp(p.mean_session_rounds)
-                next_offline[d] = off_t
-                push(off_t, "offline", d)
-                self.heartbeats.beat(d, now=0.0)
-                push(hb_dt * (0.5 + 0.5 * self.rng.random()), "heartbeat", d)
-            else:
-                online[d] = False
-                push(self._exp(p.mean_off_rounds), "online", d)
+        self._seed_population(push, online, next_offline, hb_dt)
 
         def available(now):
-            alive = self.heartbeats.alive(
-                [d for d, on in online.items() if on and d not in busy],
-                now=now)
-            return sorted(int(a) for a in alive)
+            return self._available(online, busy, now)
 
         def start_round(now) -> bool:
             avail = available(now)
@@ -262,17 +386,10 @@ class FleetScheduler:
             for d in (int(c) for c in chosen):
                 busy.add(d)
                 events.append((now, "assign", d, cur.idx))
-                lat = self._lat[d] * (1.0 + cfg.latency_jitter
-                                      * self.rng.random())
-                done_t = now + lat
+                lat, done_t, fail_t = self._price_dispatch(d, now,
+                                                           next_offline)
                 lats.append(lat)
                 cur.expected[d] = done_t
-                fail_t = None
-                if next_offline.get(d, np.inf) <= done_t:
-                    fail_t = next_offline[d]          # churns off mid-round
-                if self.rng.random() < self._by_id[d].dropout_hazard:
-                    hz_t = now + self.rng.random() * lat
-                    fail_t = hz_t if fail_t is None else min(fail_t, hz_t)
                 if fail_t is not None:
                     cur.pending[d] = fail_t
                     push(fail_t, "dropout", d, cur.idx)
@@ -322,37 +439,21 @@ class FleetScheduler:
                 if len(rounds) < num_rounds:
                     start_round(end)
 
+        churn_of = self._make_churn_handler(online, next_offline,
+                                            push, events, hb_dt)
+        rand = self.rng.random
+        beat = self.heartbeats.beat
+        loss_prob = cfg.heartbeat_loss_prob
         start_round(0.0)
         while heap and len(rounds) < num_rounds:
             t, _, kind, d, rnd_idx = heapq.heappop(heap)
-            if kind == "online":
-                if online.get(d):
-                    continue
-                online[d] = True
-                events.append((t, "online", d, cur.idx))
-                off_t = t + self._exp(self._by_id[d].mean_session_rounds)
-                next_offline[d] = off_t
-                push(off_t, "offline", d)
-                self.heartbeats.beat(d, now=t)
-                push(t + hb_dt, "heartbeat", d)
-                if waiting[0]:
-                    start_round(t)
-            elif kind == "offline":
-                # stale if the device re-churned; trust next_offline
-                if not online.get(d) or next_offline.get(d, -1.0) > t:
-                    continue
-                online[d] = False
-                events.append((t, "offline", d, cur.idx))
-                push(t + self._exp(self._by_id[d].mean_off_rounds),
-                     "online", d)
-                # mid-round failures were pre-scheduled as dropout events
-            elif kind == "heartbeat":
+            if kind == "heartbeat":          # hot path, kept inline
                 if online.get(d):
                     # beats can be lost in flight; enough consecutive
                     # losses and cohort selection treats the device as
                     # dead (Heartbeats timeout) until a beat lands again
-                    if self.rng.random() >= cfg.heartbeat_loss_prob:
-                        self.heartbeats.beat(d, now=t)
+                    if rand() >= loss_prob:
+                        beat(d, now=t)
                         events.append((t, "heartbeat", d, cur.idx))
                     push(t + hb_dt, "heartbeat", d)
             elif kind == "complete":
@@ -378,6 +479,173 @@ class FleetScheduler:
                     del cur.pending[s]
                     cur.dropped.add(s)
                 maybe_advance(t)
+            elif churn_of(kind, d, t, cur.idx) == "online" and waiting[0]:
+                start_round(t)
+
+        return FleetTrace(rounds=rounds, events=events,
+                          cohort_sizes=cohort_sizes)
+
+    # ------------------------------------------------------------------
+    # Buffered semi-synchronous mode (FedBuff-style)
+    # ------------------------------------------------------------------
+    def _simulate_async(self, num_rounds: int) -> FleetTrace:
+        """Buffered semi-synchronous schedule over the same event queue.
+
+        Up to ``max_concurrent`` devices train at any moment, each from
+        the global-model version current when it was dispatched.  A
+        completion never closes a round: the update enters the server's
+        buffer (unless its staleness exceeds ``max_staleness`` — then it
+        is discarded and recorded as dropped) and the freed slot is
+        refilled immediately.  When the buffer reaches
+        ``async_buffer_size`` the server aggregates: one
+        :class:`RoundPlan` whose ``staleness`` records, per client, how
+        many aggregations happened since the version it trained from and
+        whose ``weights`` carry the normalized ``1/sqrt(1+s)`` scaling
+        (:func:`repro.core.aggregation.staleness_weights`).  Stragglers
+        therefore overlap later rounds instead of gating the cohort —
+        the ``round_end`` event marks the aggregation instant.
+
+        Deterministic like the sync mode: seeded rng, ``(time, seq)``
+        heap ordering, no wall clock.
+        """
+        from repro.core.aggregation import staleness_weights
+
+        self._reset()
+        cfg = self.cfg
+        M = cfg.async_buffer_size
+        C = cfg.max_concurrent if cfg.max_concurrent > 0 else cfg.init_cohort
+        S = cfg.max_staleness               # 0 = unbounded
+        heap: list = []
+        seq = [0]
+
+        def push(t, kind, dev=-1, rnd_idx=-1):
+            heapq.heappush(heap, (float(t), seq[0], kind, int(dev), rnd_idx))
+            seq[0] += 1
+
+        online = {}
+        next_offline = {}
+        events: List[Tuple[float, str, int, int]] = []
+        rounds: List[RoundPlan] = []
+        cohort_sizes: List[int] = []
+        hb_dt = cfg.heartbeat_interval_rounds * self.base_latency
+        version = [0]               # aggregation counter = round_idx
+        # in_flight doubles as the busy set for availability (its key set
+        # IS the set of dispatched devices — no parallel state to drift)
+        in_flight = {}              # device -> base model version
+        buffer: List[Tuple[int, int]] = []          # (device, staleness)
+        dropped_since: List[int] = []
+        last_agg = [0.0]
+
+        self._seed_population(push, online, next_offline, hb_dt)
+
+        def fill(now):
+            """Dispatch available devices into free concurrency slots.
+
+            New dispatches train from the CURRENT global version — the
+            plan's per-client staleness is the number of aggregations
+            that land between this moment and the update's own.
+            """
+            free = C - len(in_flight)
+            if free <= 0:
+                return
+            avail = self._available(online, in_flight, now)
+            if not avail:
+                return
+            n = min(free, len(avail))
+            chosen = self.rng.choice(np.asarray(avail), size=n,
+                                     replace=False)
+            for d in (int(c) for c in chosen):
+                in_flight[d] = version[0]
+                events.append((now, "assign", d, version[0]))
+                _, done_t, fail_t = self._price_dispatch(d, now,
+                                                         next_offline)
+                if fail_t is not None:
+                    push(fail_t, "dropout", d, version[0])
+                else:
+                    push(done_t, "complete", d, version[0])
+
+        def aggregate(now):
+            pairs = sorted(buffer)
+            ids = tuple(d for d, _ in pairs)
+            stal = tuple(s for _, s in pairs)
+            w = tuple(float(x) for x in staleness_weights(stal))
+            dropped = tuple(sorted(set(dropped_since) - set(ids)))
+            plan = RoundPlan(
+                round_idx=version[0], t_start=last_agg[0], t_end=now,
+                clients=ids, weights=w, dropped=dropped,
+                cohort_size=len(ids) + len(dropped),
+                round_time=now - last_agg[0], staleness=stal)
+            rounds.append(plan)
+            cohort_sizes.append(plan.cohort_size)
+            events.append((now, "round_end", -1, version[0]))
+            if self.journal is not None:
+                self.journal.append({
+                    "phase": "fleet-sched", "round": version[0],
+                    "t_end": round(now, 9), "clients": list(ids),
+                    "staleness": list(stal),
+                    "dropped": [int(x) for x in dropped],
+                    "cohort_size": plan.cohort_size})
+            buffer.clear()
+            dropped_since.clear()
+            version[0] += 1
+            last_agg[0] = now
+
+        churn_of = self._make_churn_handler(online, next_offline,
+                                            push, events, hb_dt)
+        rand = self.rng.random
+        beat = self.heartbeats.beat
+        loss_prob = cfg.heartbeat_loss_prob
+        # progress guard: unlike the sync mode (a round closes even when
+        # every member drops), only aggregations advance the round count
+        # here, while heartbeat/churn events self-perpetuate — a
+        # population that can never fill the buffer (e.g. every dispatch
+        # fails) would spin forever.  Fail loudly instead.
+        guard = 1000 * (len(self.pop) + M)
+        since_agg = 0
+        fill(0.0)
+        while heap and len(rounds) < num_rounds:
+            since_agg += 1
+            if since_agg > guard:
+                raise RuntimeError(
+                    f"async fleet simulation made no progress: {guard} "
+                    f"events since the last aggregation with the buffer "
+                    f"at {len(buffer)}/{M} — the population cannot fill "
+                    "the update buffer (all dispatches failing?); lower "
+                    "async_buffer_size or fix the churn/hazard config")
+            t, _, kind, d, v = heapq.heappop(heap)
+            if kind == "heartbeat":          # hot path, kept inline
+                if online.get(d):
+                    if rand() >= loss_prob:
+                        beat(d, now=t)
+                        events.append((t, "heartbeat", d, version[0]))
+                    push(t + hb_dt, "heartbeat", d)
+            elif kind == "complete":
+                if in_flight.get(d) != v:
+                    continue        # stale: already dropped / re-dispatched
+                del in_flight[d]
+                self.heartbeats.beat(d, now=t)
+                s = version[0] - v
+                if S > 0 and s > S:
+                    # too stale to incorporate — the async analogue of
+                    # the synchronous straggler deadline
+                    events.append((t, "stale_drop", d, version[0]))
+                    dropped_since.append(d)
+                else:
+                    events.append((t, "complete", d, version[0]))
+                    buffer.append((d, s))
+                    if len(buffer) >= M:
+                        aggregate(t)
+                        since_agg = 0
+                fill(t)
+            elif kind == "dropout":
+                if in_flight.get(d) != v:
+                    continue
+                del in_flight[d]
+                dropped_since.append(d)
+                events.append((t, "dropout", d, version[0]))
+                fill(t)
+            elif churn_of(kind, d, t, version[0]) == "online":
+                fill(t)
 
         return FleetTrace(rounds=rounds, events=events,
                           cohort_sizes=cohort_sizes)

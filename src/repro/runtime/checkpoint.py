@@ -85,6 +85,14 @@ class Checkpointer:
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
         os.makedirs(directory, exist_ok=True)
+        # a writer killed between makedirs(tmp) and os.replace leaves a
+        # tmp.<step>.<pid> dir behind forever; sweep them at coordinator
+        # start (only step_<n> dirs are ever restored, so the stale tmp
+        # dirs were dead weight — but they accumulate across restarts)
+        for d in os.listdir(directory):
+            if d.startswith("tmp."):
+                shutil.rmtree(os.path.join(directory, d),
+                              ignore_errors=True)
 
     # ------------------------------------------------------------------
     def _step_dirs(self):

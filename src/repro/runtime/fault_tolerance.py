@@ -48,7 +48,10 @@ class RoundJournal:
                 try:
                     last = json.loads(line)
                 except json.JSONDecodeError:
-                    break  # torn tail write — ignore the partial record
+                    # torn write (a crash mid-append); valid records may
+                    # follow it after a restart, so keep scanning instead
+                    # of treating the tear as the end of the journal
+                    continue
         return last
 
 

@@ -114,10 +114,54 @@ def test_spec_validation_reports_problems():
 
 
 def test_registry_covers_all_systems():
-    assert list_systems() == ["ampere", "fedavg", "pipar", "scaffold",
-                              "splitfed", "splitfedv2", "splitgp"]
-    out = run_experiment(_spec(systems=tuple(list_systems())), dry_run=True)
-    assert out["valid"] and len(out["systems"]) == 7
+    assert list_systems() == ["ampere", "fedavg", "fedbuff", "pipar",
+                              "scaffold", "splitfed", "splitfedv2",
+                              "splitgp"]
+    spec = _spec(systems=tuple(list_systems()),
+                 fleet=FleetConfig(n_devices=6))   # fedbuff needs a fleet
+    out = run_experiment(spec, dry_run=True)
+    assert out["valid"] and len(out["systems"]) == 8
+
+
+def test_spec_validation_fedbuff_needs_fleet():
+    bad = _spec(systems=("fedbuff",))
+    assert any("fedbuff" in p for p in bad.validate())
+    ok = _spec(systems=("fedbuff",),
+               fleet=FleetConfig(n_devices=6, async_buffer_size=2))
+    assert ok.validate() == []
+    neg = _spec(systems=("fedbuff",),
+                fleet=FleetConfig(n_devices=6, async_buffer_size=-1))
+    assert any("async" in p for p in neg.validate())
+
+
+def test_spec_validation_rejects_trace_kind_mismatch(tmp_path):
+    """An async trace can't drive synchronous replays, and fedbuff can't
+    derive a buffered schedule from a sync trace alone — both mismatches
+    must fail at validate(), not mid-run."""
+    from repro.fleet import FleetScheduler
+
+    sync_path = str(tmp_path / "sync.jsonl")
+    _small_trace(3).save(sync_path)
+    acfg = FleetConfig(n_devices=12, seed=0, min_cohort=2, max_cohort=8,
+                       init_cohort=4, async_buffer_size=2, max_staleness=4)
+    async_path = str(tmp_path / "async.jsonl")
+    FleetScheduler(sample_population(acfg),
+                   lambda p: 1.0 / p.speed_factor, acfg).simulate(3) \
+        .save(async_path)
+
+    base = dict(run=_run_cfg(num_clients=12, clients_per_round=4),
+                max_rounds=3)
+    # sync systems on an async trace: rejected
+    bad = _spec(systems=("splitfed",), trace_path=async_path, **base)
+    assert any("buffered-async" in p for p in bad.validate())
+    # fedbuff on a sync trace with no fleet: rejected up front
+    bad2 = _spec(systems=("fedbuff",), trace_path=sync_path, **base)
+    assert any("fleet section" in p for p in bad2.validate())
+    # the matched pairings validate clean
+    assert _spec(systems=("fedbuff",), trace_path=async_path,
+                 **base).validate() == []
+    assert _spec(systems=("splitfed",), trace_path=sync_path,
+                 **base).validate() == []
 
 
 # ---------------------------------------------------------------------------
@@ -277,7 +321,8 @@ def test_committed_spec_validates_and_cli_dry_runs():
     spec = ExperimentSpec.load(
         os.path.join(REPO, "examples", "specs", "compare_smoke.json"))
     assert spec.validate() == []
-    assert {"ampere", "fedavg"} < set(spec.systems)
+    assert {"ampere", "fedavg", "fedbuff"} < set(spec.systems)
+    assert spec.fleet.async_buffer_size > 0     # fedbuff's buffered knobs
     assert sum(1 for s in spec.systems
                if s in ("splitfed", "splitfedv2", "splitgp", "scaffold",
                         "pipar")) >= 2
@@ -334,7 +379,10 @@ def test_sfl_scaffold_resume_continues_from_checkpoint(tmp_path):
     assert tr.runner.journal.last() == {"phase": "sfl-scaffold", "round": 1}
     pack, meta = tr.runner.ckpt.restore()
     state, controls = pack      # root-level tuple survives the round-trip
-    assert meta == {"step": 1, "phase": "sfl-scaffold", "round": 1}
+    assert {k: meta[k] for k in ("step", "phase", "round")} == \
+        {"step": 1, "phase": "sfl-scaffold", "round": 1}
+    # early-stop state rides along so a resume keeps the patience counter
+    assert meta["stopper"]["round"] == 2
     assert set(state) == {"device", "server"}
     c_global, c_k_all = controls
     # the per-client control variates have been updated away from zero
@@ -361,17 +409,19 @@ def _leaves(tree):
 def test_suite_shared_trace_drives_all_systems(tmp_path):
     spec = _spec(
         name="suite",
-        systems=("ampere", "splitfed", "splitgp", "fedavg"),
+        systems=("ampere", "splitfed", "splitgp", "fedavg", "fedbuff"),
         run=_run_cfg(num_clients=12, clients_per_round=4),
         trace_path=str(tmp_path / "trace.jsonl"),
         fleet=FleetConfig(n_devices=12, seed=0, dropout_hazard=0.05,
                           deadline_factor=2.5, min_cohort=2, max_cohort=8,
-                          init_cohort=4),
+                          init_cohort=4, async_buffer_size=2,
+                          max_staleness=4),
         results_dir=str(tmp_path / "res"))
     out = run_experiment(spec)
     assert os.path.exists(spec.trace_path)   # generated once, saved
     trace = FleetTrace.load(spec.trace_path)
     assert len(trace.rounds) == 2
+    assert not trace.is_async    # the shared donor stays synchronous
 
     # every system ran every trace round on the same cohorts
     amp = out["results"]["ampere"]["history"]["device"]
@@ -379,6 +429,10 @@ def test_suite_shared_trace_drives_all_systems(tmp_path):
     for name in ("splitfed", "splitgp", "fedavg"):
         rounds = out["results"][name]["history"]["rounds"]
         assert [r["round"] for r in rounds] == [0, 1]
+    # fedbuff ran the same budget as buffered aggregations
+    fb = out["results"]["fedbuff"]["history"]["device"]
+    assert [r["round"] for r in fb] == [0, 1]
+    assert all(r["buffered"] == 2 for r in fb)
     # replay re-prices wall-clock per system (per-iteration exchange vs
     # Ampere's model-only rounds), so the totals must differ
     assert out["summary"]["splitfed"]["sim_time_s"] > 0
@@ -393,7 +447,37 @@ def test_suite_shared_trace_drives_all_systems(tmp_path):
         summary = json.load(f)
     assert set(summary["summary"]) == set(spec.systems)
 
-    # rerun loads the saved trace -> byte-identical replay
+    # rerun loads the saved trace -> byte-identical replay (fedbuff's
+    # derived buffered schedule is deterministic in the spec, so its
+    # history replays identically too)
     out2 = run_experiment(spec, write_results=False)
     assert out2["results"]["splitfed"]["history"]["rounds"] == \
         out["results"]["splitfed"]["history"]["rounds"]
+    assert out2["results"]["fedbuff"]["history"]["device"] == \
+        out["results"]["fedbuff"]["history"]["device"]
+
+
+@pytest.mark.slow
+def test_fedbuff_beats_sync_replay_under_stragglers(tmp_path):
+    """The acceptance setup: one spec, fedbuff + splitfed, a straggler-
+    heavy population with the deadline off — the buffered mode's
+    simulated wall clock must undercut the synchronous replay that waits
+    for the slowest survivor every round."""
+    spec = _spec(
+        name="straggler",
+        systems=("fedbuff", "splitfed"),
+        run=_run_cfg(num_clients=12, clients_per_round=4),
+        trace_path=str(tmp_path / "trace.jsonl"),
+        fleet=FleetConfig(
+            n_devices=12, seed=0, dropout_hazard=0.05,
+            deadline_factor=0.0,                 # sync waits for slowest
+            min_cohort=2, max_cohort=8, init_cohort=4,
+            async_buffer_size=2, max_staleness=4, max_concurrent=4,
+            class_mix=(("jetson-fast", 0.5), ("phone-3g", 0.5))),
+        max_rounds=4, results_dir=str(tmp_path / "res"))
+    out = run_experiment(spec, write_results=False)
+    fb = out["summary"]["fedbuff"]
+    sf = out["summary"]["splitfed"]
+    assert fb["sim_time_s"] < sf["sim_time_s"]
+    assert out["results"]["fedbuff"]["history"]["device"]
+    assert np.isfinite(fb["final_val_loss"])

@@ -1,0 +1,156 @@
+"""Crash-resume correctness: journal torn lines, checkpoint tmp sweep,
+checkpoint cadence, early-stop state persistence, truncated-trace loads.
+
+These are the regression tests for the resume-path audit (no hypothesis
+dependency — this file must run in offline containers where
+test_optim_runtime.py skips wholesale)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.experiments.runner import Runner, StepOutcome
+from repro.runtime.checkpoint import Checkpointer
+from repro.runtime.fault_tolerance import RoundJournal
+
+
+# ---------------------------------------------------------------------------
+# RoundJournal: a tear in the MIDDLE of the journal must not hide newer
+# records
+# ---------------------------------------------------------------------------
+
+
+def test_journal_skips_torn_middle_line(tmp_path):
+    """A crash tears a line mid-append; the restarted coordinator then
+    appends VALID records after it.  last() must return the newest valid
+    record, not the one before the tear (regression: `break` on the
+    first undecodable line returned a stale resume point)."""
+    j = RoundJournal(str(tmp_path / "j.jsonl"))
+    j.append({"phase": "device", "round": 3})
+    with open(j.path, "a") as f:
+        f.write('{"phase": "device", "rou\n')  # torn mid-journal
+    j.append({"phase": "device", "round": 4})  # post-restart appends
+    j.append({"phase": "device", "round": 5})
+    assert j.last() == {"phase": "device", "round": 5}
+
+
+# ---------------------------------------------------------------------------
+# Checkpointer: stale tmp dirs from crashed writers are swept at init
+# ---------------------------------------------------------------------------
+
+
+def test_checkpointer_sweeps_stale_tmp_dirs(tmp_path):
+    """A writer killed between mkdir(tmp) and os.replace leaves tmp.*
+    behind; a fresh Checkpointer on the directory sweeps them."""
+    stale = tmp_path / "tmp.7.12345"
+    stale.mkdir()
+    (stale / "arrays.npz").write_bytes(b"partial")
+    ck = Checkpointer(str(tmp_path))
+    assert not stale.exists()
+    ck.save(1, {"x": np.ones(2)}, {"phase": "p"})      # still functional
+    got, meta = ck.restore()
+    assert meta["step"] == 1 and got["x"][0] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Runner: checkpoint cadence + early-stop state persistence
+# ---------------------------------------------------------------------------
+
+
+def test_runner_checkpoint_cadence_skips_step0(tmp_path):
+    """checkpoint_every=3 over 7 steps checkpoints after steps 2 and 5 —
+    not the old 0/3/6 cadence whose step-0 save landed after a single
+    round (regression: `step_idx % every == 0` fires at 0)."""
+    r = Runner(str(tmp_path), patience=100)
+    body = lambda s, i, _p: StepOutcome(state=s, record={"round": i})
+    r.run_phase("p", 0, ((i, None) for i in range(7)), body,
+                history_key="rounds", checkpoint_every=3)
+    saved = [step for step, _ in r.ckpt._step_dirs()]
+    assert saved == [2, 5]
+
+
+def test_early_stop_state_survives_resume(tmp_path):
+    """A killed-and-resumed run must stop at the SAME round as an
+    uninterrupted one (regression: EarlyStopper state was never
+    checkpointed, so a resume restarted the patience counter)."""
+    # best at round 1; with patience 3 an uninterrupted run stops after
+    # round 4 (bad rounds 2, 3, 4)
+    series = [1.0, 0.9, 0.95, 0.96, 0.97, 0.98, 0.99, 1.01]
+    body = lambda s, i, _p: StepOutcome(state=s,
+                                        record={"round": i,
+                                                "val_loss": series[i]})
+
+    def run(workdir, start, stop_after=None):
+        r = Runner(str(workdir), patience=3)
+        state, first = r.restore("p", 0)
+        assert first == start
+        n = len(series) if stop_after is None else stop_after
+        r.run_phase("p", state, ((i, None) for i in range(first, n)),
+                    body, history_key="rounds", monitor="val_loss",
+                    mode="min", checkpoint_every=1)
+        return [rec["round"] for rec in r.history["rounds"]]
+
+    uninterrupted = run(tmp_path / "A", start=0)
+    assert uninterrupted == [0, 1, 2, 3, 4]
+
+    killed = run(tmp_path / "B", start=0, stop_after=3)  # dies mid-phase
+    resumed = run(tmp_path / "B", start=3)
+    assert killed + resumed == uninterrupted
+
+
+def test_already_stopped_phase_trains_nothing_on_resume(tmp_path):
+    """A phase that early-stopped before the coordinator died (in a
+    LATER phase) must not train extra rounds when its run_phase is
+    re-entered on restart."""
+    series = [1.0, 0.9, 0.95, 0.96, 0.97, 0.98, 0.99, 1.01]
+    body = lambda s, i, _p: StepOutcome(state=s,
+                                        record={"round": i,
+                                                "val_loss": series[i]})
+    r = Runner(str(tmp_path), patience=3)
+    r.run_phase("p", 0, ((i, None) for i in range(len(series))), body,
+                history_key="rounds", monitor="val_loss", mode="min",
+                checkpoint_every=1)
+    assert [rec["round"] for rec in r.history["rounds"]] == [0, 1, 2, 3, 4]
+
+    r2 = Runner(str(tmp_path), patience=3)
+    state, first = r2.restore("p", 0)
+    assert first == 5                         # checkpointed at the stop
+    r2.run_phase("p", state, ((i, None) for i in range(first, 100)), body,
+                 history_key="rounds", monitor="val_loss", mode="min",
+                 checkpoint_every=1)
+    assert r2.history["rounds"] == []         # nothing retrained
+
+
+# ---------------------------------------------------------------------------
+# FleetTrace.load: a truncated file must raise, not replay fewer rounds
+# ---------------------------------------------------------------------------
+
+
+def _tiny_trace(n_rounds=5):
+    from repro.fleet import FleetConfig, FleetScheduler, sample_population
+
+    cfg = FleetConfig(n_devices=10, seed=0, min_cohort=2, max_cohort=4,
+                      init_cohort=3)
+    pop = sample_population(cfg)
+    return FleetScheduler(pop, lambda p: 1.0 / p.speed_factor,
+                          cfg).simulate(n_rounds)
+
+
+def test_truncated_trace_load_raises(tmp_path):
+    from repro.fleet import FleetTrace
+
+    path = str(tmp_path / "t.jsonl")
+    _tiny_trace(5).save(path, events=False)
+    with open(path) as f:
+        lines = f.readlines()
+    # killed writer: header promises 5 rounds, only 3 landed
+    with open(path, "w") as f:
+        f.writelines(lines[:4])
+    with pytest.raises(ValueError, match="truncated"):
+        FleetTrace.load(path)
+    # intact file still loads, and the header agrees with the body
+    _tiny_trace(5).save(path, events=False)
+    assert len(FleetTrace.load(path).rounds) == 5
+    with open(path) as f:
+        assert json.loads(f.readline())["num_rounds"] == 5

@@ -145,6 +145,108 @@ def test_trace_round_times_reprices_per_algo():
 
 
 # ---------------------------------------------------------------------------
+# buffered semi-synchronous (async) scheduler
+# ---------------------------------------------------------------------------
+
+
+def _async_cfg(**kw):
+    base = dict(async_buffer_size=4, max_staleness=5, max_concurrent=8)
+    base.update(kw)
+    return _fleet_cfg(**base)
+
+
+def test_async_scheduler_same_seed_identical_trace():
+    cfg = _async_cfg()
+    pop = sample_population(cfg)
+    t1 = FleetScheduler(pop, _speed_latency, cfg).simulate(12)
+    t2 = FleetScheduler(pop, _speed_latency, cfg).simulate(12)
+    assert t1.rounds == t2.rounds
+    assert t1.events == t2.events
+    assert t1.is_async
+    # a different seed moves the buffered schedule
+    t3 = FleetScheduler(pop, _speed_latency, cfg, seed=9).simulate(12)
+    assert t1.events != t3.events
+
+
+def test_async_scheduler_invariants():
+    from repro.core.aggregation import staleness_weights
+
+    cfg = _async_cfg(n_devices=60)
+    pop = sample_population(cfg)
+    trace = FleetScheduler(pop, _speed_latency, cfg).simulate(20)
+    assert len(trace.rounds) == 20
+    ids = {p.device_id for p in pop}
+    prev_end = 0.0
+    for r, plan in enumerate(trace.rounds):
+        assert plan.round_idx == r                  # aggregation counter
+        assert len(plan.clients) == cfg.async_buffer_size
+        assert len(plan.staleness) == len(plan.clients)
+        assert set(plan.clients) <= ids
+        assert all(0 <= s <= cfg.max_staleness for s in plan.staleness)
+        # weights are the normalized 1/sqrt(1+s) staleness scaling
+        np.testing.assert_allclose(
+            plan.weights, staleness_weights(plan.staleness), rtol=1e-12)
+        assert len(plan.clients) + len(plan.dropped) == plan.cohort_size
+        assert plan.t_end >= plan.t_start >= prev_end - 1e-12
+        prev_end = plan.t_end
+    # completions straddle aggregation boundaries: some update must have
+    # been trained against an older model version
+    assert any(max(p.staleness) > 0 for p in trace.rounds)
+
+
+def test_async_overlap_beats_sync_wall_clock():
+    """Same straggler-heavy population, deadline off: the buffered mode
+    keeps aggregating on fast completions while the synchronous mode
+    waits for the slowest survivor every round."""
+    mix = (("jetson-fast", 0.5), ("phone-3g", 0.5))
+    sync_cfg = _fleet_cfg(class_mix=mix, deadline_factor=0.0,
+                          target_round_time_factor=0.0)
+    async_cfg = _async_cfg(class_mix=mix, deadline_factor=0.0,
+                           target_round_time_factor=0.0,
+                           async_buffer_size=8, max_concurrent=8)
+    pop = sample_population(sync_cfg)
+    t_sync = FleetScheduler(pop, _speed_latency, sync_cfg).simulate(15)
+    t_async = FleetScheduler(pop, _speed_latency, async_cfg).simulate(15)
+    assert not t_sync.is_async and t_async.is_async
+    assert t_async.total_time < t_sync.total_time
+
+
+def test_async_scheduler_raises_when_buffer_cannot_fill():
+    """Every dispatch fails -> the buffer never reaches M; the async
+    mode must fail loudly instead of spinning forever (the sync mode
+    closes such rounds via the all-dropped rescue)."""
+    cfg = _async_cfg(n_devices=6, dropout_hazard=1.0)
+    pop = sample_population(cfg)
+    with pytest.raises(RuntimeError, match="no progress"):
+        FleetScheduler(pop, _speed_latency, cfg).simulate(3)
+
+
+def test_async_trace_jsonl_roundtrip(tmp_path):
+    cfg = _async_cfg()
+    pop = sample_population(cfg)
+    trace = FleetScheduler(pop, _speed_latency, cfg).simulate(8)
+    path = str(tmp_path / "async.jsonl")
+    trace.save(path)
+    from repro.fleet import FleetTrace
+    back = FleetTrace.load(path)
+    assert back.rounds == trace.rounds       # staleness survives
+    assert back.is_async
+    assert back.events == trace.events
+
+
+def test_async_scheduler_journal_carries_staleness(tmp_path):
+    cfg = _async_cfg()
+    pop = sample_population(cfg)
+    journal = RoundJournal(str(tmp_path / "sched.jsonl"))
+    trace = FleetScheduler(pop, _speed_latency, cfg,
+                           journal=journal).simulate(5)
+    last = journal.last()
+    assert last["round"] == 4
+    assert last["clients"] == list(trace.rounds[-1].clients)
+    assert last["staleness"] == list(trace.rounds[-1].staleness)
+
+
+# ---------------------------------------------------------------------------
 # elastic cohort
 # ---------------------------------------------------------------------------
 
@@ -249,6 +351,63 @@ def test_host_pool_fallback_matches_resident(small_engine):
                                    rtol=1e-5, atol=1e-6)
 
 
+def test_buffered_round_zero_staleness_reduces_to_fedavg(small_engine):
+    """With every snapshot equal to the current global state (staleness
+    0 across the cohort) the FedBuff delta aggregation must equal plain
+    weighted FedAvg of the trained states — checked against a host-level
+    per-client reference on the same (slot-seeded) batches."""
+    from repro.core import aggregation
+
+    engine, state = small_engine
+    ids, w = [1, 3, 8], [1 / 3] * 3
+    snaps = engine.stack_states([state] * len(ids))
+    s_b, m_b = engine.run_buffered_round(dict(state), snaps, 2, ids, w, 0.1)
+
+    idx = engine.buffered_round_indices(2, ids)
+    dev_list, aux_list, losses = [], [], []
+    for j, c in enumerate(ids):
+        batches = jax.tree.map(lambda a: a[idx[j]], engine.pool)
+        dev, aux, loss = engine._client_round(state["device"],
+                                              state["aux"], batches, 0.1)
+        dev_list.append(dev)
+        aux_list.append(aux)
+        losses.append(float(loss))
+    ref = {"device": aggregation.fedavg(dev_list, w),
+           "aux": aggregation.fedavg(aux_list, w)}
+    assert float(m_b["loss"]) == pytest.approx(np.mean(losses), abs=1e-5)
+    for a, b in zip(jax.tree.leaves(s_b), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_buffered_round_stale_snapshot_changes_result(small_engine):
+    """A genuinely stale snapshot must shift the aggregation (the delta
+    is taken against the stale base, not the current state)."""
+    engine, state = small_engine
+    ids, w = [1, 3], [0.5, 0.5]
+    fresh = engine.stack_states([state, state])
+    s_f, _ = engine.run_buffered_round(dict(state), fresh, 1, ids, w, 0.1)
+    older = jax.tree.map(lambda a: a * 0.9, state)
+    mixed = engine.stack_states([state, older])
+    s_m, _ = engine.run_buffered_round(dict(state), mixed, 1, ids, w, 0.1)
+    diffs = [float(np.abs(np.asarray(a, np.float32)
+                          - np.asarray(b, np.float32)).max())
+             for a, b in zip(jax.tree.leaves(s_f), jax.tree.leaves(s_m))]
+    assert max(diffs) > 1e-4
+
+
+def test_buffered_indices_slot_aware(small_engine):
+    """The same device appearing twice in one buffered cohort (completed,
+    re-dispatched, completed again) must train on distinct batches."""
+    engine, _ = small_engine
+    idx = engine.buffered_round_indices(3, [5, 5])
+    assert not np.array_equal(idx[0], idx[1])
+    # still stateless: identical across calls (resume replay)
+    np.testing.assert_array_equal(idx,
+                                  engine.buffered_round_indices(3, [5, 5]))
+
+
 def test_zero_weight_padding_matches_unpadded(small_engine):
     engine, state = small_engine
     ids, w = [2, 5], [0.5, 0.5]
@@ -313,3 +472,106 @@ def test_fleet_resume_matches_uninterrupted(vision_model_run, tmp_path):
     vA = outA["history"]["server"][-1]["val_loss"]
     vB = outB["history"]["server"][-1]["val_loss"]
     assert vA == pytest.approx(vB, rel=1e-4, abs=1e-5)
+
+
+def test_fedbuff_kill_before_staleness_spike_resumes(vision_model_run,
+                                                     tmp_path):
+    """Regression: the ring prune bound must come from the FULL trace.
+    A run killed at max_rounds used to prune with the truncated prefix's
+    maximum staleness, so resuming across a later staleness spike
+    crashed looking up an evicted snapshot version."""
+    from repro.core import aggregation
+    from repro.core.baselines import FedBuffTrainer
+    from repro.data import federate, make_dataset_for_model
+    from repro.fleet import FleetTrace, RoundPlan
+
+    model, run_cfg = vision_model_run
+    run_cfg = replace(run_cfg, checkpoint_every=1)
+    train = make_dataset_for_model(model, 144, seed=0)
+    test = make_dataset_for_model(model, 48, seed=1)
+    clients = federate(train, run_cfg.fed.num_clients, 0.5, seed=0)
+
+    def plan(r, stal):
+        w = aggregation.staleness_weights(stal)
+        return RoundPlan(round_idx=r, t_start=float(r), t_end=r + 1.0,
+                         clients=(0, 1), weights=tuple(float(x) for x in w),
+                         dropped=(), cohort_size=2, round_time=1.0,
+                         staleness=tuple(stal))
+
+    # rounds 0-2 are all-fresh; round 3 suddenly references version 1
+    stales = [(0, 0), (0, 0), (0, 0), (2, 0), (0, 0)]
+    trace = FleetTrace(rounds=[plan(r, s) for r, s in enumerate(stales)],
+                       events=[], cohort_sizes=[2] * len(stales))
+
+    def init(tr):
+        dev, _, aux = tr._init_states(jax.random.PRNGKey(run_cfg.seed))
+        return {"device": dev, "aux": aux}
+
+    trA = FedBuffTrainer(model, run_cfg, clients, test,
+                         workdir=str(tmp_path / "A"), patience=100)
+    trA.run_buffered_device_phase(init(trA), trace)
+    lossesA = [r["loss"] for r in trA.history["device"]]
+
+    trB = FedBuffTrainer(model, run_cfg, clients, test,
+                         workdir=str(tmp_path / "B"), patience=100)
+    trB.run_buffered_device_phase(init(trB), trace, max_rounds=3)  # kill
+    trB2 = FedBuffTrainer(model, run_cfg, clients, test,
+                          workdir=str(tmp_path / "B"), patience=100)
+    trB2.run_buffered_device_phase(init(trB2), trace)  # crossed the spike
+    lossesB = ([r["loss"] for r in trB.history["device"]]
+               + [r["loss"] for r in trB2.history["device"]])
+    assert lossesA == lossesB
+
+
+@pytest.mark.slow
+def test_fedbuff_resume_matches_uninterrupted(vision_model_run, tmp_path):
+    """Buffered device phase killed mid-run resumes onto byte-identical
+    aggregations: the version ring is checkpointed (in-flight clients
+    reference stale snapshots) and batch indices are stateless in
+    (seed, round, slot, client)."""
+    from repro.core import auxiliary, splitting
+    from repro.core.baselines import FedBuffTrainer
+    from repro.data import federate, make_dataset_for_model
+
+    model, run_cfg = vision_model_run
+    run_cfg = replace(run_cfg, checkpoint_every=1)
+    train = make_dataset_for_model(model, 144, seed=0)
+    test = make_dataset_for_model(model, 48, seed=1)
+    clients = federate(train, run_cfg.fed.num_clients, 0.5, seed=0)
+
+    fcfg = _fleet_cfg(n_devices=run_cfg.fed.num_clients,
+                      async_buffer_size=3, max_staleness=4,
+                      max_concurrent=6)
+    pop = sample_population(fcfg)
+    lat = make_latency_fn(model, run_cfg, algo="ampere")
+    trace = FleetScheduler(pop, lat, fcfg).simulate(6)
+    assert trace.is_async
+
+    def init(tr):
+        dev, _, aux = tr._init_states(jax.random.PRNGKey(run_cfg.seed))
+        return {"device": dev, "aux": aux}
+
+    # uninterrupted reference
+    trA = FedBuffTrainer(model, run_cfg, clients, test,
+                         workdir=str(tmp_path / "A"), patience=100)
+    stateA = trA.run_buffered_device_phase(init(trA), trace)
+    lossesA = [r["loss"] for r in trA.history["device"]]
+    assert len(lossesA) == 6
+
+    # "kill" after 3 aggregations
+    trB = FedBuffTrainer(model, run_cfg, clients, test,
+                         workdir=str(tmp_path / "B"), patience=100)
+    trB.run_buffered_device_phase(init(trB), trace, max_rounds=3)
+    assert trB.journal.last() == {"phase": "fedbuff", "round": 2}
+
+    # fresh coordinator on the same workdir resumes at round 3
+    trB2 = FedBuffTrainer(model, run_cfg, clients, test,
+                          workdir=str(tmp_path / "B"), patience=100)
+    stateB = trB2.run_buffered_device_phase(init(trB2), trace)
+    roundsB = [r["round"] for r in trB2.history["device"]]
+    assert roundsB == [3, 4, 5]              # resumed, not recomputed
+    lossesB = ([r["loss"] for r in trB.history["device"]]
+               + [r["loss"] for r in trB2.history["device"]])
+    assert lossesA == lossesB                # byte-identical aggregations
+    for a, b in zip(jax.tree.leaves(stateA), jax.tree.leaves(stateB)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
