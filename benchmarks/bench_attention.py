@@ -1,0 +1,91 @@
+"""Perf trajectory benchmark: flash-attention forward + backward kernels.
+
+Quantifies the fused single-recompute backward (PR 5) against the legacy
+two-sweep schedule — the fused kernel recomputes each (q-tile, kv-tile)
+probability tile once for all three gradients and reads Q/K/V/dO from HBM
+once instead of twice.  Gated in CI against the committed
+``BENCH_attention.json`` (``benchmarks/run.py --gate``), same pattern as
+``BENCH_step.json`` / ``BENCH_fleet.json``.
+
+  PYTHONPATH=src python -m benchmarks.run --only bench_attention
+
+Output ``BENCH_attention.json`` fields:
+
+* ``config``            — attention shape measured (CPU smoke scale here;
+  interpret-mode Pallas lowers to plain XLA so the ratio understates the
+  HBM-traffic win on TPU).
+* ``times_s``           — best-of-``reps`` wall-clock seconds:
+  ``fa_fwd``, ``fa_bwd_fused``, ``fa_bwd_split``.
+* ``bwd_speedup_fused`` — fa_bwd_split / fa_bwd_fused.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import best as _best, save, table
+
+BENCH_PATH = "BENCH_attention.json"
+
+
+def run(quick: bool = True):
+    from repro.kernels.flash_attention import ops as fa_ops
+
+    reps = 3 if quick else 10
+    B, S, Hkv, G, hd = 2, 128, 2, 2, 32
+    bq = bk = 32
+    causal, window, softcap = True, 0, 0.0
+    scale = 1.0 / np.sqrt(hd)
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, G, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, hd)), jnp.float32)
+
+    fwd = jax.jit(lambda q, k, v: fa_ops.flash_attention(
+        q, k, v, causal, window, softcap, scale, bq, bk))
+
+    def grad_fn(strategy):
+        return jax.jit(jax.grad(
+            lambda q, k, v: jnp.sum(jnp.sin(fa_ops.flash_attention(
+                q, k, v, causal, window, softcap, scale, bq, bk, strategy))),
+            argnums=(0, 1, 2)))
+
+    bwd_fused = grad_fn("fused")
+    bwd_split = grad_fn("split")
+    fwd(q, k, v).block_until_ready()                    # compile
+    jax.block_until_ready(bwd_fused(q, k, v))
+    jax.block_until_ready(bwd_split(q, k, v))
+
+    times = {
+        "fa_fwd": _best(lambda: fwd(q, k, v).block_until_ready(), reps),
+        "fa_bwd_fused": _best(
+            lambda: jax.block_until_ready(bwd_fused(q, k, v)), reps),
+        "fa_bwd_split": _best(
+            lambda: jax.block_until_ready(bwd_split(q, k, v)), reps),
+    }
+    speedup = times["fa_bwd_split"] / times["fa_bwd_fused"]
+    payload = {
+        "config": {"B": B, "S": S, "Hkv": Hkv, "G": G, "hd": hd,
+                   "block_q": bq, "block_k": bk, "causal": causal,
+                   "backend": jax.default_backend()},
+        "times_s": {k_: round(v_, 6) for k_, v_ in times.items()},
+        "bwd_speedup_fused": round(speedup, 3),
+    }
+    with open(BENCH_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    save("bench_attention", payload)
+
+    rows = [{"metric": k_, "seconds": v_} for k_, v_ in times.items()]
+    rows.append({"metric": "bwd speedup (split/fused)", "seconds": speedup})
+    table(rows, ["metric", "seconds"],
+          "bench_attention — flash-attention wall clock")
+    return payload
+
+
+if __name__ == "__main__":
+    run(quick=False)

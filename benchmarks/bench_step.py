@@ -28,24 +28,14 @@ Output ``BENCH_step.json`` fields:
 from __future__ import annotations
 
 import json
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import save, setup_fed_run, table
+from benchmarks.common import best as _best, save, setup_fed_run, table
 
 BENCH_PATH = "BENCH_step.json"
-
-
-def _best(fn, reps: int) -> float:
-    ts = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn()
-        ts.append(time.perf_counter() - t0)
-    return min(ts)
 
 
 def _bench_xent(reps: int):

@@ -11,6 +11,16 @@ import numpy as np
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/bench")
 
 
+def best(fn, reps: int) -> float:
+    """Best-of-``reps`` wall-clock seconds for ``fn()`` (perf gates)."""
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
 def save(name: str, payload):
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")

@@ -9,9 +9,10 @@ full scale; training benchmarks (Figs 8/10/11, Table 4) run the real
 federated systems at smoke scale on synthetic non-IID data.  The roofline
 benchmark reads the dry-run matrix results when present.
 
-``bench_step`` / ``bench_fleet`` are the perf-trajectory gates (not paper
-figures): they time the step paths / fleet paths and write
-``BENCH_step.json`` / ``BENCH_fleet.json`` at the repo root —
+``bench_step`` / ``bench_fleet`` / ``bench_attention`` are the
+perf-trajectory gates (not paper figures): they time the step paths /
+fleet paths / flash-attention kernels and write ``BENCH_step.json`` /
+``BENCH_fleet.json`` / ``BENCH_attention.json`` at the repo root —
 ``{"config": {...}, "times_s": {name: best-of-N seconds}, ...}``.
 Run one alone with ``--only bench_step``; compare two snapshots with
 ``python scripts/check_bench_regression.py old.json new.json`` (exits
@@ -35,6 +36,7 @@ import time
 import traceback
 
 from benchmarks import (
+    bench_attention,
     bench_fleet,
     bench_step,
     fig3_fig6_splitpoint,
@@ -64,11 +66,13 @@ BENCHMARKS = {
     "roofline": roofline.run,
     "bench_step": bench_step.run,
     "bench_fleet": bench_fleet.run,
+    "bench_attention": bench_attention.run,
 }
 
 # gate benchmarks: name -> committed snapshot they rewrite
 GATED = {"bench_step": bench_step.BENCH_PATH,
-         "bench_fleet": bench_fleet.BENCH_PATH}
+         "bench_fleet": bench_fleet.BENCH_PATH,
+         "bench_attention": bench_attention.BENCH_PATH}
 
 
 def run_gate(threshold: float) -> int:

@@ -4,10 +4,11 @@
 #   scripts/ci.sh            # pytest -m "not slow" + bench gate
 #   CI_SLOW=1 scripts/ci.sh  # also run the slow end-to-end tier
 #
-# The bench gate re-runs bench_step / bench_fleet and compares against the
-# committed BENCH_step.json / BENCH_fleet.json (scripts/
-# check_bench_regression.py; >25% step-time regression fails — CPU boxes
-# are noisy, the precise trend lives in the committed snapshots).
+# The bench gate re-runs bench_step / bench_fleet / bench_attention and
+# compares against the committed BENCH_step.json / BENCH_fleet.json /
+# BENCH_attention.json (scripts/check_bench_regression.py; >25% step-time
+# regression fails — CPU boxes are noisy, the precise trend lives in the
+# committed snapshots).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

@@ -13,7 +13,13 @@ Two implementations sit behind one interface:
   path does ~2x the minimal score FLOPs — this is accounted for in the
   roofline notes and attacked in §Perf.
 * ``impl="pallas"`` — the TPU Pallas flash-attention kernel
-  (:mod:`repro.kernels.flash_attention`), BlockSpec-tiled to VMEM.
+  (:mod:`repro.kernels.flash_attention`), BlockSpec-tiled to VMEM.  Its
+  backward defaults to the fused single-recompute schedule (one P-tile
+  recompute feeds dQ/dK/dV); ``fa_bwd_strategy="split"`` selects the
+  legacy two-sweep kernels for A/B — reachable from every model entry
+  point as ``impl="pallas:split"`` (parsed in ``transformer.block_apply``).
+  The kernel returns the compute dtype — bf16 models keep bf16
+  activations through attention.
 
 Cache layout: ``{"k": (B, Smax, Hkv, hd), "v": (B, Smax, Hkv, hd)}`` plus a
 scalar ``index`` held by the caller (shared across layers).
@@ -162,7 +168,8 @@ def dot_attention(q, k, v, *, causal: bool, window: int, softcap: float,
 
 
 def attention(cfg, p, x, positions, window: int, *, cache=None,
-              cache_index=None, impl: str = "xla", kv_block: int = 1024):
+              cache_index=None, impl: str = "xla", kv_block: int = 1024,
+              fa_bwd_strategy: str = "fused"):
     """Complete attention sublayer: projections, rope, core, out-projection.
 
     Modes:
@@ -196,7 +203,8 @@ def attention(cfg, p, x, positions, window: int, *, cache=None,
         if impl == "pallas":
             from repro.kernels.flash_attention import ops as fa_ops
             o = fa_ops.flash_attention(qg, k, v, causal=True, window=window,
-                                       softcap=sc, scale=scale)
+                                       softcap=sc, scale=scale,
+                                       bwd_strategy=fa_bwd_strategy)
         else:
             o = chunked_attention(qg, k, v, causal=True, window=window,
                                   softcap=sc, scale=scale, kv_block=kv_block)

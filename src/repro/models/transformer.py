@@ -65,14 +65,21 @@ def init_block(key, cfg, layer_idx: int):
 
 def block_apply(cfg, p, x, positions, layer_idx: int, *, cache=None,
                 cache_index=None, impl="xla"):
-    """One decoder block.  Returns (x, new_cache, aux_loss)."""
+    """One decoder block.  Returns (x, new_cache, aux_loss).
+
+    ``impl`` may carry a flash-attention backward A/B suffix —
+    ``"pallas:split"`` selects the legacy two-sweep backward (default is
+    the fused single-recompute one); the base impl is what mamba sees.
+    """
+    impl, _, fa_bwd = impl.partition(":")
     mixer, window, is_moe = cfg.layer_kind(layer_idx)
     x = shard(x, "batch", "seq", None)
     h = L.rmsnorm(p["pre_norm"], x, cfg.norm_eps, cfg.dtype)
     if mixer == "attn":
         mix, new_cache = A.attention(cfg, p["attn"], h, positions, window,
                                      cache=cache, cache_index=cache_index,
-                                     impl=impl)
+                                     impl=impl,
+                                     fa_bwd_strategy=fa_bwd or "fused")
     else:
         mix, new_cache = M.mamba(cfg, p["mamba"], h, cache=cache, impl=impl)
     if cfg.post_block_norm:
