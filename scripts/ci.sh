@@ -19,4 +19,11 @@ if [[ "${CI_SLOW:-0}" == "1" ]]; then
 fi
 # spec validation + system registry smoke over the committed comparison spec
 python scripts/run_experiment.py examples/specs/compare_smoke.json --dry-run
+# seeded chaos smoke: drops/corruption/duplicates/torn writes injected at
+# the transport + storage boundaries; the run must complete (retries +
+# quorum absorb the faults) on a tiny vit in well under 30s
+CHAOS_DIR=$(mktemp -d)
+python scripts/run_experiment.py examples/specs/chaos_smoke.json \
+    --results-dir "$CHAOS_DIR"
+rm -rf "$CHAOS_DIR"
 python -m benchmarks.run --gate

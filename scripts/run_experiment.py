@@ -30,6 +30,13 @@ def main(argv=None):
                     help="override spec.results_dir")
     ap.add_argument("--echo", action="store_true",
                     help="echo per-round metrics lines")
+    ap.add_argument("--role", choices=("device", "server"), default=None,
+                    help="two-process socket mode: run only this side of "
+                         "the Ampere pipeline (see repro.transport.roles)")
+    ap.add_argument("--host", default=None,
+                    help="socket mode: override spec.transport.host")
+    ap.add_argument("--port", type=int, default=None,
+                    help="socket mode: override spec.transport.port")
     args = ap.parse_args(argv)
 
     from repro.configs.base import replace
@@ -45,6 +52,18 @@ def main(argv=None):
         for p in problems:
             print(f"  - {p}", file=sys.stderr)
         return 1
+
+    if args.role is not None:
+        from repro.transport import roles
+        if args.role == "device":
+            out = roles.run_device_role(spec, host=args.host,
+                                        port=args.port, echo=args.echo)
+        else:
+            out = roles.run_server_role(spec, host=args.host,
+                                        port=args.port, echo=args.echo,
+                                        results_dir=args.results_dir)
+        print(json.dumps(out.get("summary") or out.get("result"), indent=1))
+        return 0
 
     if args.dry_run:
         out = run_experiment(spec, dry_run=True)

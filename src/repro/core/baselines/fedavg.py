@@ -18,6 +18,7 @@ from repro.core import aggregation, comm_model, evaluate, losses, steps
 from repro.data.pipeline import ClientData, round_batches
 from repro.experiments.runner import Runner, StepOutcome
 from repro.optim import make_schedule
+from repro.transport import cohort_exchange
 
 
 def make_fedavg_round_step(model, run_cfg):
@@ -59,16 +60,21 @@ def make_fedavg_round_step(model, run_cfg):
 class FedAvgTrainer:
     def __init__(self, model, run_cfg, clients: List[ClientData], eval_data,
                  workdir: Optional[str] = None, patience: int = 15,
-                 log_echo: bool = False):
+                 log_echo: bool = False, transport=None,
+                 quorum_frac: float = 1.0):
         self.model = model
         self.run = run_cfg
         self.clients = clients
         self.eval_data = eval_data
+        self.transport = transport
+        self.quorum_frac = quorum_frac
         self.rng = np.random.default_rng(run_cfg.fed.seed)
         self.runner = Runner(workdir, patience=patience, log_echo=log_echo,
                              log_name="fedavg.jsonl",
                              history={"rounds": [], "comm_bytes": 0,
-                                      "sim_time": 0.0})
+                                      "sim_time": 0.0},
+                             fault_plan=(transport.fault_plan
+                                         if transport is not None else None))
         self.log = self.runner.log
         self.patience = patience
         self._round = jax.jit(make_fedavg_round_step(model, run_cfg))
@@ -101,11 +107,19 @@ class FedAvgTrainer:
                 cohort = cohort_plan[rnd]
             else:
                 cohort = aggregation.sample_cohort(self.rng, fed, rnd)
+            kept, wire, extra, excluded = cohort_exchange(
+                self.transport, round_key=f"fedavg/{rnd}",
+                clients=cohort["clients"], one_way_bytes=full_bytes,
+                quorum_frac=self.quorum_frac)
+            survivors = [cohort["clients"][i] for i in kept]
+            sweights = [cohort["weights"][i] for i in kept]
+            if excluded:    # quorum-degraded round: reweight the survivors
+                total = sum(sweights)
+                sweights = [sw / total for sw in sweights]
             pad_k = (K if cohort_plan is None
                      else int(cohort.get("cohort_size",
                                          len(cohort["clients"]))))
-            ids, w = aggregation.pad_cohort(cohort["clients"],
-                                            cohort["weights"], pad_k)
+            ids, w = aggregation.pad_cohort(survivors, sweights, pad_k)
             batches = round_batches(self.clients, ids, fed.local_steps,
                                     fed.device_batch_size)
             batches = {k: jnp.asarray(v) for k, v in batches.items()}
@@ -123,13 +137,16 @@ class FedAvgTrainer:
                     n_samples=fed.local_steps * fed.device_batch_size,
                     batch_size=fed.device_batch_size, seq_len=self.seq_len,
                     sizes=self.sizes)
+            log = {"variant": "fedavg"}
+            if self.transport is not None and self.transport.faulty:
+                log["excluded"] = len(excluded)
             return StepOutcome(
                 state=params_new,
                 record={"round": rnd, "loss": float(metrics["loss"]),
                         "val_loss": val["loss"], "val_acc": val["acc"]},
-                comm_bytes=2 * len(cohort["clients"]) * full_bytes,
-                sim_time=t,
-                log={"variant": "fedavg"})
+                comm_bytes=wire,
+                sim_time=t + extra,
+                log=log)
 
         params = self.runner.run_phase(
             "fedavg", params,

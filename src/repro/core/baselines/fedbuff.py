@@ -79,28 +79,42 @@ class FedBuffTrainer(AmpereTrainer):
         ring = {k: jax.tree.map(jnp.asarray, v) for k, v in ring.items()}
 
         def body(ring, rnd, plan):
+            from repro.transport import cohort_exchange
+
+            kept, wire, extra, excluded = cohort_exchange(
+                self.transport, round_key=f"fedbuff/{rnd}",
+                clients=plan.clients,
+                one_way_bytes=self.sizes.device + self.sizes.aux,
+                quorum_frac=self.quorum_frac)
+            clients = [plan.clients[i] for i in kept]
+            weights = [plan.weights[i] for i in kept]
+            staleness = [plan.staleness[i] for i in kept]
+            if excluded:    # quorum-degraded buffer: reweight the survivors
+                total = sum(weights)
+                weights = [w / total for w in weights]
             cur = ring[str(rnd)]
             snaps = engine.stack_states(
-                [ring[str(rnd - s)] for s in plan.staleness])
+                [ring[str(rnd - s)] for s in staleness])
             new, metrics = engine.run_buffered_round(
-                cur, snaps, rnd, plan.clients, plan.weights,
-                self._sched(rnd))
+                cur, snaps, rnd, clients, weights, self._sched(rnd))
             ring = dict(ring)
             ring[str(rnd + 1)] = new
             for k in [k for k in ring if int(k) < rnd + 1 - s_max]:
                 del ring[k]
             val = aux_eval(new)
+            log = {"dropped": len(plan.dropped),
+                   "sim_t": round(plan.t_end, 6)}
+            if self.transport is not None and self.transport.faulty:
+                log["excluded"] = len(excluded)
             return StepOutcome(
                 state=ring,
                 record={"round": rnd, "loss": float(metrics["loss"]),
                         "t_end": plan.t_end,
-                        "buffered": len(plan.clients),
-                        "staleness_max": int(max(plan.staleness)), **val},
-                comm_bytes=2 * len(plan.clients) * (
-                    self.sizes.device + self.sizes.aux),
-                sim_time=plan.round_time,
-                log={"dropped": len(plan.dropped),
-                     "sim_t": round(plan.t_end, 6)})
+                        "buffered": len(clients),
+                        "staleness_max": int(max(staleness)), **val},
+                comm_bytes=wire,
+                sim_time=plan.round_time + extra,
+                log=log)
 
         ring = self.runner.run_phase(
             "fedbuff", ring,

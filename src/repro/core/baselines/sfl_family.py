@@ -14,6 +14,11 @@
 * ``pipar``      — PiPar [Zhang et al., JPDC'24]: identical *mathematics*
   to SplitFed; pipeline-parallel overlap changes only the simulated
   wall-clock (comm_model handles it), so it shares the splitfed step.
+* ``splitfed_mb`` — minibatch-SGD SplitFed [Oh et al., arXiv:2308.11953]:
+  the cohort's joint gradients are weight-averaged every iteration and a
+  single global SGD step is taken on the shared split model, instead of
+  H local steps FedAvg'd at round end.  Same per-iteration exchange
+  volume as splitfed.
 
 Every iteration of these systems exchanges activations + gradients with
 the server — that is precisely the per-iteration traffic Ampere eliminates;
@@ -34,6 +39,7 @@ from repro.data.pipeline import ClientData, round_batches
 from repro.experiments.runner import Runner, StepOutcome
 from repro.models import build_model
 from repro.optim import make_schedule
+from repro.transport import cohort_exchange
 
 _SGD = lambda par, grads, lr: jax.tree.map(
     lambda q, g: (q.astype(jnp.float32) - lr * g.astype(jnp.float32)
@@ -154,6 +160,28 @@ def make_sfl_round_step(model, run_cfg, variant: str = "splitfed"):
                     (new_c, c_k_new), {"loss": jnp.sum(loss_k * w)})
         return round_step
 
+    if variant == "splitfed_mb":
+        def round_step(state, batches, weights, lr):
+            par = (state["device"], state["server"])
+            w = aggregation.normalize_weights(weights)
+            # (K, H, b, ...) -> (H, K, b, ...): scan iterations, vmap the
+            # cohort inside each — one averaged gradient step per iteration
+            by_iter = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batches)
+
+            def one(par, batch_k):
+                loss_k, grads_k = jax.vmap(
+                    jax.value_and_grad(joint_loss), in_axes=(None, 0))(
+                        par, batch_k)
+                grads = jax.tree.map(
+                    lambda g: jnp.einsum("k,k...->...", w,
+                                         g.astype(jnp.float32)), grads_k)
+                return _SGD(par, grads, lr), jnp.sum(loss_k * w)
+
+            par, losses_h = jax.lax.scan(one, par, by_iter, length=H)
+            return ({"device": par[0], "server": par[1]},
+                    {"loss": jnp.mean(losses_h)})
+        return round_step
+
     raise ValueError(f"unknown SFL variant {variant!r}")
 
 
@@ -162,17 +190,22 @@ class SFLTrainer:
 
     def __init__(self, model, run_cfg, clients: List[ClientData], eval_data,
                  variant: str = "splitfed", workdir: Optional[str] = None,
-                 patience: int = 15, log_echo: bool = False):
+                 patience: int = 15, log_echo: bool = False, transport=None,
+                 quorum_frac: float = 1.0):
         self.model = model
         self.run = run_cfg
         self.variant = variant
         self.clients = clients
         self.eval_data = eval_data
+        self.transport = transport
+        self.quorum_frac = quorum_frac
         self.rng = np.random.default_rng(run_cfg.fed.seed)
         self.runner = Runner(workdir, patience=patience, log_echo=log_echo,
                              log_name=f"{variant}.jsonl",
                              history={"rounds": [], "comm_bytes": 0,
-                                      "sim_time": 0.0})
+                                      "sim_time": 0.0},
+                             fault_plan=(transport.fault_plan
+                                         if transport is not None else None))
         self.log = self.runner.log
         self.patience = patience
         self._round = jax.jit(make_sfl_round_step(model, run_cfg, variant))
@@ -239,13 +272,31 @@ class SFLTrainer:
                 cohort = cohort_plan[rnd]
             else:
                 cohort = aggregation.sample_cohort(self.rng, fed, rnd)
+            # per-round comm: model exchanges + per-iteration act/grad
+            iters = fed.local_steps
+            b = fed.device_batch_size
+            act_bytes = 2 * self.sizes.act_per_sample * b * iters
+            model_bytes = 2 * (self.sizes.device
+                               + (self.sizes.aux if self.variant == "splitgp"
+                                  else 0))
+            if self.variant == "scaffold":
+                model_bytes *= 2
+            kept, wire, extra, excluded = cohort_exchange(
+                self.transport, round_key=f"sfl-{self.variant}/{rnd}",
+                clients=cohort["clients"],
+                one_way_bytes=(act_bytes + model_bytes) // 2,
+                quorum_frac=self.quorum_frac)
+            survivors = [cohort["clients"][i] for i in kept]
+            sweights = [cohort["weights"][i] for i in kept]
+            if excluded:    # quorum-degraded round: reweight the survivors
+                total = sum(sweights)
+                sweights = [sw / total for sw in sweights]
             # pad to cohort_size (elastic K from a trace takes few distinct
             # values, so the jitted round recompiles rarely)
             pad_k = (K if cohort_plan is None
                      else int(cohort.get("cohort_size",
                                          len(cohort["clients"]))))
-            ids, w = aggregation.pad_cohort(cohort["clients"],
-                                            cohort["weights"], pad_k)
+            ids, w = aggregation.pad_cohort(survivors, sweights, pad_k)
             batches = round_batches(self.clients, ids, fed.local_steps,
                                     fed.device_batch_size)
             batches = {k: jnp.asarray(v) for k, v in batches.items()}
@@ -270,15 +321,6 @@ class SFLTrainer:
             last["merged"] = merged
             val = evaluate.evaluate(merged_model, merged, self.eval_data,
                                     eval_step=eval_step)
-            # per-round comm: model exchanges + per-iteration act/grad
-            iters = fed.local_steps
-            b = fed.device_batch_size
-            act_bytes = 2 * self.sizes.act_per_sample * b * iters
-            model_bytes = 2 * (self.sizes.device
-                               + (self.sizes.aux if self.variant == "splitgp"
-                                  else 0))
-            if self.variant == "scaffold":
-                model_bytes *= 2
             n_round_samples = b * iters
             if cohort_plan is not None and \
                     cohort.get("round_time") is not None:
@@ -288,13 +330,16 @@ class SFLTrainer:
                     "pipar" if self.variant == "pipar" else "splitfed",
                     self.model, self.run.split, tm, n_samples=n_round_samples,
                     batch_size=b, seq_len=self.seq_len, sizes=self.sizes)
+            log = {"variant": self.variant}
+            if self.transport is not None and self.transport.faulty:
+                log["excluded"] = len(excluded)
             return StepOutcome(
                 state=(state, controls),
                 record={"round": rnd, "loss": float(metrics["loss"]),
                         "val_loss": val["loss"], "val_acc": val["acc"]},
-                comm_bytes=len(cohort["clients"]) * (act_bytes + model_bytes),
-                sim_time=t,
-                log={"variant": self.variant})
+                comm_bytes=wire,
+                sim_time=t + extra,
+                log=log)
 
         state, controls = self.runner.run_phase(
             f"sfl-{self.variant}", pack,

@@ -110,7 +110,7 @@ def comm_volume(algo: str, sizes: SplitSizes, *, epochs: int,
     if algo == "fedavg":
         s_full = sizes.device + sizes.server
         return 2 * epochs * s_full
-    if algo in ("splitfed", "splitfedv2", "pipar"):
+    if algo in ("splitfed", "splitfed_mb", "splitfedv2", "pipar"):
         return 2 * epochs * (sizes.device + s_act_total)
     if algo == "scaffold":
         # control variates double the model exchange
@@ -130,7 +130,8 @@ def comm_rounds(algo: str, *, epochs: int, iters_per_epoch: int,
     activation-batch / gradient-batch transfer is one round)."""
     if algo == "fedavg":
         return 2 * epochs
-    if algo in ("splitfed", "splitfedv2", "pipar", "scaffold", "splitgp"):
+    if algo in ("splitfed", "splitfed_mb", "splitfedv2", "pipar", "scaffold",
+                "splitgp"):
         return 2 * epochs + 2 * epochs * iters_per_epoch
     if algo == "ampere":
         nd = device_epochs if device_epochs is not None else epochs

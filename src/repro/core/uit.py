@@ -55,13 +55,15 @@ from repro.data.pipeline import (ClientData, DevicePrefetcher, client_pool,
 from repro.experiments.runner import Runner, StepOutcome
 from repro.models import build_model
 from repro.optim import make_schedule
+from repro.transport import QuorumError, cohort_exchange, required_quorum
 
 
 class AmpereTrainer:
     def __init__(self, model, run_cfg, clients: List[ClientData],
                  eval_data, workdir: Optional[str] = None,
                  patience: int = 15, log_echo: bool = False,
-                 consolidate: bool = True):
+                 consolidate: bool = True, transport=None,
+                 quorum_frac: float = 1.0):
         self.model = model
         self.run = run_cfg
         self.clients = clients
@@ -69,13 +71,19 @@ class AmpereTrainer:
         self.workdir = workdir
         self.patience = patience
         self.consolidate = consolidate
+        # optional fault-injecting transport; None keeps the legacy
+        # analytic accounting byte-for-byte
+        self.transport = transport
+        self.quorum_frac = quorum_frac
         self.rng = np.random.default_rng(run_cfg.fed.seed)
         # cross-cutting loop machinery (metrics, checkpoint/journal,
         # accounting, early stop) lives in the shared Runner; the legacy
         # attribute names stay as aliases for existing callers/tests
         self.runner = Runner(workdir, patience=patience, log_echo=log_echo,
                              history={"device": [], "server": [],
-                                      "comm_bytes": 0, "sim_time": 0.0})
+                                      "comm_bytes": 0, "sim_time": 0.0},
+                             fault_plan=(transport.fault_plan
+                                         if transport is not None else None))
         self.log = self.runner.log
         self.ckpt = self.runner.ckpt
         self.journal = self.runner.journal
@@ -143,8 +151,17 @@ class AmpereTrainer:
 
         def body(state, rnd, _plan):
             cohort = aggregation.sample_cohort(self.rng, fed, rnd)
-            ids, w = aggregation.pad_cohort(cohort["clients"],
-                                            cohort["weights"], K)
+            kept, wire, extra, excluded = cohort_exchange(
+                self.transport, round_key=f"ampere/device/{rnd}",
+                clients=cohort["clients"],
+                one_way_bytes=self.sizes.device + self.sizes.aux,
+                quorum_frac=self.quorum_frac)
+            survivors = [cohort["clients"][i] for i in kept]
+            weights = [cohort["weights"][i] for i in kept]
+            if excluded:    # quorum-degraded round: reweight the survivors
+                total = sum(weights)
+                weights = [w_ / total for w_ in weights]
+            ids, w = aggregation.pad_cohort(survivors, weights, K)
             lr = self._sched(rnd)
             if resident:
                 idx = np.stack([
@@ -161,13 +178,15 @@ class AmpereTrainer:
                 state, metrics = self._device_round(
                     state, batches, jnp.asarray(w, jnp.float32), lr)
             val = aux_eval(state)
+            log = {"dropped": len(cohort["dropped"])}
+            if self.transport is not None and self.transport.faulty:
+                log["excluded"] = len(excluded)
             return StepOutcome(
                 state=state,
                 record={"round": rnd, "loss": float(metrics["loss"]), **val},
-                comm_bytes=2 * len(cohort["clients"]) * (
-                    self.sizes.device + self.sizes.aux),
-                sim_time=cohort["round_time"],
-                log={"dropped": len(cohort["dropped"])})
+                comm_bytes=wire,
+                sim_time=cohort["round_time"] + extra,
+                log=log)
 
         rounds = max_rounds if max_rounds is not None else fed.device_epochs
         return self.runner.run_phase(
@@ -200,20 +219,32 @@ class AmpereTrainer:
 
         def body(state, rnd, plan):
             lr = self._sched(rnd)
+            kept, wire, extra, excluded = cohort_exchange(
+                self.transport, round_key=f"ampere/fleet/{rnd}",
+                clients=plan.clients,
+                one_way_bytes=self.sizes.device + self.sizes.aux,
+                quorum_frac=self.quorum_frac)
+            survivors = [plan.clients[i] for i in kept]
+            weights = [plan.weights[i] for i in kept]
+            if excluded:    # quorum-degraded round: reweight the survivors
+                total = sum(weights)
+                weights = [w_ / total for w_ in weights]
             state, metrics = engine.run_round(
-                state, rnd, plan.clients, plan.weights, lr,
+                state, rnd, survivors, weights, lr,
                 pad_to=plan.cohort_size)
             val = aux_eval(state)
+            log = {"dropped": len(plan.dropped),
+                   "sim_t": round(plan.t_end, 6)}
+            if self.transport is not None and self.transport.faulty:
+                log["excluded"] = len(excluded)
             return StepOutcome(
                 state=state,
                 record={"round": rnd, "loss": float(metrics["loss"]),
                         "t_end": plan.t_end, "cohort": plan.cohort_size,
-                        "survivors": len(plan.clients), **val},
-                comm_bytes=2 * len(plan.clients) * (
-                    self.sizes.device + self.sizes.aux),
-                sim_time=plan.round_time,
-                log={"dropped": len(plan.dropped),
-                     "sim_t": round(plan.t_end, 6)})
+                        "survivors": len(survivors), **val},
+                comm_bytes=wire,
+                sim_time=plan.round_time + extra,
+                log=log)
 
         plans = trace.rounds if max_rounds is None else \
             trace.rounds[:max_rounds]
@@ -306,14 +337,59 @@ class AmpereTrainer:
                     yield (client.client_id, arrays[lab_key][idx]), \
                         arrays[inp_key][idx]
 
+        transport = self.transport
+        faulty = transport is not None and transport.faulty
+        wire_total = 0
+        client_extra: dict = {}
+        failed: set = set()
+        counters: dict = {}
+        pending: dict = {}
         store.start_writer()
         # double-buffered upload: batch k+1 transfers while k computes
         for (cid, labels), inp in DevicePrefetcher(host_batches()):
             shard = {"acts": np.asarray(fwd(dev_state["device"], inp),
                                         np.float32),
                      lab_key: labels}
-            store.submit(cid, shard)
+            if transport is not None:
+                # each shard is one framed message; the idempotency key
+                # (client, shard index) is stable across retries and
+                # across a crash-resumed rerun of this one-shot step
+                i = counters.get(cid, 0)
+                counters[cid] = i + 1
+                nbytes = ActivationStore.shard_nbytes(shard, store.quantize)
+                bw = (client_bandwidth_bps.get(
+                          cid, comm_model.BANDWIDTH_BPS)
+                      if client_bandwidth_bps is not None else None)
+                res = transport.transfer(f"acts/{cid}/{i}", nbytes,
+                                         device=cid, bandwidth_bps=bw)
+                wire_total += res.wire_bytes
+                client_extra[cid] = client_extra.get(cid, 0.0) \
+                    + res.extra_time
+                if not res.ok:
+                    failed.add(cid)
+                    continue
+                if not res.first_delivery:
+                    continue    # duplicate absorbed by the idempotency key
+            if faulty:
+                # hold shards back until the whole client verifies, so a
+                # device that perma-fails mid-stream never half-lands
+                pending.setdefault(cid, []).append(shard)
+            else:
+                store.submit(cid, shard)
+        for cid, shards in pending.items():
+            if cid in failed:
+                continue
+            for shard in shards:
+                store.submit(cid, shard)
         store.finish()
+        if faulty and failed:
+            survivors = len(self.clients) - len(failed)
+            need = required_quorum(len(self.clients), self.quorum_frac)
+            if survivors < need:
+                raise QuorumError(
+                    f"activation upload: only {survivors}/"
+                    f"{len(self.clients)} clients verified, quorum needs "
+                    f"{need} (failed: {sorted(failed)})")
         if upload == "parallel":
             n = max(store.num_samples(), 1)
             bytes_per_sample = store.bytes_received / n  # actual (incl int8)
@@ -330,9 +406,24 @@ class AmpereTrainer:
                 t_up = biggest * bytes_per_sample / comm_model.BANDWIDTH_BPS
         else:
             t_up = store.bytes_received / comm_model.BANDWIDTH_BPS
-        self.runner.account(comm_bytes=store.bytes_received, sim_time=t_up)
-        self.log.log(phase="transfer", bytes=store.bytes_received,
-                     upload=upload)
+        extra_total = 0.0
+        if client_extra:
+            extra_total = (max(client_extra.values())
+                           if upload == "parallel"
+                           else sum(client_extra.values()))
+        # fault-free transport moves exactly the stored bytes, so this
+        # stays byte-identical to the legacy analytic accounting
+        self.runner.account(
+            comm_bytes=wire_total if transport is not None
+            else store.bytes_received,
+            sim_time=t_up + extra_total)
+        if faulty:
+            self.log.log(phase="transfer", bytes=store.bytes_received,
+                         upload=upload, wire=wire_total,
+                         excluded=len(failed))
+        else:
+            self.log.log(phase="transfer", bytes=store.bytes_received,
+                         upload=upload)
         return store
 
     # ------------------------------------------------------------------

@@ -76,6 +76,19 @@ class ActivationStore:
         """Synchronous upload (tests / simple drivers)."""
         self._store(client_id, shard)
 
+    @staticmethod
+    def shard_nbytes(shard: dict, quantize: bool) -> int:
+        """Stored bytes for ``shard`` under ``quantize`` — the analytic
+        mirror of :meth:`_store`'s accounting (asserted there), used by
+        the transport layer to price a shard before/without storing it."""
+        acts = np.asarray(shard["acts"])
+        if quantize:
+            nbytes = acts.size + (acts.size // acts.shape[-1]) * 4
+        else:
+            nbytes = acts.size * 4
+        return nbytes + sum(np.asarray(v).nbytes for k, v in shard.items()
+                            if k not in ("acts", "acts_scale"))
+
     def _store(self, client_id: int, shard: dict):
         shard = dict(shard)
         acts = np.asarray(shard["acts"])
@@ -91,6 +104,7 @@ class ActivationStore:
             nbytes = shard["acts"].nbytes
         nbytes += sum(np.asarray(v).nbytes for k, v in shard.items()
                       if k not in ("acts", "acts_scale"))
+        assert nbytes == self.shard_nbytes(shard, self.quantize)
         with self._lock:
             self._mem.setdefault(int(client_id), []).append(shard)
             self.bytes_received += nbytes

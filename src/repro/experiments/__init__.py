@@ -2,8 +2,8 @@
 
 ``spec``    — frozen, JSON-serializable :class:`ExperimentSpec`.
 ``systems`` — :class:`System` protocol + ``@register_system`` registry
-              (ampere, splitfed, splitfedv2, splitgp, scaffold, pipar,
-              fedavg).
+              (ampere, splitfed, splitfed_mb, splitfedv2, splitgp,
+              scaffold, pipar, fedavg, fedbuff).
 ``runner``  — shared federated-loop machinery (checkpoint/resume,
               journal, early stop, metrics, comm/sim-time accounting).
 ``api``     — :func:`run_experiment`, the one entrypoint; CLI in
@@ -13,9 +13,10 @@ See ``src/repro/experiments/README.md`` for the spec schema and how to
 add a system.
 """
 
-from repro.experiments.api import resolve_trace, run_experiment
+from repro.experiments.api import (build_transport, resolve_setup,
+                                   resolve_trace, run_experiment)
 from repro.experiments.runner import Runner, StepOutcome
-from repro.experiments.spec import (DataSpec, ExperimentSpec,
+from repro.experiments.spec import (DataSpec, ExperimentSpec, TransportSpec,
                                     dataclass_from_dict, dataclass_to_dict)
 from repro.experiments.systems import (System, SystemContext, get_system,
                                        list_systems, register_system,
@@ -23,7 +24,8 @@ from repro.experiments.systems import (System, SystemContext, get_system,
 
 __all__ = [
     "DataSpec", "ExperimentSpec", "Runner", "StepOutcome", "System",
-    "SystemContext", "dataclass_from_dict", "dataclass_to_dict",
-    "get_system", "list_systems", "register_system", "replay_plan",
+    "SystemContext", "TransportSpec", "build_transport",
+    "dataclass_from_dict", "dataclass_to_dict", "get_system",
+    "list_systems", "register_system", "replay_plan", "resolve_setup",
     "resolve_trace", "run_experiment",
 ]

@@ -15,7 +15,7 @@ import json
 import os
 from typing import Optional, Tuple
 
-from repro.experiments.spec import ExperimentSpec
+from repro.experiments.spec import ExperimentSpec, TransportSpec
 from repro.experiments.systems import SystemContext, get_system
 
 
@@ -83,23 +83,14 @@ def resolve_trace(spec: ExperimentSpec, model, run_cfg, *,
     return trace, population
 
 
-def run_experiment(spec: ExperimentSpec, *, log_echo: bool = False,
-                   dry_run: bool = False, write_results: bool = True) -> dict:
-    """Run every system in ``spec.systems`` on one shared setup.
+def resolve_setup(spec: ExperimentSpec):
+    """Build the shared (spec, model, clients, eval_data) for a spec.
 
-    Returns ``{"spec", "results": {system: result}, "summary",
-    "results_dir"}`` where each system result carries the full
-    ``history`` (and model states for the systems that expose them).
-    With ``dry_run=True`` only validation + system resolution happen.
+    Deterministic in the spec: the socket roles call this in *separate
+    processes* (device and server) and rely on both sides resolving the
+    identical model and data partition.  Returns the spec back because
+    ``run.arch`` is synced to the canonical ``spec.arch`` on the way.
     """
-    problems = spec.validate()
-    if problems:
-        raise ValueError("invalid ExperimentSpec:\n  - "
-                         + "\n  - ".join(problems))
-    systems = {name: get_system(name) for name in spec.systems}
-    if dry_run:
-        return {"spec": spec, "systems": list(systems), "valid": True}
-
     import dataclasses
 
     from repro.configs import registry
@@ -123,26 +114,72 @@ def run_experiment(spec: ExperimentSpec, *, log_echo: bool = False,
     clients = federate(train, spec.run.fed.num_clients,
                        spec.run.fed.dirichlet_alpha,
                        seed=spec.data.partition_seed)
-    seq = int(train.arrays["tokens"].shape[1]) if model.kind == "lm" else 0
+    return spec, model, clients, eval_data
+
+
+def build_transport(spec: ExperimentSpec):
+    """Fresh per-system transport for a spec (None = legacy accounting).
+
+    A transport exists iff the spec opts in (a ``transport`` or
+    ``faults`` section); it is rebuilt per system so idempotency keys and
+    fault statistics never leak across systems in one run.
+    """
+    if spec.transport is None and spec.faults is None:
+        return None
+    from repro.transport import FaultPlan, InProcessTransport
+
+    tspec = spec.transport or TransportSpec()
+    plan = FaultPlan(spec.faults) if spec.faults is not None else None
+    return InProcessTransport(fault_plan=plan, retry=tspec.retry_policy())
+
+
+def run_experiment(spec: ExperimentSpec, *, log_echo: bool = False,
+                   dry_run: bool = False, write_results: bool = True) -> dict:
+    """Run every system in ``spec.systems`` on one shared setup.
+
+    Returns ``{"spec", "results": {system: result}, "summary",
+    "results_dir"}`` where each system result carries the full
+    ``history`` (and model states for the systems that expose them).
+    With ``dry_run=True`` only validation + system resolution happen.
+    """
+    problems = spec.validate()
+    if problems:
+        raise ValueError("invalid ExperimentSpec:\n  - "
+                         + "\n  - ".join(problems))
+    systems = {name: get_system(name) for name in spec.systems}
+    if dry_run:
+        return {"spec": spec, "systems": list(systems), "valid": True}
+
+    spec, model, clients, eval_data = resolve_setup(spec)
+    seq = int(eval_data.arrays["tokens"].shape[1]) if model.kind == "lm" \
+        else 0
     trace, population = resolve_trace(spec, model, spec.run, seq_len=seq)
 
     results_dir = spec.results_dir or os.path.join("results", spec.name)
     results, summary = {}, {}
     for name, sys_cls in systems.items():
         workdir = os.path.join(results_dir, name) if spec.persist else None
+        transport = build_transport(spec)
         ctx = SystemContext(
             model=model, run_cfg=spec.run, clients=clients,
             eval_data=eval_data, workdir=workdir, trace=trace,
             population=population, fleet_cfg=spec.fleet,
             max_rounds=spec.max_rounds,
             max_server_epochs=spec.max_server_epochs,
-            patience=spec.patience, log_echo=log_echo)
+            patience=spec.patience, log_echo=log_echo,
+            transport=transport,
+            quorum_frac=(spec.transport.quorum_frac
+                         if spec.transport is not None else 1.0))
         system = sys_cls()
         system.on_start(ctx)
         result = system.run(ctx)
         system.on_finish(ctx, result)
         results[name] = result
         summary[name] = _history_summary(result["history"])
+        if transport is not None:
+            # "bytes actually moved, retries included" alongside the
+            # analytic history totals
+            summary[name]["wire"] = dict(transport.stats)
 
     out = {"spec": spec, "results": results, "summary": summary,
            "results_dir": results_dir}

@@ -63,15 +63,19 @@ class Runner:
     def __init__(self, workdir: Optional[str] = None, *,
                  patience: int = 15, log_echo: bool = False,
                  log_name: str = "metrics.jsonl",
-                 history: Optional[dict] = None):
+                 history: Optional[dict] = None, fault_plan=None):
         self.workdir = workdir
         self.patience = patience
         self.log = MetricsLogger(
             os.path.join(workdir, log_name) if workdir else None,
             echo=log_echo)
-        self.ckpt = Checkpointer(os.path.join(workdir, "ckpt")) if workdir \
+        # fault_plan threads torn-write injection into the storage
+        # boundary (checkpoint arrays, journal appends) for chaos tests
+        self.ckpt = Checkpointer(os.path.join(workdir, "ckpt"),
+                                 fault_plan=fault_plan) if workdir \
             else None
-        self.journal = RoundJournal(os.path.join(workdir, "journal.jsonl")) \
+        self.journal = RoundJournal(os.path.join(workdir, "journal.jsonl"),
+                                    fault_plan=fault_plan) \
             if workdir else None
         self.history = history if history is not None else {}
         self.history.setdefault("comm_bytes", 0)
@@ -93,13 +97,21 @@ class Runner:
         """
         if self.ckpt is None:
             return state, 0
-        step = self.ckpt.latest_step(lambda m: m.get("phase") == phase)
-        if step is None:
-            return state, 0
-        tree, meta = self.ckpt.restore(step)
-        if meta.get("stopper") is not None:
-            self._stopper_state[phase] = meta["stopper"]
-        return tree, meta[step_name] + 1
+        from repro.runtime.checkpoint import CheckpointCorruptError
+
+        # walk checkpoints of this phase newest-first: a torn or
+        # bit-flipped snapshot is skipped (its CRC fails) and the next
+        # older one resumes the run instead of crashing it
+        for step in self.ckpt.steps_matching(
+                lambda m: m.get("phase") == phase):
+            try:
+                tree, meta = self.ckpt.restore(step)
+            except CheckpointCorruptError:
+                continue
+            if meta.get("stopper") is not None:
+                self._stopper_state[phase] = meta["stopper"]
+            return tree, meta[step_name] + 1
+        return state, 0
 
     def account(self, *, comm_bytes: int = 0, sim_time: float = 0.0):
         """Out-of-loop accounting (e.g. the one-shot activation upload)."""

@@ -26,6 +26,8 @@ from typing import Any, Optional, Tuple
 
 from repro.configs.base import RunConfig
 from repro.fleet.profiles import FleetConfig
+from repro.transport.faults import FaultSpec
+from repro.transport.retry import RetryPolicy
 
 
 # ---------------------------------------------------------------------------
@@ -106,6 +108,46 @@ class DataSpec:
 
 
 @dataclass(frozen=True)
+class TransportSpec:
+    """How bytes move between device and server blocks.
+
+    ``kind="inprocess"`` (default) prices transfers through the
+    simulated link; ``kind="socket"`` is the two-process mode driven by
+    ``scripts/run_experiment.py --role device|server``.  The retry knobs
+    map onto one :class:`~repro.transport.retry.RetryPolicy` shared by
+    every transfer, and ``quorum_frac`` is the fraction of a cohort
+    whose uploads must verify before a round closes (failed devices are
+    excluded and the survivors reweighted).
+    """
+
+    kind: str = "inprocess"
+    quorum_frac: float = 1.0
+    max_attempts: int = 4
+    base_backoff_s: float = 0.05
+    max_backoff_s: float = 2.0
+    attempt_timeout_s: float = 1.0
+    host: str = "127.0.0.1"     # socket mode only
+    port: int = 7733            # socket mode only
+
+    def retry_policy(self) -> RetryPolicy:
+        return RetryPolicy(max_attempts=self.max_attempts,
+                           base_backoff_s=self.base_backoff_s,
+                           max_backoff_s=self.max_backoff_s,
+                           attempt_timeout_s=self.attempt_timeout_s)
+
+    def validate(self) -> list:
+        problems = []
+        if self.kind not in ("inprocess", "socket"):
+            problems.append(f"transport.kind={self.kind!r} not in "
+                            "('inprocess', 'socket')")
+        if not 0.0 < self.quorum_frac <= 1.0:
+            problems.append(
+                f"transport.quorum_frac={self.quorum_frac} outside (0, 1]")
+        problems.extend(self.retry_policy().validate())
+        return problems
+
+
+@dataclass(frozen=True)
 class ExperimentSpec:
     """One declarative experiment: systems x (model, data, trace, budgets).
 
@@ -134,6 +176,10 @@ class ExperimentSpec:
     # outputs
     results_dir: Optional[str] = None         # None = results/<name>
     persist: bool = False       # give each system a workdir (ckpt + journal)
+    # transport + fault injection (optional; None = legacy analytic
+    # accounting, byte-identical histories)
+    transport: Optional[TransportSpec] = None
+    faults: Optional[FaultSpec] = None
 
     # ------------------------------------------------------------------
     def to_dict(self) -> dict:
@@ -198,6 +244,14 @@ class ExperimentSpec:
                 or self.fleet.max_concurrent < 0):
             problems.append("fleet async knobs (async_buffer_size, "
                             "max_staleness, max_concurrent) must be >= 0")
+        if self.transport is not None:
+            problems.extend(self.transport.validate())
+        if self.faults is not None:
+            problems.extend(self.faults.validate())
+        if self.fleet is not None and \
+                not 0.0 < self.fleet.quorum_frac <= 1.0:
+            problems.append(
+                f"fleet.quorum_frac={self.fleet.quorum_frac} outside (0, 1]")
         if self.fleet is not None and \
                 self.fleet.n_devices != self.run.fed.num_clients:
             problems.append(

@@ -56,6 +56,8 @@ class SystemContext:
     key: Any = None                # model-init PRNG key (None = from seed)
     store: Any = None              # pre-built ActivationStore (Ampere only)
     trainer: Any = None            # reuse a live trainer (legacy shims)
+    transport: Any = None          # InProcessTransport (None = analytic)
+    quorum_frac: float = 1.0       # verified-upload fraction closing a round
 
     @property
     def seq_len(self) -> int:
@@ -157,7 +159,9 @@ class AmpereSystem(System):
             return ctx.trainer
         return AmpereTrainer(ctx.model, ctx.run_cfg, ctx.clients,
                              ctx.eval_data, workdir=ctx.workdir,
-                             patience=ctx.patience, log_echo=ctx.log_echo)
+                             patience=ctx.patience, log_echo=ctx.log_echo,
+                             transport=ctx.transport,
+                             quorum_frac=ctx.quorum_frac)
 
     def init_state(self, ctx: SystemContext, key):
         tr = self._trainer(ctx)
@@ -248,7 +252,9 @@ class FedBuffSystem(AmpereSystem):
             return ctx.trainer
         return FedBuffTrainer(ctx.model, ctx.run_cfg, ctx.clients,
                               ctx.eval_data, workdir=ctx.workdir,
-                              patience=ctx.patience, log_echo=ctx.log_echo)
+                              patience=ctx.patience, log_echo=ctx.log_echo,
+                              transport=ctx.transport,
+                              quorum_frac=ctx.quorum_frac)
 
     def _device_phase(self, tr, ctx: SystemContext, dev_state):
         rounds = ctx.max_rounds if ctx.max_rounds is not None \
@@ -271,7 +277,8 @@ class SFLSystem(System):
         return SFLTrainer(ctx.model, ctx.run_cfg, ctx.clients,
                           ctx.eval_data, variant=self.variant,
                           workdir=ctx.workdir, patience=ctx.patience,
-                          log_echo=ctx.log_echo)
+                          log_echo=ctx.log_echo, transport=ctx.transport,
+                          quorum_frac=ctx.quorum_frac)
 
     def init_state(self, ctx: SystemContext, key):
         return self._trainer(ctx)._init_state(key)
@@ -287,6 +294,17 @@ class SFLSystem(System):
 @register_system("splitfed")
 class SplitFedSystem(SFLSystem):
     variant = "splitfed"
+
+
+@register_system("splitfed_mb")
+class SplitFedMBSystem(SFLSystem):
+    """Minibatch-SGD SplitFed (arXiv:2308.11953): every iteration the K
+    clients' joint gradients are weight-averaged *before* the SGD step —
+    one global minibatch step per iteration instead of K local steps
+    FedAvg'd per round.  Same per-iteration exchange volume as
+    splitfed."""
+
+    variant = "splitfed_mb"
 
 
 @register_system("splitfedv2")
@@ -319,7 +337,9 @@ class FedAvgSystem(System):
             return ctx.trainer
         return FedAvgTrainer(ctx.model, ctx.run_cfg, ctx.clients,
                              ctx.eval_data, workdir=ctx.workdir,
-                             patience=ctx.patience, log_echo=ctx.log_echo)
+                             patience=ctx.patience, log_echo=ctx.log_echo,
+                             transport=ctx.transport,
+                             quorum_frac=ctx.quorum_frac)
 
     def init_state(self, ctx: SystemContext, key):
         return ctx.model.init(key)

@@ -115,6 +115,11 @@ class FleetConfig:
     async_buffer_size: int = 0        # M; 0 = synchronous rounds
     max_staleness: int = 0            # discard updates staler than this; 0 = unbounded
     max_concurrent: int = 0           # devices training at once; 0 = init_cohort
+    # quorum-degraded synchronous rounds: close the round as soon as this
+    # fraction of the cohort has completed (remaining stragglers are
+    # recorded as dropped) instead of waiting for the slowest survivor.
+    # 1.0 = classic full-quorum behavior.
+    quorum_frac: float = 1.0
 
 
 def sample_population(cfg: FleetConfig,

@@ -41,6 +41,8 @@ import numpy as np
 from repro.fleet.profiles import DeviceProfile, FleetConfig
 from repro.runtime.elastic import ElasticCohort
 from repro.runtime.fault_tolerance import Heartbeats, RoundJournal
+from repro.transport.framing import crc32
+from repro.transport.inprocess import required_quorum
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,6 +141,11 @@ class FleetTrace:
                     "round_time": p.round_time}
                 if p.staleness:    # async plans only; sync format unchanged
                     rec["staleness"] = list(p.staleness)
+                # per-record CRC over the canonical JSON so a bit flip or
+                # tear inside one round line is detected at load, not
+                # silently replayed as a different cohort
+                rec["_crc"] = crc32(json.dumps(
+                    rec, sort_keys=True, separators=(",", ":")).encode())
                 f.write(json.dumps(rec) + "\n")
             if events:
                 for t, kind, dev, rnd in self.events:
@@ -162,6 +169,13 @@ class FleetTrace:
                 if not line:
                     continue
                 rec = json.loads(line)
+                crc = rec.pop("_crc", None) if isinstance(rec, dict) else None
+                if crc is not None and crc != crc32(json.dumps(
+                        rec, sort_keys=True, separators=(",", ":")).encode()):
+                    raise ValueError(
+                        f"trace {path!r} has a corrupt record (CRC "
+                        "mismatch — bit flip or torn write); regenerate "
+                        f"the trace: {line[:120]!r}")
                 kind = rec.get("kind")
                 if kind == "header":
                     declared = rec.get("num_rounds")
@@ -463,6 +477,16 @@ class FleetScheduler:
                 cur.survivors[d] = t
                 self.heartbeats.beat(d, now=t)
                 events.append((t, "complete", d, cur.idx))
+                # quorum-degraded close: once the configured fraction of
+                # the cohort has verified completions, remaining
+                # stragglers are dropped instead of waited for
+                if cfg.quorum_frac < 1.0 and cur.pending and \
+                        len(cur.survivors) >= required_quorum(
+                            cur.cohort_size, cfg.quorum_frac):
+                    events.append((t, "quorum", -1, cur.idx))
+                    for s in list(cur.pending):
+                        del cur.pending[s]
+                        cur.dropped.add(s)
                 maybe_advance(t)
             elif kind == "dropout":
                 if rnd_idx != cur.idx or d not in cur.pending:

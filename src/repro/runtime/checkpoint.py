@@ -28,6 +28,13 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.transport.framing import crc32
+
+
+class CheckpointCorruptError(Exception):
+    """A checkpoint exists on disk but cannot be trusted (CRC mismatch,
+    torn arrays file, unreadable metadata)."""
+
 
 def _flatten(tree):
     flat = {}
@@ -80,9 +87,13 @@ def _unflatten(flat):
 
 
 class Checkpointer:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3, fault_plan=None):
         self.dir = directory
         self.keep = keep
+        # chaos testing: a FaultPlan whose torn_write() fires truncates
+        # the arrays file AFTER its CRC is recorded, so restore() must
+        # detect the tear and fall back to an older snapshot
+        self.fault_plan = fault_plan
         self._thread: Optional[threading.Thread] = None
         os.makedirs(directory, exist_ok=True)
         # a writer killed between makedirs(tmp) and os.replace leaves a
@@ -125,6 +136,14 @@ class Checkpointer:
                 return step
         return None
 
+    def steps_matching(self, predicate=None) -> list:
+        """All steps newest-first whose metadata matches ``predicate``
+        (all of them when None) — the fallback chain for a restore that
+        finds its newest snapshot corrupt."""
+        dirs = self._step_dirs()
+        return [step for step, d in reversed(dirs)
+                if predicate is None or predicate(self._meta_of(d))]
+
     # ------------------------------------------------------------------
     def save(self, step: int, tree, metadata: Optional[dict] = None):
         self.wait()
@@ -149,9 +168,21 @@ class Checkpointer:
         final = os.path.join(self.dir, f"step_{step}")
         os.makedirs(tmp, exist_ok=True)
         flat = _flatten(host_tree)
-        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        arrays = os.path.join(tmp, "arrays.npz")
+        np.savez(arrays, **flat)
+        # the CRC is recorded over the INTACT file, before any injected
+        # tear, so a torn publish is detected at restore time
+        with open(arrays, "rb") as f:
+            arrays_crc = crc32(f.read())
+        torn = (self.fault_plan.torn_write(f"ckpt/{step}")
+                if self.fault_plan is not None else None)
+        if torn is not None:
+            size = os.path.getsize(arrays)
+            with open(arrays, "r+b") as f:
+                f.truncate(max(1, int(size * torn)))
         with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump({"step": step, **metadata}, f)
+            json.dump({"step": step, "arrays_crc": arrays_crc, **metadata},
+                      f)
         if os.path.isdir(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
@@ -172,15 +203,55 @@ class Checkpointer:
 
     # ------------------------------------------------------------------
     def restore(self, step: Optional[int] = None):
-        """Returns (tree, metadata) or (None, None) when nothing exists."""
+        """Returns (tree, metadata) or (None, None) when nothing exists.
+
+        With an explicit ``step``, a corrupt snapshot raises
+        :class:`CheckpointCorruptError`.  With ``step=None`` the newest
+        *valid* snapshot wins: corrupt ones (torn arrays file, CRC
+        mismatch, unreadable metadata) are skipped in favor of the next
+        older — only when every snapshot is corrupt does the error
+        propagate.
+        """
         self.wait()
-        if step is None:
-            step = self.latest_step()
-        if step is None:
-            return None, None
+        if step is not None:
+            return self._restore_one(step)
+        last_err: Optional[Exception] = None
+        for s in self.steps_matching():
+            try:
+                return self._restore_one(s)
+            except CheckpointCorruptError as err:
+                last_err = err
+        if last_err is not None:
+            raise last_err
+        return None, None
+
+    def _restore_one(self, step: int):
         d = os.path.join(self.dir, f"step_{step}")
-        with np.load(os.path.join(d, "arrays.npz")) as z:
-            flat = {k: z[k] for k in z.files}
-        with open(os.path.join(d, "meta.json")) as f:
-            meta = json.load(f)
+        try:
+            with open(os.path.join(d, "meta.json")) as f:
+                meta = json.load(f)
+        except (OSError, json.JSONDecodeError) as err:
+            raise CheckpointCorruptError(
+                f"step {step}: unreadable metadata: {err}") from err
+        try:
+            with open(os.path.join(d, "arrays.npz"), "rb") as f:
+                raw = f.read()
+        except OSError as err:
+            raise CheckpointCorruptError(
+                f"step {step}: unreadable arrays file: {err}") from err
+        declared = meta.pop("arrays_crc", None)
+        if declared is not None and crc32(raw) != declared:
+            raise CheckpointCorruptError(
+                f"step {step}: arrays.npz checksum mismatch (torn write "
+                "or bit flip) — falling back to an older snapshot is the "
+                "caller's job (restore(step=None) does it)")
+        try:
+            # pre-CRC legacy checkpoints skip the check above, but a torn
+            # npz still fails to parse — wrap that too
+            import io
+            with np.load(io.BytesIO(raw)) as z:
+                flat = {k: z[k] for k in z.files}
+        except Exception as err:
+            raise CheckpointCorruptError(
+                f"step {step}: undecodable arrays.npz: {err}") from err
         return _unflatten(flat), meta

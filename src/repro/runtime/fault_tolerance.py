@@ -6,9 +6,11 @@ server-side machinery around it:
 
 * :class:`RoundJournal` — a write-ahead journal of round boundaries so a
   restarted coordinator knows the exact (phase, round, rng state) to resume
-  from (used together with the Checkpointer).
+  from (used together with the Checkpointer).  Records carry a CRC so a
+  torn or bit-flipped line is *rejected*, never resumed from.
 * :func:`with_retries` — bounded-retry wrapper for flaky host-side work
-  (activation uploads, checkpoint IO).
+  (superseded by :class:`repro.transport.retry.RetryPolicy`; kept as a
+  thin compatibility wrapper for existing callers).
 * :class:`Heartbeats` — simulated liveness tracking for clients; drives
   the drop decisions at scale tests.
 """
@@ -22,19 +24,58 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.transport.framing import crc32
+
+
+def _canonical(record: dict) -> bytes:
+    """Canonical JSON bytes a journal record's CRC is computed over."""
+    return json.dumps(record, sort_keys=True,
+                      separators=(",", ":")).encode()
+
 
 class RoundJournal:
-    """Append-only JSONL journal; the last complete record wins."""
+    """Append-only JSONL journal; the last complete *verified* record wins.
 
-    def __init__(self, path: str):
+    Every appended record gains a ``_crc`` field (CRC32 over the
+    canonical JSON of the record without it).  ``last()`` only trusts
+    records whose CRC verifies — a line that merely parses as JSON (a
+    tear can keep it syntactically valid) is not enough to resume from.
+    ``fault_plan`` optionally injects torn writes for the chaos tests.
+    """
+
+    def __init__(self, path: str, fault_plan=None):
         self.path = path
+        self.fault_plan = fault_plan
+        self._n = 0
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
 
     def append(self, record: dict):
+        rec = dict(record)
+        rec["_crc"] = crc32(_canonical(record))
+        line = json.dumps(rec)
+        torn = (self.fault_plan.torn_write(f"journal/{self._n}")
+                if self.fault_plan is not None else None)
+        self._n += 1
+        created = not os.path.exists(self.path)
         with open(self.path, "a") as f:
-            f.write(json.dumps(record) + "\n")
+            if torn is not None:
+                f.write(line[:max(1, int(len(line) * torn))] + "\n")
+            else:
+                f.write(line + "\n")
             f.flush()
             os.fsync(f.fileno())
+        if created:
+            # fsync the parent directory so the journal file's very
+            # existence survives a crash right after creation
+            try:
+                dfd = os.open(os.path.dirname(self.path) or ".",
+                              os.O_RDONLY)
+                try:
+                    os.fsync(dfd)
+                finally:
+                    os.close(dfd)
+            except OSError:
+                pass
 
     def last(self) -> Optional[dict]:
         if not os.path.exists(self.path):
@@ -46,26 +87,45 @@ class RoundJournal:
                 if not line:
                     continue
                 try:
-                    last = json.loads(line)
+                    rec = json.loads(line)
                 except json.JSONDecodeError:
                     # torn write (a crash mid-append); valid records may
                     # follow it after a restart, so keep scanning instead
                     # of treating the tear as the end of the journal
                     continue
+                if not isinstance(rec, dict):
+                    continue
+                crc = rec.pop("_crc", None)
+                if crc is None or crc != crc32(_canonical(rec)):
+                    # unverifiable: pre-CRC legacy line, or a tear that
+                    # left syntactically valid JSON behind
+                    continue
+                last = rec
         return last
 
 
 def with_retries(fn: Callable, *args, retries: int = 3, backoff: float = 0.0,
                  exceptions=(OSError, IOError), **kwargs):
+    """Bounded retry with exponential backoff (no jitter, no deadlines).
+
+    Superseded by :meth:`repro.transport.retry.RetryPolicy.call`; new
+    code should use that.  Kept for existing callers, with its two
+    historical bugs fixed: it no longer sleeps after the final failed
+    attempt, and the terminal error chains the last underlying one.
+    """
+    from repro.transport.retry import RetryExhaustedError
+
     err = None
     for attempt in range(retries):
         try:
             return fn(*args, **kwargs)
         except exceptions as e:  # pragma: no cover - timing dependent
             err = e
-            if backoff:
+            if backoff and attempt < retries - 1:
                 time.sleep(backoff * (2 ** attempt))
-    raise err
+    raise RetryExhaustedError(
+        f"{getattr(fn, '__name__', fn)} failed after {retries} attempts: "
+        f"{err}", retries) from err
 
 
 class Heartbeats:

@@ -1,0 +1,31 @@
+"""Fault-injecting transport layer (checksummed framing, retry/backoff,
+quorum-degraded rounds).  Everything here is stdlib-only at import time;
+the socket roles (:mod:`repro.transport.roles`) import jax lazily.
+
+See ``src/repro/transport/README.md`` for the frame format, the fault
+taxonomy, and the simulation <-> ``comm_model`` mapping.
+"""
+
+from repro.transport.faults import (FaultDecision, FaultPlan, FaultSpec,
+                                    stable_hash)
+from repro.transport.framing import (CorruptFrame, Frame, FrameError,
+                                     TruncatedFrame, crc32, decode_frame,
+                                     encode_frame, flip_bit, frame_overhead,
+                                     read_frame)
+from repro.transport.inprocess import (InProcessTransport, QuorumError,
+                                       TransferResult, cohort_exchange,
+                                       required_quorum)
+from repro.transport.retry import RetryExhaustedError, RetryPolicy
+from repro.transport.socket_transport import (CountingSocket, FrameReceiver,
+                                              SocketTransport, connect,
+                                              listen_one)
+
+__all__ = [
+    "CorruptFrame", "CountingSocket", "FaultDecision", "FaultPlan",
+    "FaultSpec", "Frame", "FrameError", "FrameReceiver",
+    "InProcessTransport", "QuorumError", "RetryExhaustedError",
+    "RetryPolicy", "SocketTransport", "TransferResult", "TruncatedFrame",
+    "cohort_exchange", "connect", "crc32", "decode_frame", "encode_frame",
+    "flip_bit", "frame_overhead", "listen_one", "read_frame",
+    "required_quorum", "stable_hash",
+]

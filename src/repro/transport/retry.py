@@ -1,0 +1,80 @@
+"""Bounded retry with exponential backoff and full jitter.
+
+One policy object serves two callers:
+
+* the **simulated** path (:class:`~repro.transport.inprocess.InProcessTransport`)
+  asks only for ``backoff_s`` — no wall-clock sleeping, the delay is
+  *accounted* into sim time, with the jitter drawn deterministically
+  from the :class:`~repro.transport.faults.FaultPlan` so runs replay
+  byte-identically;
+* the **real** path (:class:`~repro.transport.socket_transport.SocketTransport`
+  and storage helpers) uses :meth:`call`, which actually sleeps and
+  enforces per-attempt deadlines.
+
+This replaces ``runtime.fault_tolerance.with_retries`` as the retry
+primitive (that helper remains as a thin wrapper for existing callers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+import time
+
+
+class RetryExhaustedError(Exception):
+    """All attempts failed; ``__cause__`` is the last underlying error."""
+
+    def __init__(self, msg, attempts):
+        super().__init__(msg)
+        self.attempts = attempts
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    max_attempts: int = 4
+    base_backoff_s: float = 0.1
+    max_backoff_s: float = 5.0
+    attempt_timeout_s: float = 30.0
+
+    def validate(self):
+        problems = []
+        if self.max_attempts < 1:
+            problems.append(
+                f"transport.max_attempts={self.max_attempts} < 1")
+        if self.base_backoff_s < 0 or self.max_backoff_s < 0:
+            problems.append("transport backoff seconds must be >= 0")
+        if self.attempt_timeout_s <= 0:
+            problems.append(
+                f"transport.attempt_timeout_s={self.attempt_timeout_s} <= 0")
+        return problems
+
+    def backoff_s(self, attempt: int, jitter_unit: float) -> float:
+        """Full-jitter backoff before retry ``attempt`` (1-based): a
+        uniform draw over [0, min(max, base * 2^(attempt-1))].
+        ``jitter_unit`` in [0, 1) supplies the randomness — pass a
+        deterministic draw for replayable sims."""
+        cap = min(self.max_backoff_s,
+                  self.base_backoff_s * (2.0 ** max(attempt - 1, 0)))
+        return cap * jitter_unit
+
+    def call(self, fn, *args, retryable=(OSError, IOError), rng=None,
+             **kwargs):
+        """Run ``fn`` with real sleeps between attempts.
+
+        Never sleeps after the final failed attempt; raises
+        :class:`RetryExhaustedError` chained from the last error.
+        """
+        rng = rng or random
+        last = None
+        for attempt in range(1, self.max_attempts + 1):
+            try:
+                return fn(*args, **kwargs)
+            except retryable as err:
+                last = err
+                if attempt < self.max_attempts:
+                    time.sleep(self.backoff_s(attempt, rng.random()))
+        raise RetryExhaustedError(
+            f"{getattr(fn, '__name__', fn)} failed after "
+            f"{self.max_attempts} attempts: {last}", self.max_attempts,
+        ) from last

@@ -1,0 +1,252 @@
+"""Two-process Ampere: the device and server blocks as real processes.
+
+``scripts/run_experiment.py --role device`` runs phase 3 (federated
+device training) locally, then ships the converged device state and the
+one-shot activation shards to ``--role server`` over a TCP connection
+using the checksummed stop-and-wait protocol of
+:mod:`repro.transport.socket_transport`.  The server consolidates the
+shards into an :class:`~repro.data.activation_store.ActivationStore`,
+runs phase 5 (centralized server training), and replies with a summary
+frame.
+
+Both roles call :func:`repro.experiments.api.resolve_setup` on the SAME
+spec, so model init, data synthesis and the Dirichlet partition resolve
+identically in the two processes — only bytes that genuinely must cross
+the device/server boundary go over the wire.
+
+Wire accounting: the server reports ``measured_wire_bytes`` (every byte
+received, framing + retries + injected duplicates included) next to
+``analytic_transfer_bytes`` (what the simulation's comm model prices for
+the same transfer) — the two-process e2e test asserts they agree within
+10% on a fault-free run.
+
+jax / numpy are imported lazily so ``repro.transport`` stays importable
+without an accelerator stack.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import os
+from typing import Optional
+
+from repro.transport.framing import Frame, encode_frame, read_frame
+from repro.transport.socket_transport import (FrameReceiver, SocketTransport,
+                                              connect, listen_one)
+
+ACT_BATCH_SIZE = 64          # mirrors AmpereTrainer.generate_activations
+
+
+def _npz_bytes(arrays: dict) -> bytes:
+    import numpy as np
+
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    return buf.getvalue()
+
+
+def _npz_load(payload: bytes) -> dict:
+    import numpy as np
+
+    with np.load(io.BytesIO(payload)) as z:
+        return {k: z[k] for k in z.files}
+
+
+def _json_safe(obj):
+    """History dicts may carry numpy scalars; frame metadata is JSON."""
+    import numpy as np
+
+    if isinstance(obj, dict):
+        return {str(k): _json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_json_safe(v) for v in obj]
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    return obj
+
+
+def _validated(spec):
+    problems = spec.validate()
+    if problems:
+        raise ValueError("invalid ExperimentSpec:\n  - "
+                         + "\n  - ".join(problems))
+    from repro.experiments.spec import TransportSpec
+
+    return spec, (spec.transport or TransportSpec())
+
+
+def _shards_of(model, clients, dev_state, split_point,
+               batch_size: int = ACT_BATCH_SIZE):
+    """Yield ``(client_id, shard_idx, shard)`` exactly as
+    :meth:`AmpereTrainer.generate_activations` would build them."""
+    import jax
+    import numpy as np
+
+    from repro.core import splitting
+
+    @jax.jit
+    def fwd(device_params, inp):
+        return splitting.device_forward(model, device_params, inp,
+                                        split_point)
+
+    inp_key = "tokens" if model.kind == "lm" else "images"
+    lab_key = "tokens" if model.kind == "lm" else "labels"
+    for client in clients:
+        arrays = client.dataset.arrays
+        n = len(client.dataset)
+        for i, s in enumerate(range(0, n, batch_size)):
+            idx = np.arange(s, min(s + batch_size, n))
+            shard = {"acts": np.asarray(fwd(dev_state["device"],
+                                            arrays[inp_key][idx]),
+                                        np.float32),
+                     lab_key: arrays[lab_key][idx]}
+            yield client.client_id, i, shard
+
+
+# ---------------------------------------------------------------------------
+# device role
+# ---------------------------------------------------------------------------
+
+
+def run_device_role(spec, host: Optional[str] = None,
+                    port: Optional[int] = None, echo: bool = False) -> dict:
+    """Run the federated device phase, then upload state + activations.
+
+    Returns the server's result summary plus this side's wire stats.
+    Fault injection (``spec.faults``) happens on this side of the socket
+    — bits flip *before* they hit the wire, so the server exercises its
+    genuine CRC / dedup paths.
+    """
+    import jax
+    import numpy as np
+
+    from repro.core.uit import AmpereTrainer
+    from repro.data.activation_store import ActivationStore
+    from repro.experiments.api import resolve_setup
+    from repro.runtime import checkpoint
+    from repro.transport.faults import FaultPlan
+
+    spec, tspec = _validated(spec)
+    spec, model, clients, eval_data = resolve_setup(spec)
+    tr = AmpereTrainer(model, spec.run, clients, eval_data,
+                       patience=spec.patience, log_echo=echo)
+    dev, _srv, aux = tr._init_states(jax.random.PRNGKey(spec.run.seed))
+    dev_state = tr.run_device_phase({"device": dev, "aux": aux},
+                                    spec.max_rounds)
+
+    fault_plan = FaultPlan(spec.faults) if spec.faults is not None else None
+    sock = connect(host or tspec.host,
+                   tspec.port if port is None else int(port))
+    transport = SocketTransport(sock, retry=tspec.retry_policy(),
+                                fault_plan=fault_plan)
+    host_state = jax.tree.map(np.asarray, dev_state)
+    transport.send(Frame(kind="state", msg_id="device_state",
+                         payload=_npz_bytes(checkpoint._flatten(host_state))))
+    analytic = 0
+    quantize = spec.run.split.quantize_activations
+    for cid, i, shard in _shards_of(model, clients, dev_state,
+                                    spec.run.split.split_point):
+        analytic += ActivationStore.shard_nbytes(shard, quantize)
+        transport.send(Frame(kind="shard", msg_id=f"acts/{cid}/{i}",
+                             payload=_npz_bytes(shard), sender=int(cid),
+                             meta={"client_id": int(cid)}))
+    transport.send(Frame(kind="done", msg_id="done",
+                         meta={"history": _json_safe(tr.history),
+                               "sent_bytes": transport.sent_bytes,
+                               "analytic_bytes": int(analytic)}))
+    # the server trains its phase before answering; be patient
+    sock.settimeout(600.0)
+    result = read_frame(sock)
+    sock.close()
+    return {"result": result.meta or {},
+            "sent_bytes": transport.sent_bytes,
+            "analytic_bytes": int(analytic),
+            "stats": dict(transport.stats)}
+
+
+# ---------------------------------------------------------------------------
+# server role
+# ---------------------------------------------------------------------------
+
+
+def run_server_role(spec, host: Optional[str] = None,
+                    port: Optional[int] = None, echo: bool = False,
+                    results_dir: Optional[str] = None) -> dict:
+    """Accept one device connection, consolidate, train the server phase.
+
+    Writes ``summary.json`` under the results directory and replies to
+    the device with a ``result`` frame carrying the same summary.
+    """
+    import jax
+
+    from repro.core import comm_model
+    from repro.core.uit import AmpereTrainer
+    from repro.data.activation_store import ActivationStore
+    from repro.experiments.api import _history_summary, resolve_setup
+    from repro.runtime import checkpoint
+
+    spec, tspec = _validated(spec)
+    spec, model, clients, eval_data = resolve_setup(spec)
+    sock, _bound = listen_one(host or tspec.host,
+                              tspec.port if port is None else int(port),
+                              timeout_s=600.0)
+    receiver = FrameReceiver(sock, timeout_s=600.0)
+    store = ActivationStore(
+        consolidated=True,
+        quantize_int8=spec.run.split.quantize_activations,
+        seed=spec.run.seed)
+    dev_state = None
+    device_info: dict = {}
+    while True:
+        frame = receiver.recv()
+        if frame.kind == "state":
+            dev_state = checkpoint._unflatten(_npz_load(frame.payload))
+        elif frame.kind == "shard":
+            store.add(int((frame.meta or {})["client_id"]),
+                      _npz_load(frame.payload))
+        elif frame.kind == "done":
+            device_info = frame.meta or {}
+            break
+        else:
+            raise ValueError(f"unexpected frame kind {frame.kind!r}")
+    if dev_state is None:
+        raise ValueError("device closed without sending its state")
+
+    tr = AmpereTrainer(model, spec.run, clients, eval_data,
+                       patience=spec.patience, log_echo=echo)
+    # merge the device side's history so the summary spans both phases
+    dev_hist = device_info.get("history") or {}
+    tr.history["device"] = list(dev_hist.get("device", []))
+    tr.runner.account(
+        comm_bytes=int(dev_hist.get("comm_bytes", 0)) + store.bytes_received,
+        sim_time=(float(dev_hist.get("sim_time", 0.0))
+                  + store.bytes_received / comm_model.BANDWIDTH_BPS))
+    _dev, srv, _aux = tr._init_states(jax.random.PRNGKey(spec.run.seed))
+    tr.run_server_phase(dev_state, srv, store, spec.max_server_epochs)
+
+    summary = {
+        "system": "ampere", "mode": "socket",
+        "measured_wire_bytes": receiver.received_bytes,
+        "device_sent_bytes": int(device_info.get("sent_bytes", 0)),
+        "analytic_transfer_bytes": int(store.bytes_received),
+        "device_analytic_bytes": int(device_info.get("analytic_bytes", 0)),
+        "frames": dict(receiver.stats),
+        **_json_safe(_history_summary(tr.history)),
+    }
+    rd = results_dir or spec.results_dir or os.path.join("results",
+                                                         spec.name)
+    os.makedirs(rd, exist_ok=True)
+    with open(os.path.join(rd, "summary.json"), "w") as f:
+        json.dump({"spec": spec.to_dict(), "summary": summary}, f, indent=1)
+    try:
+        # fire-and-forget: the run already persisted its summary; a
+        # device that died mid-wait must not fail the server role
+        sock.sendall(encode_frame(Frame(kind="result", msg_id="result",
+                                        meta=summary)))
+    except OSError:
+        pass
+    sock.close()
+    return {"summary": summary, "results_dir": rd}

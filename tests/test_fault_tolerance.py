@@ -154,3 +154,143 @@ def test_truncated_trace_load_raises(tmp_path):
     assert len(FleetTrace.load(path).rounds) == 5
     with open(path) as f:
         assert json.loads(f.readline())["num_rounds"] == 5
+
+
+def test_bitflipped_trace_round_record_raises(tmp_path):
+    """A flipped digit inside one round line still parses as JSON — only
+    the per-record CRC can catch it.  load() must raise, never silently
+    replay a different cohort."""
+    from repro.fleet import FleetTrace
+
+    path = str(tmp_path / "t.jsonl")
+    _tiny_trace(3).save(path, events=False)
+    with open(path) as f:
+        lines = f.readlines()
+    rec = json.loads(lines[1])                   # first round record
+    assert rec["kind"] == "round" and "_crc" in rec
+    rec["cohort_size"] = rec["cohort_size"] + 1  # "bit flip": CRC now stale
+    lines[1] = json.dumps(rec) + "\n"
+    with open(path, "w") as f:
+        f.writelines(lines)
+    with pytest.raises(ValueError, match="CRC"):
+        FleetTrace.load(path)
+    # legacy trace without _crc fields still loads (format grows, old
+    # committed traces keep replaying)
+    with open(path, "w") as f:
+        for line in lines:
+            old = json.loads(line)
+            old.pop("_crc", None)
+            f.write(json.dumps(old) + "\n")
+    assert len(FleetTrace.load(path).rounds) == 3
+
+
+# ---------------------------------------------------------------------------
+# RoundJournal: CRC-verified records — a bit flip that keeps valid JSON
+# must be rejected, not resumed from
+# ---------------------------------------------------------------------------
+
+
+def test_journal_rejects_bitflipped_record(tmp_path):
+    j = RoundJournal(str(tmp_path / "j.jsonl"))
+    j.append({"phase": "device", "round": 3})
+    j.append({"phase": "device", "round": 9})
+    with open(j.path) as f:
+        lines = f.readlines()
+    rec = json.loads(lines[1])
+    rec["round"] = 8                 # still valid JSON; CRC now mismatches
+    lines[1] = json.dumps(rec) + "\n"
+    with open(j.path, "w") as f:
+        f.writelines(lines)
+    assert j.last() == {"phase": "device", "round": 3}
+
+
+def test_journal_skips_unverifiable_records(tmp_path):
+    """Records without a _crc (legacy lines, or a tear that left valid
+    JSON) are unverifiable and must not be resume points."""
+    j = RoundJournal(str(tmp_path / "j.jsonl"))
+    j.append({"phase": "device", "round": 1})
+    with open(j.path, "a") as f:
+        f.write(json.dumps({"phase": "device", "round": 99}) + "\n")
+    assert j.last() == {"phase": "device", "round": 1}
+    assert RoundJournal(str(tmp_path / "empty.jsonl")).last() is None
+
+
+def test_journal_torn_write_injection(tmp_path):
+    """A FaultPlan whose torn_write fires cuts the line mid-append; the
+    torn record must never become the resume point, and later appends
+    (post-"restart") still win."""
+    from repro.transport.faults import FaultPlan, FaultSpec
+
+    j = RoundJournal(str(tmp_path / "j.jsonl"),
+                     fault_plan=FaultPlan(FaultSpec(seed=3,
+                                                    torn_write_prob=1.0)))
+    j.append({"phase": "device", "round": 0})    # torn
+    assert j.last() is None
+    j.fault_plan = None
+    j.append({"phase": "device", "round": 1})    # intact
+    assert j.last() == {"phase": "device", "round": 1}
+
+
+# ---------------------------------------------------------------------------
+# Checkpointer: corrupt snapshots fall back to the next older valid one
+# ---------------------------------------------------------------------------
+
+
+def _corrupt_arrays(path, mode, rng):
+    data = bytearray(path.read_bytes())
+    if mode == "truncate":
+        cut = max(1, int(len(data) * rng.uniform(0.05, 0.95)))
+        path.write_bytes(bytes(data[:cut]))
+    else:                             # flip one random bit
+        i = int(rng.integers(len(data)))
+        data[i] ^= 1 << int(rng.integers(8))
+        path.write_bytes(bytes(data))
+
+
+def test_checkpoint_restore_survives_corruption(tmp_path):
+    """Property-style sweep: whatever the corruption of the newest
+    snapshot (truncation at any point, any single bit flip), restore()
+    either falls back to the older intact snapshot or raises
+    CheckpointCorruptError — never returns wrong state."""
+    from repro.runtime.checkpoint import CheckpointCorruptError
+
+    rng = np.random.default_rng(0)
+    for trial in range(8):
+        mode = "truncate" if trial % 2 == 0 else "bitflip"
+        d = tmp_path / f"ck{trial}"
+        ck = Checkpointer(str(d), keep=3)
+        ck.save(1, {"x": np.full(16, 1.0)}, {"phase": "p"})
+        ck.save(2, {"x": np.full(16, 2.0)}, {"phase": "p"})
+        _corrupt_arrays(d / "step_2" / "arrays.npz", mode, rng)
+        got, meta = ck.restore()      # newest is corrupt -> fall back
+        assert meta["step"] == 1 and got["x"][0] == 1.0
+        with pytest.raises(CheckpointCorruptError):
+            ck.restore(step=2)        # explicit step: loud failure
+    # every snapshot corrupt -> the error propagates, no silent None
+    d = tmp_path / "all_bad"
+    ck = Checkpointer(str(d), keep=3)
+    ck.save(1, {"x": np.ones(4)}, {"phase": "p"})
+    _corrupt_arrays(d / "step_1" / "arrays.npz", "truncate", rng)
+    with pytest.raises(CheckpointCorruptError):
+        ck.restore()
+
+
+def test_checkpoint_torn_write_injection_falls_back(tmp_path):
+    """Torn-write injection at the storage boundary: the CRC is recorded
+    over the intact file, the tear is detected at restore, and the run
+    resumes from the older snapshot (what Runner.restore does)."""
+    from repro.transport.faults import FaultPlan, FaultSpec
+
+    ck = Checkpointer(str(tmp_path), keep=3)
+    ck.save(1, {"x": np.full(8, 1.0)}, {"phase": "p"})
+    ck.fault_plan = FaultPlan(FaultSpec(seed=0, torn_write_prob=1.0))
+    ck.save(2, {"x": np.full(8, 2.0)}, {"phase": "p"})
+    got, meta = ck.restore()
+    assert meta["step"] == 1 and got["x"][0] == 1.0
+
+    r = Runner(str(tmp_path / "run"), patience=5)
+    r.ckpt.save(0, {"x": np.zeros(4)}, {"phase": "p", "round": 0})
+    r.ckpt.fault_plan = FaultPlan(FaultSpec(seed=0, torn_write_prob=1.0))
+    r.ckpt.save(1, {"x": np.ones(4)}, {"phase": "p", "round": 1})
+    state, first = r.restore("p", None)
+    assert first == 1 and state["x"][0] == 0.0   # resumed from round 0

@@ -1,0 +1,494 @@
+"""Transport layer: framing CRC, deterministic fault injection, retry
+semantics, in-process wire accounting + quorum degradation, chaos
+determinism of full experiment runs, scheduler quorum rounds, and the
+(slow) two-process socket e2e."""
+
+import json
+import os
+import socket
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig, OptimConfig, RunConfig, replace
+from repro.experiments import DataSpec, ExperimentSpec, run_experiment
+from repro.experiments.spec import TransportSpec
+from repro.transport import (CorruptFrame, FaultPlan, FaultSpec, Frame,
+                             FrameReceiver, InProcessTransport, QuorumError,
+                             RetryExhaustedError, RetryPolicy,
+                             SocketTransport, TruncatedFrame,
+                             cohort_exchange, decode_frame, encode_frame,
+                             flip_bit, required_quorum)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARCH = "vit-s"
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+
+def test_frame_roundtrip():
+    f = Frame(kind="shard", msg_id="acts/3/1", payload=b"x" * 1000,
+              sender=3, seq=7, meta={"client_id": 3})
+    back, end = decode_frame(encode_frame(f))
+    assert back == f and end == len(encode_frame(f))
+    # two frames concatenated decode sequentially
+    buf = encode_frame(f) + encode_frame(Frame(kind="ack", msg_id="a"))
+    first, end = decode_frame(buf)
+    second, end2 = decode_frame(buf, end)
+    assert first.msg_id == "acts/3/1" and second.kind == "ack"
+    assert end2 == len(buf)
+
+
+def test_frame_detects_any_bit_flip():
+    f = Frame(kind="data", msg_id="m", payload=b"hello world" * 10)
+    wire = encode_frame(f)
+    # every byte of the frame — magic, version, lengths, metadata,
+    # payload, CRC — is covered: no single-bit flip may decode cleanly
+    rng = np.random.default_rng(0)
+    for _ in range(64):
+        bit = int(rng.integers(len(wire) * 8))
+        with pytest.raises((CorruptFrame, TruncatedFrame)):
+            decode_frame(flip_bit(wire, bit))
+
+
+def test_frame_truncation_detected():
+    wire = encode_frame(Frame(kind="data", msg_id="m", payload=b"z" * 500))
+    for cut in (3, 10, len(wire) // 2, len(wire) - 1):
+        with pytest.raises(TruncatedFrame):
+            decode_frame(wire[:cut])
+
+
+# ---------------------------------------------------------------------------
+# fault plan determinism
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_is_deterministic_and_seed_sensitive():
+    spec = FaultSpec(seed=1, drop_prob=0.3, corrupt_prob=0.3,
+                     duplicate_prob=0.2, latency_spike_prob=0.2,
+                     reset_prob=0.1)
+    a, b = FaultPlan(spec), FaultPlan(spec)
+    keys = [f"r{i}/up/{i % 5}" for i in range(200)]
+    da = [a.decide(k, att, att % 3) for k in keys for att in (1, 2)]
+    db = [b.decide(k, att, att % 3) for k in keys for att in (1, 2)]
+    assert da == db                      # pure in (seed, key, attempt, dev)
+    c = FaultPlan(replace(spec, seed=2))
+    dc = [c.decide(k, att, att % 3) for k in keys for att in (1, 2)]
+    assert dc != da                      # and the seed actually matters
+    # something of every kind fired across 400 decisions
+    assert any(d.drop for d in da) and any(d.corrupt for d in da)
+    assert any(d.duplicate for d in da) and any(d.delay_s > 0 for d in da)
+    assert any(d.reset_frac is not None for d in da)
+
+
+def test_fault_plan_perma_fail_and_inactive():
+    plan = FaultPlan(FaultSpec(seed=0, perma_fail_devices=(4,)))
+    assert plan.active
+    for att in range(1, 9):
+        assert plan.decide("k", att, 4).drop      # every attempt
+    assert plan.decide("k", 1, 3).delivered       # other devices clean
+    assert not FaultPlan(FaultSpec()).active
+
+
+# ---------------------------------------------------------------------------
+# retry
+# ---------------------------------------------------------------------------
+
+
+def test_retry_policy_call_chains_and_never_oversleeps(monkeypatch):
+    sleeps = []
+    import repro.transport.retry as retry_mod
+    monkeypatch.setattr(retry_mod.time, "sleep", sleeps.append)
+
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        raise OSError("nope")
+
+    pol = RetryPolicy(max_attempts=3, base_backoff_s=0.1, max_backoff_s=1.0)
+    with pytest.raises(RetryExhaustedError) as ei:
+        pol.call(flaky)
+    assert len(calls) == 3
+    assert len(sleeps) == 2              # no sleep after the final attempt
+    assert isinstance(ei.value.__cause__, OSError)
+
+    ok = pol.call(lambda: 42)
+    assert ok == 42 and len(sleeps) == 2
+
+
+def test_with_retries_fixed_semantics(monkeypatch):
+    from repro.runtime import fault_tolerance as ft
+
+    sleeps = []
+    monkeypatch.setattr(ft.time, "sleep", sleeps.append)
+
+    def boom():
+        raise OSError("disk")
+
+    with pytest.raises(Exception) as ei:
+        ft.with_retries(boom, retries=3, backoff=0.1)
+    assert isinstance(ei.value.__cause__, OSError)      # raise ... from err
+    assert len(sleeps) == 2              # none after the final attempt
+
+
+def test_backoff_is_bounded_exponential_with_full_jitter():
+    pol = RetryPolicy(max_attempts=8, base_backoff_s=0.5, max_backoff_s=2.0)
+    assert pol.backoff_s(1, 1.0) == 0.5
+    assert pol.backoff_s(2, 1.0) == 1.0
+    assert pol.backoff_s(3, 1.0) == 2.0
+    assert pol.backoff_s(7, 1.0) == 2.0                 # capped
+    assert pol.backoff_s(3, 0.25) == 0.5                # full jitter scales
+
+
+# ---------------------------------------------------------------------------
+# in-process transport accounting
+# ---------------------------------------------------------------------------
+
+
+def test_faultfree_transfer_is_exactly_analytic():
+    t = InProcessTransport()
+    res = t.transfer("k1", 12345)
+    assert (res.ok, res.wire_bytes, res.extra_time, res.attempts,
+            res.first_delivery) == (True, 12345, 0.0, 1, True)
+    assert t.transfer("k1", 12345).first_delivery is False   # dedup
+    kept, wire, extra, excl = cohort_exchange(
+        t, round_key="r0", clients=[3, 1, 4], one_way_bytes=1000)
+    assert kept == [0, 1, 2] and wire == 6000 and extra == 0.0 and excl == []
+    # transport=None takes the same formula without any object
+    assert cohort_exchange(None, round_key="r0", clients=[3, 1, 4],
+                           one_way_bytes=1000) == ([0, 1, 2], 6000, 0.0, [])
+
+
+def test_faulted_transfer_counts_bytes_actually_moved():
+    bw = 1000.0   # bytes/s, tiny so times are visible
+    retry = RetryPolicy(max_attempts=5, base_backoff_s=0.0,
+                        attempt_timeout_s=2.0)
+    # find a key whose first attempt drops and second succeeds cleanly
+    plan = FaultPlan(FaultSpec(seed=11, drop_prob=0.4))
+    key = next(k for k in (f"k{i}" for i in range(200))
+               if plan.decide(k, 1).drop and plan.decide(k, 2).delivered)
+    t = InProcessTransport(fault_plan=plan, retry=retry,
+                           default_bandwidth_bps=bw)
+    res = t.transfer(key, 500)
+    assert res.ok and res.attempts == 2
+    assert res.wire_bytes == 1000            # both attempts crossed the link
+    # extra = retransmit (500/bw) + the drop's ack timeout; the first
+    # transmit is already priced analytically
+    assert res.extra_time == pytest.approx(500 / bw + 2.0)
+    assert t.stats["drops"] == 1 and t.stats["delivered"] == 1
+
+
+def test_duplicate_and_reset_accounting():
+    plan = FaultPlan(FaultSpec(seed=5, duplicate_prob=1.0))
+    t = InProcessTransport(fault_plan=plan, retry=RetryPolicy(
+        max_attempts=2, base_backoff_s=0.0))
+    res = t.transfer("d", 300)
+    assert res.ok and res.wire_bytes == 600            # sent twice
+    assert t.stats["duplicates"] == 1
+
+    plan = FaultPlan(FaultSpec(seed=5, reset_prob=1.0))
+    t = InProcessTransport(fault_plan=plan, retry=RetryPolicy(
+        max_attempts=3, base_backoff_s=0.0))
+    res = t.transfer("r", 1000)
+    assert not res.ok                     # every attempt resets
+    frac = plan.decide("r", 1).reset_frac
+    assert 0.05 <= frac <= 0.95
+    assert res.wire_bytes == sum(
+        int(1000 * plan.decide("r", a).reset_frac) for a in (1, 2, 3))
+    assert t.stats["failures"] == 1
+
+
+def test_corruption_exercises_real_codec():
+    plan = FaultPlan(FaultSpec(seed=9, corrupt_prob=1.0))
+    t = InProcessTransport(fault_plan=plan, retry=RetryPolicy(
+        max_attempts=2, base_backoff_s=0.0))
+    # payload given: the injected bit flip runs through encode/flip/decode
+    # and must be caught by the frame CRC (asserted inside transfer)
+    res = t.transfer("c", 64, payload=b"a" * 64)
+    assert not res.ok and t.stats["corruptions"] == 2
+
+
+def test_quorum_exclusion_and_error():
+    assert required_quorum(4, 1.0) == 4
+    assert required_quorum(4, 0.5) == 2
+    assert required_quorum(3, 0.5) == 2      # ceil
+    assert required_quorum(5, 0.001) == 1    # never zero
+
+    plan = FaultPlan(FaultSpec(seed=0, perma_fail_devices=(7,)))
+    t = InProcessTransport(fault_plan=plan,
+                           retry=RetryPolicy(max_attempts=2,
+                                             base_backoff_s=0.0))
+    kept, wire, extra, excl = cohort_exchange(
+        t, round_key="r1", clients=[5, 7, 9], one_way_bytes=100,
+        quorum_frac=0.5)
+    assert kept == [0, 2] and excl == [7]
+    # the perma-failed device still burned wire bytes on every attempt
+    assert wire > 4 * 100
+    with pytest.raises(QuorumError):
+        cohort_exchange(t, round_key="r2", clients=[5, 7, 9],
+                        one_way_bytes=100, quorum_frac=1.0)
+
+
+# ---------------------------------------------------------------------------
+# chaos determinism + quorum degradation through the full experiment API
+# ---------------------------------------------------------------------------
+
+
+def _run_cfg():
+    return RunConfig(
+        arch=ARCH,
+        fed=FedConfig(num_clients=6, clients_per_round=3, local_steps=2,
+                      device_batch_size=4, server_batch_size=8,
+                      dirichlet_alpha=0.5),
+        optim=OptimConfig(name="momentum", lr=0.1, schedule="inverse_time",
+                          decay_gamma=0.01))
+
+
+def _spec(**kw):
+    base = dict(name="tt", systems=("ampere",), arch=ARCH, run=_run_cfg(),
+                data=DataSpec(train_samples=144, eval_samples=48),
+                max_rounds=2, max_server_epochs=1, patience=50)
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+def _fleet_cfg():
+    from repro.fleet import FleetConfig
+
+    return FleetConfig(n_devices=6, seed=0, min_cohort=2, max_cohort=3,
+                       init_cohort=3, dropout_hazard=0.0, p_online0=1.0,
+                       async_buffer_size=2, max_concurrent=3)
+
+
+# generous retry budget so every injected fault is absorbed by a
+# successful retry (never an exclusion) — that is the invariant the
+# loss-equality test below leans on
+_CHAOS_TRANSPORT = TransportSpec(quorum_frac=0.5, max_attempts=6,
+                                 base_backoff_s=0.01, max_backoff_s=0.1,
+                                 attempt_timeout_s=0.2)
+_CHAOS_FAULTS = FaultSpec(seed=7, drop_prob=0.15, corrupt_prob=0.15,
+                          duplicate_prob=0.1, latency_spike_prob=0.1,
+                          reset_prob=0.05)
+
+
+def _strip_accounting(history):
+    """Everything in a history except the wire/clock accounting."""
+    return {k: v for k, v in history.items()
+            if k not in ("comm_bytes", "sim_time")}
+
+
+def test_chaos_run_is_deterministic_and_loss_matches_faultfree():
+    """Same spec + seed => byte-identical metrics across two runs; and
+    because every injected fault is absorbed by a successful retry or a
+    duplicate-dedup (never a lost update), the faulted run follows the
+    exact training trajectory of the fault-free run — only the accounted
+    wire bytes and sim time differ."""
+    spec = _spec(systems=("ampere", "fedbuff"), fleet=_fleet_cfg(),
+                 transport=_CHAOS_TRANSPORT, faults=_CHAOS_FAULTS)
+    out1 = run_experiment(spec, write_results=False)
+    out2 = run_experiment(spec, write_results=False)
+    assert out1["summary"] == out2["summary"]          # byte-identical
+    for name in ("ampere", "fedbuff"):
+        assert out1["results"][name]["history"] == \
+            out2["results"][name]["history"]
+
+    clean = run_experiment(_spec(systems=("ampere", "fedbuff"),
+                                 fleet=_fleet_cfg()),
+                           write_results=False)
+    for name in ("ampere", "fedbuff"):
+        hf = out1["results"][name]["history"]
+        hc = clean["results"][name]["history"]
+        # identical losses/val metrics, record for record
+        assert _strip_accounting(hf) == _strip_accounting(hc)
+        assert (out1["summary"][name]["final_val_loss"]
+                == clean["summary"][name]["final_val_loss"])
+        # ...while the accounting reflects bytes actually moved
+        assert hf["comm_bytes"] > hc["comm_bytes"]
+        assert hf["sim_time"] > hc["sim_time"]
+        wire = out1["summary"][name]["wire"]
+        assert wire["wire_bytes"] == hf["comm_bytes"]
+        assert wire["retries"] + wire["duplicates"] > 0
+    assert "wire" not in clean["summary"]["ampere"]
+
+
+def test_quorum_degraded_round_excludes_perma_failed_device():
+    """One device fails every upload attempt: with quorum 0.5 the run
+    completes, the device is excluded — never silently included, never a
+    hang.  With quorum 1.0 the same spec fails loudly."""
+    faults = FaultSpec(seed=3, perma_fail_devices=(0,))
+    spec = _spec(transport=_CHAOS_TRANSPORT, faults=faults)
+    out = run_experiment(spec, write_results=False)
+    hist = out["results"]["ampere"]["history"]
+    assert len(hist["device"]) == 2 and len(hist["server"]) == 1
+
+    # wire accounting differs from a clean run: the perma-failed
+    # device's activations burned 6 attempts each and were never stored
+    clean = run_experiment(_spec(), write_results=False)
+    assert out["summary"]["ampere"]["comm_bytes"] \
+        != clean["summary"]["ampere"]["comm_bytes"]
+
+    strict = _spec(transport=replace(_CHAOS_TRANSPORT, quorum_frac=1.0),
+                   faults=faults)
+    with pytest.raises(QuorumError):
+        run_experiment(strict, write_results=False)
+
+
+def test_generate_activations_quorum_exclusion():
+    import jax
+
+    from repro.core.uit import AmpereTrainer
+    from repro.data.activation_store import ActivationStore
+    from repro.experiments import build_transport, resolve_setup
+
+    spec = _spec(transport=_CHAOS_TRANSPORT,
+                 faults=FaultSpec(seed=3, perma_fail_devices=(0,)))
+    spec, model, clients, eval_data = resolve_setup(spec)
+    tr = AmpereTrainer(model, spec.run, clients, eval_data,
+                       transport=build_transport(spec),
+                       quorum_frac=spec.transport.quorum_frac)
+    dev, _srv, aux = tr._init_states(jax.random.PRNGKey(0))
+    store = ActivationStore(seed=0)
+    tr.generate_activations({"device": dev, "aux": aux}, store)
+    assert 0 not in store.clients()              # excluded, not half-landed
+    assert set(store.clients()) == {1, 2, 3, 4, 5}
+    # wire bytes include the failed attempts; the history accounts them
+    assert tr.history["comm_bytes"] > store.bytes_received
+
+
+# ---------------------------------------------------------------------------
+# scheduler-level quorum rounds
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_quorum_closes_rounds_early():
+    from repro.fleet import FleetConfig, FleetScheduler, sample_population
+
+    base = dict(n_devices=12, seed=0, min_cohort=4, max_cohort=6,
+                init_cohort=6, dropout_hazard=0.0, p_online0=1.0,
+                mean_session_rounds=1e6)   # no churn: isolate the quorum
+    lat = lambda p: 1.0 / p.speed_factor
+    full_cfg = FleetConfig(**base)
+    full = FleetScheduler(sample_population(full_cfg), lat,
+                          full_cfg).simulate(6)
+    qcfg = FleetConfig(quorum_frac=0.5, **base)
+    quor = FleetScheduler(sample_population(qcfg), lat, qcfg).simulate(6)
+
+    assert any(p.dropped for p in quor.rounds)       # stragglers dropped
+    assert any(kind == "quorum" for _, kind, _, _ in quor.events)
+    for p in quor.rounds:
+        assert len(p.clients) >= required_quorum(p.cohort_size, 0.5)
+    # closing early can only shorten the schedule
+    assert quor.total_time <= full.total_time
+    # deterministic: the same config replays byte-identically
+    again = FleetScheduler(sample_population(qcfg), lat, qcfg).simulate(6)
+    assert again.rounds == quor.rounds
+
+
+def test_trace_crc_roundtrip_with_quorum(tmp_path):
+    from repro.fleet import (FleetConfig, FleetScheduler, FleetTrace,
+                             sample_population)
+
+    cfg = FleetConfig(n_devices=8, seed=1, min_cohort=2, max_cohort=4,
+                      init_cohort=4, quorum_frac=0.5)
+    trace = FleetScheduler(sample_population(cfg),
+                           lambda p: 1.0 / p.speed_factor, cfg).simulate(4)
+    path = str(tmp_path / "q.jsonl")
+    trace.save(path, events=False)
+    assert FleetTrace.load(path).rounds == trace.rounds
+
+
+# ---------------------------------------------------------------------------
+# socket transport (in-process pair, fast tier)
+# ---------------------------------------------------------------------------
+
+
+def test_socket_stop_and_wait_with_faults():
+    """Sender injects corruption/duplicates; the receiver's CRC +
+    idempotency key deliver every message exactly once, in order."""
+    a, b = socket.socketpair()
+    faults = FaultSpec(seed=2, corrupt_prob=0.3, duplicate_prob=0.3)
+    sender = SocketTransport(a, retry=RetryPolicy(max_attempts=6,
+                                                  base_backoff_s=0.0,
+                                                  attempt_timeout_s=2.0),
+                             fault_plan=FaultPlan(faults))
+    receiver = FrameReceiver(b, timeout_s=10.0)
+    got = {}
+
+    def serve():
+        for _ in range(20):
+            f = receiver.recv()
+            got[f.msg_id] = f.payload
+
+    th = threading.Thread(target=serve, daemon=True)
+    th.start()
+    for i in range(20):
+        status = sender.send(Frame(kind="data", msg_id=f"m{i}",
+                                   payload=bytes([i]) * 100))
+        assert status in ("ok", "dup")
+    th.join(timeout=30)
+    assert not th.is_alive()
+    assert got == {f"m{i}": bytes([i]) * 100 for i in range(20)}
+    # something actually went wrong on the wire and was absorbed
+    assert (sender.stats["corruptions"] + sender.stats["duplicates"]) > 0
+    assert receiver.stats["corrupt"] == sender.stats["corruptions"]
+    assert sender.stats["failures"] == 0
+    a.close()
+    b.close()
+
+
+# ---------------------------------------------------------------------------
+# two-process socket e2e (slow tier)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_two_process_socket_run_measures_wire_bytes(tmp_path):
+    """The full Ampere pipeline as two real processes: server role in a
+    subprocess, device role in-process.  The measured wire bytes (every
+    byte the server received — framing, device state, retries included)
+    must land within 10% of the analytic transfer bytes on a fault-free
+    run."""
+    from repro.transport.roles import run_device_role
+
+    # enough samples that the activation shards dominate the fixed
+    # device-state upload (which the analytic number does not price)
+    spec = _spec(name="socket_e2e", transport=TransportSpec(kind="socket"),
+                 data=DataSpec(train_samples=432, eval_samples=48))
+    srv = socket.socket()
+    srv.bind(("127.0.0.1", 0))
+    port = srv.getsockname()[1]
+    srv.close()
+
+    spec_path = tmp_path / "spec.json"
+    spec.save(str(spec_path))
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.Popen(
+        [sys.executable, os.path.join(REPO, "scripts", "run_experiment.py"),
+         str(spec_path), "--role", "server", "--port", str(port),
+         "--results-dir", str(tmp_path / "out")],
+        env=env, cwd=REPO, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        text=True)
+    try:
+        out = run_device_role(spec, port=port)
+    finally:
+        stdout, stderr = proc.communicate(timeout=600)
+    assert proc.returncode == 0, stderr[-2000:]
+
+    with open(tmp_path / "out" / "summary.json") as f:
+        summary = json.load(f)["summary"]
+    measured = summary["measured_wire_bytes"]
+    analytic = summary["analytic_transfer_bytes"]
+    assert analytic > 0
+    assert summary["device_analytic_bytes"] == analytic
+    assert abs(measured - analytic) / analytic < 0.10
+    assert summary["final_val_loss"] is not None
+    assert out["result"]["measured_wire_bytes"] == measured
+    assert out["stats"]["failures"] == 0
+    assert out["sent_bytes"] >= measured       # acks flow the other way
