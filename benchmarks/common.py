@@ -11,14 +11,19 @@ import numpy as np
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/bench")
 
 
-def best(fn, reps: int) -> float:
-    """Best-of-``reps`` wall-clock seconds for ``fn()`` (perf gates)."""
+def samples(fn, reps: int) -> list:
+    """All ``reps`` wall-clock samples for ``fn()`` (median reporting)."""
     ts = []
     for _ in range(reps):
         t0 = time.perf_counter()
         fn()
         ts.append(time.perf_counter() - t0)
-    return min(ts)
+    return ts
+
+
+def best(fn, reps: int) -> float:
+    """Best-of-``reps`` wall-clock seconds for ``fn()`` (perf gates)."""
+    return min(samples(fn, reps))
 
 
 def save(name: str, payload):

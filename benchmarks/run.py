@@ -132,24 +132,36 @@ def main(argv=None) -> None:
                     help="run only the gate benchmarks and fail on "
                          "regression vs the committed BENCH_*.json")
     ap.add_argument("--gate-threshold", type=float, default=0.25)
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap the benchmark run in jax.profiler.trace "
+                         "(dump under results/profile) and activate "
+                         "kernel-site trace annotations")
     args = ap.parse_args(argv)
     if args.gate:
         sys.exit(run_gate(args.gate_threshold))
     only = [s for s in args.only.split(",") if s]
 
+    if args.profile:
+        from repro.observability.profiling import profile_run
+        profile_cm = profile_run(os.path.join("results", "profile"))
+    else:
+        import contextlib
+        profile_cm = contextlib.nullcontext()
+
     failures = []
-    for name, fn in BENCHMARKS.items():
-        if only and not any(o in name for o in only):
-            continue
-        t0 = time.time()
-        print(f"\n===== {name} =====", flush=True)
-        try:
-            fn(quick=not args.full)
-            print(f"[{name}] ok in {time.time()-t0:.1f}s", flush=True)
-        except Exception:
-            traceback.print_exc()
-            failures.append(name)
-            print(f"[{name}] FAILED", flush=True)
+    with profile_cm:
+        for name, fn in BENCHMARKS.items():
+            if only and not any(o in name for o in only):
+                continue
+            t0 = time.time()
+            print(f"\n===== {name} =====", flush=True)
+            try:
+                fn(quick=not args.full)
+                print(f"[{name}] ok in {time.time()-t0:.1f}s", flush=True)
+            except Exception:
+                traceback.print_exc()
+                failures.append(name)
+                print(f"[{name}] FAILED", flush=True)
     print(f"\n{len(BENCHMARKS) - len(failures)}/{len(BENCHMARKS)} "
           f"benchmarks ok" + (f"; failed: {failures}" if failures else ""))
     if failures:

@@ -21,9 +21,14 @@ fi
 python scripts/run_experiment.py examples/specs/compare_smoke.json --dry-run
 # seeded chaos smoke: drops/corruption/duplicates/torn writes injected at
 # the transport + storage boundaries; the run must complete (retries +
-# quorum absorb the faults) on a tiny vit in well under 30s
+# quorum absorb the faults) on a tiny vit in well under 30s.  The spec
+# enables observability, so the run emits a Perfetto trace.json + CRC'd
+# spans.jsonl per system — validate them (schema + CRCs) and require
+# nonzero retry spans, proving fault injection exercised the retry path.
 CHAOS_DIR=$(mktemp -d)
 python scripts/run_experiment.py examples/specs/chaos_smoke.json \
     --results-dir "$CHAOS_DIR"
+python scripts/trace_report.py "$CHAOS_DIR" --validate --require-retries \
+    --out "$CHAOS_DIR/report.md"
 rm -rf "$CHAOS_DIR"
 python -m benchmarks.run --gate

@@ -30,6 +30,10 @@ def main(argv=None):
                     help="override spec.results_dir")
     ap.add_argument("--echo", action="store_true",
                     help="echo per-round metrics lines")
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap the run in jax.profiler.trace and couple "
+                         "spans to TraceAnnotation (forces observability "
+                         "on; XLA dump lands under <results>/profile)")
     ap.add_argument("--role", choices=("device", "server"), default=None,
                     help="two-process socket mode: run only this side of "
                          "the Ampere pipeline (see repro.transport.roles)")
@@ -45,6 +49,11 @@ def main(argv=None):
     spec = ExperimentSpec.load(args.spec)
     if args.results_dir is not None:
         spec = replace(spec, results_dir=args.results_dir)
+    if args.profile:
+        from repro.experiments import ObservabilitySpec
+        obs_spec = spec.observability or ObservabilitySpec()
+        spec = replace(spec, observability=replace(
+            obs_spec, enabled=True, profile=True))
 
     problems = spec.validate()
     if problems:
@@ -84,8 +93,24 @@ def main(argv=None):
         print("dry-run OK")
         return 0
 
-    out = run_experiment(spec, log_echo=args.echo)
+    if args.profile:
+        import os
+        from repro.observability.profiling import profile_run
+        logdir = os.path.join(
+            spec.results_dir or f"results/{spec.name}", "profile")
+        with profile_run(logdir):
+            out = run_experiment(spec, log_echo=args.echo)
+        print(f"profiler trace (if jax.profiler is available): {logdir}")
+    else:
+        out = run_experiment(spec, log_echo=args.echo)
     print(json.dumps(out["summary"], indent=1))
+    if spec.observability is not None and spec.observability.enabled:
+        from repro.observability.metrics import format_phase_table
+        for name, system in sorted(out["summary"].items()):
+            rows = system.get("phases")
+            if rows:
+                print()
+                print(format_phase_table(rows, title=name))
     print(f"wrote {out['results_dir']}/summary.json")
     return 0
 

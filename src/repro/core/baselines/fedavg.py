@@ -17,6 +17,7 @@ import numpy as np
 from repro.core import aggregation, comm_model, evaluate, losses, steps
 from repro.data.pipeline import ClientData, round_batches
 from repro.experiments.runner import Runner, StepOutcome
+from repro.observability import NULL_OBS
 from repro.optim import make_schedule
 from repro.transport import cohort_exchange
 
@@ -61,20 +62,22 @@ class FedAvgTrainer:
     def __init__(self, model, run_cfg, clients: List[ClientData], eval_data,
                  workdir: Optional[str] = None, patience: int = 15,
                  log_echo: bool = False, transport=None,
-                 quorum_frac: float = 1.0):
+                 quorum_frac: float = 1.0, obs=None):
         self.model = model
         self.run = run_cfg
         self.clients = clients
         self.eval_data = eval_data
         self.transport = transport
         self.quorum_frac = quorum_frac
+        self.obs = obs if obs is not None else NULL_OBS
         self.rng = np.random.default_rng(run_cfg.fed.seed)
         self.runner = Runner(workdir, patience=patience, log_echo=log_echo,
                              log_name="fedavg.jsonl",
                              history={"rounds": [], "comm_bytes": 0,
                                       "sim_time": 0.0},
                              fault_plan=(transport.fault_plan
-                                         if transport is not None else None))
+                                         if transport is not None else None),
+                             obs=self.obs)
         self.log = self.runner.log
         self.patience = patience
         self._round = jax.jit(make_fedavg_round_step(model, run_cfg))
@@ -110,7 +113,7 @@ class FedAvgTrainer:
             kept, wire, extra, excluded = cohort_exchange(
                 self.transport, round_key=f"fedavg/{rnd}",
                 clients=cohort["clients"], one_way_bytes=full_bytes,
-                quorum_frac=self.quorum_frac)
+                quorum_frac=self.quorum_frac, phase="fedavg")
             survivors = [cohort["clients"][i] for i in kept]
             sweights = [cohort["weights"][i] for i in kept]
             if excluded:    # quorum-degraded round: reweight the survivors
@@ -140,6 +143,18 @@ class FedAvgTrainer:
             log = {"variant": "fedavg"}
             if self.transport is not None and self.transport.faulty:
                 log["excluded"] = len(excluded)
+            if self.transport is not None:
+                log["wire"] = self.transport.delta_stats()
+            if self.obs.enabled:
+                m = self.obs.metrics
+                one_way = full_bytes * len(cohort["clients"])
+                m.counter("comm_bytes", one_way, phase="fedavg",
+                          direction="down")
+                m.counter("comm_bytes", one_way, phase="fedavg",
+                          direction="up")
+                if excluded:
+                    m.counter("excluded_devices", len(excluded),
+                              phase="fedavg")
             return StepOutcome(
                 state=params_new,
                 record={"round": rnd, "loss": float(metrics["loss"]),

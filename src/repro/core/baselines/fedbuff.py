@@ -85,7 +85,7 @@ class FedBuffTrainer(AmpereTrainer):
                 self.transport, round_key=f"fedbuff/{rnd}",
                 clients=plan.clients,
                 one_way_bytes=self.sizes.device + self.sizes.aux,
-                quorum_frac=self.quorum_frac)
+                quorum_frac=self.quorum_frac, phase="fedbuff")
             clients = [plan.clients[i] for i in kept]
             weights = [plan.weights[i] for i in kept]
             staleness = [plan.staleness[i] for i in kept]
@@ -106,6 +106,13 @@ class FedBuffTrainer(AmpereTrainer):
                    "sim_t": round(plan.t_end, 6)}
             if self.transport is not None and self.transport.faulty:
                 log["excluded"] = len(excluded)
+            if self.transport is not None:
+                log["wire"] = self.transport.delta_stats()
+            self._round_metrics("fedbuff", len(plan.clients), excluded)
+            if self.obs.enabled:
+                for s in staleness:
+                    self.obs.metrics.observe("staleness", float(s),
+                                             phase="fedbuff")
             return StepOutcome(
                 state=ring,
                 record={"round": rnd, "loss": float(metrics["loss"]),

@@ -38,6 +38,7 @@ from repro.core import (aggregation, auxiliary, comm_model, evaluate, losses,
 from repro.data.pipeline import ClientData, round_batches
 from repro.experiments.runner import Runner, StepOutcome
 from repro.models import build_model
+from repro.observability import NULL_OBS
 from repro.optim import make_schedule
 from repro.transport import cohort_exchange
 
@@ -191,7 +192,7 @@ class SFLTrainer:
     def __init__(self, model, run_cfg, clients: List[ClientData], eval_data,
                  variant: str = "splitfed", workdir: Optional[str] = None,
                  patience: int = 15, log_echo: bool = False, transport=None,
-                 quorum_frac: float = 1.0):
+                 quorum_frac: float = 1.0, obs=None):
         self.model = model
         self.run = run_cfg
         self.variant = variant
@@ -199,13 +200,15 @@ class SFLTrainer:
         self.eval_data = eval_data
         self.transport = transport
         self.quorum_frac = quorum_frac
+        self.obs = obs if obs is not None else NULL_OBS
         self.rng = np.random.default_rng(run_cfg.fed.seed)
         self.runner = Runner(workdir, patience=patience, log_echo=log_echo,
                              log_name=f"{variant}.jsonl",
                              history={"rounds": [], "comm_bytes": 0,
                                       "sim_time": 0.0},
                              fault_plan=(transport.fault_plan
-                                         if transport is not None else None))
+                                         if transport is not None else None),
+                             obs=self.obs)
         self.log = self.runner.log
         self.patience = patience
         self._round = jax.jit(make_sfl_round_step(model, run_cfg, variant))
@@ -285,7 +288,8 @@ class SFLTrainer:
                 self.transport, round_key=f"sfl-{self.variant}/{rnd}",
                 clients=cohort["clients"],
                 one_way_bytes=(act_bytes + model_bytes) // 2,
-                quorum_frac=self.quorum_frac)
+                quorum_frac=self.quorum_frac,
+                phase=f"sfl-{self.variant}")
             survivors = [cohort["clients"][i] for i in kept]
             sweights = [cohort["weights"][i] for i in kept]
             if excluded:    # quorum-degraded round: reweight the survivors
@@ -333,6 +337,17 @@ class SFLTrainer:
             log = {"variant": self.variant}
             if self.transport is not None and self.transport.faulty:
                 log["excluded"] = len(excluded)
+            if self.transport is not None:
+                log["wire"] = self.transport.delta_stats()
+            if self.obs.enabled:
+                m = self.obs.metrics
+                ph = f"sfl-{self.variant}"
+                one_way = (act_bytes + model_bytes) // 2 \
+                    * len(cohort["clients"])
+                m.counter("comm_bytes", one_way, phase=ph, direction="down")
+                m.counter("comm_bytes", one_way, phase=ph, direction="up")
+                if excluded:
+                    m.counter("excluded_devices", len(excluded), phase=ph)
             return StepOutcome(
                 state=(state, controls),
                 record={"round": rnd, "loss": float(metrics["loss"]),

@@ -54,6 +54,7 @@ from repro.data.pipeline import (ClientData, DevicePrefetcher, client_pool,
                                  round_batches)
 from repro.experiments.runner import Runner, StepOutcome
 from repro.models import build_model
+from repro.observability import NULL_OBS
 from repro.optim import make_schedule
 from repro.transport import QuorumError, cohort_exchange, required_quorum
 
@@ -63,7 +64,7 @@ class AmpereTrainer:
                  eval_data, workdir: Optional[str] = None,
                  patience: int = 15, log_echo: bool = False,
                  consolidate: bool = True, transport=None,
-                 quorum_frac: float = 1.0):
+                 quorum_frac: float = 1.0, obs=None):
         self.model = model
         self.run = run_cfg
         self.clients = clients
@@ -75,6 +76,7 @@ class AmpereTrainer:
         # analytic accounting byte-for-byte
         self.transport = transport
         self.quorum_frac = quorum_frac
+        self.obs = obs if obs is not None else NULL_OBS
         self.rng = np.random.default_rng(run_cfg.fed.seed)
         # cross-cutting loop machinery (metrics, checkpoint/journal,
         # accounting, early stop) lives in the shared Runner; the legacy
@@ -83,7 +85,8 @@ class AmpereTrainer:
                              history={"device": [], "server": [],
                                       "comm_bytes": 0, "sim_time": 0.0},
                              fault_plan=(transport.fault_plan
-                                         if transport is not None else None))
+                                         if transport is not None else None),
+                             obs=self.obs)
         self.log = self.runner.log
         self.ckpt = self.runner.ckpt
         self.journal = self.runner.journal
@@ -114,6 +117,22 @@ class AmpereTrainer:
         if self.model.kind != "lm":
             return 0
         return int(self.clients[0].dataset.arrays["tokens"].shape[1])
+
+    def _round_metrics(self, phase: str, cohort_n: int, excluded):
+        """Direction-split analytic bytes + exclusions for one round.
+
+        Observability only — the runner already accounts the undirected
+        wire total into history; this splits the *analytic* volume by
+        direction for the per-phase table.
+        """
+        if not self.obs.enabled:
+            return
+        m = self.obs.metrics
+        one_way = (self.sizes.device + self.sizes.aux) * cohort_n
+        m.counter("comm_bytes", one_way, phase=phase, direction="down")
+        m.counter("comm_bytes", one_way, phase=phase, direction="up")
+        if excluded:
+            m.counter("excluded_devices", len(excluded), phase=phase)
 
     def _init_states(self, key):
         params = self.model.init(key)
@@ -155,7 +174,7 @@ class AmpereTrainer:
                 self.transport, round_key=f"ampere/device/{rnd}",
                 clients=cohort["clients"],
                 one_way_bytes=self.sizes.device + self.sizes.aux,
-                quorum_frac=self.quorum_frac)
+                quorum_frac=self.quorum_frac, phase="device")
             survivors = [cohort["clients"][i] for i in kept]
             weights = [cohort["weights"][i] for i in kept]
             if excluded:    # quorum-degraded round: reweight the survivors
@@ -181,6 +200,9 @@ class AmpereTrainer:
             log = {"dropped": len(cohort["dropped"])}
             if self.transport is not None and self.transport.faulty:
                 log["excluded"] = len(excluded)
+            if self.transport is not None:
+                log["wire"] = self.transport.delta_stats()
+            self._round_metrics("device", len(cohort["clients"]), excluded)
             return StepOutcome(
                 state=state,
                 record={"round": rnd, "loss": float(metrics["loss"]), **val},
@@ -223,7 +245,7 @@ class AmpereTrainer:
                 self.transport, round_key=f"ampere/fleet/{rnd}",
                 clients=plan.clients,
                 one_way_bytes=self.sizes.device + self.sizes.aux,
-                quorum_frac=self.quorum_frac)
+                quorum_frac=self.quorum_frac, phase="fleet")
             survivors = [plan.clients[i] for i in kept]
             weights = [plan.weights[i] for i in kept]
             if excluded:    # quorum-degraded round: reweight the survivors
@@ -237,6 +259,9 @@ class AmpereTrainer:
                    "sim_t": round(plan.t_end, 6)}
             if self.transport is not None and self.transport.faulty:
                 log["excluded"] = len(excluded)
+            if self.transport is not None:
+                log["wire"] = self.transport.delta_stats()
+            self._round_metrics("fleet", len(plan.clients), excluded)
             return StepOutcome(
                 state=state,
                 record={"round": rnd, "loss": float(metrics["loss"]),
@@ -287,18 +312,21 @@ class AmpereTrainer:
             return loss, m.get("acc", jnp.zeros(()))
 
         def eval_fn(dev_state, max_batches: int = 8, batch_size: int = 64):
-            n = len(self.eval_data)
-            ls, accs = [], []
-            bs = min(batch_size, n)
-            for s in range(0, min(n, max_batches * bs) - bs + 1, bs):
-                idx = np.arange(s, s + bs)
-                batch = {k: jnp.asarray(v[idx])
-                         for k, v in self.eval_data.arrays.items()}
-                loss, acc = step(dev_state, batch)
-                ls.append(float(loss))
-                accs.append(float(acc))
-            return {"val_loss": float(np.mean(ls)),
-                    "val_acc": float(np.mean(accs))}
+            with self.obs.tracer.span("aux_eval", track="eval") as sp:
+                n = len(self.eval_data)
+                ls, accs = [], []
+                bs = min(batch_size, n)
+                for s in range(0, min(n, max_batches * bs) - bs + 1, bs):
+                    idx = np.arange(s, s + bs)
+                    batch = {k: jnp.asarray(v[idx])
+                             for k, v in self.eval_data.arrays.items()}
+                    loss, acc = step(dev_state, batch)
+                    ls.append(float(loss))
+                    accs.append(float(acc))
+                out = {"val_loss": float(np.mean(ls)),
+                       "val_acc": float(np.mean(accs))}
+                sp.set(**out)
+            return out
         return eval_fn
 
     # ------------------------------------------------------------------
@@ -318,6 +346,14 @@ class AmpereTrainer:
         ``bandwidth_bps``); without it parallel mode falls back to the
         paper-testbed per-device link (``BANDWIDTH_BPS``), under which
         the slowest pair is simply the largest shard."""
+        with self.obs.tracer.span("consolidate", track="transfer",
+                                  upload=upload) as sp:
+            return self._generate_activations(dev_state, store, batch_size,
+                                              upload, client_bandwidth_bps,
+                                              sp)
+
+    def _generate_activations(self, dev_state, store, batch_size, upload,
+                              client_bandwidth_bps, sp):
         model, run = self.model, self.run
         p = run.split.split_point
 
@@ -361,7 +397,8 @@ class AmpereTrainer:
                           cid, comm_model.BANDWIDTH_BPS)
                       if client_bandwidth_bps is not None else None)
                 res = transport.transfer(f"acts/{cid}/{i}", nbytes,
-                                         device=cid, bandwidth_bps=bw)
+                                         device=cid, bandwidth_bps=bw,
+                                         phase="transfer")
                 wire_total += res.wire_bytes
                 client_extra[cid] = client_extra.get(cid, 0.0) \
                     + res.extra_time
@@ -416,7 +453,13 @@ class AmpereTrainer:
         self.runner.account(
             comm_bytes=wire_total if transport is not None
             else store.bytes_received,
-            sim_time=t_up + extra_total)
+            sim_time=t_up + extra_total,
+            phase="transfer", direction="up")
+        if self.obs.enabled and failed:
+            self.obs.metrics.counter("excluded_devices", len(failed),
+                                     phase="transfer")
+        sp.set(bytes=store.bytes_received, sim_time_s=round(t_up, 9),
+               excluded=len(failed))
         if faulty:
             self.log.log(phase="transfer", bytes=store.bytes_received,
                          upload=upload, wire=wire_total,
@@ -483,8 +526,11 @@ class AmpereTrainer:
                       else np.zeros((0,), np.float64))  # one epoch-end sync
             merged = splitting.merge_params(self.model, dev_state["device"],
                                             srv_state["server"], p)
-            val = evaluate.evaluate(merged_model, merged, self.eval_data,
-                                    eval_step=eval_step)
+            with self.obs.tracer.span("merged_eval", track="eval",
+                                      epoch=epoch) as esp:
+                val = evaluate.evaluate(merged_model, merged, self.eval_data,
+                                        eval_step=eval_step)
+                esp.set(val_loss=val["loss"], val_acc=val["acc"])
             return StepOutcome(
                 state=srv_state,
                 record={"epoch": epoch, "loss": float(np.mean(ls)),

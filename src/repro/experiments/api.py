@@ -17,6 +17,7 @@ from typing import Optional, Tuple
 
 from repro.experiments.spec import ExperimentSpec, TransportSpec
 from repro.experiments.systems import SystemContext, get_system
+from repro.observability import Observability
 
 
 def _history_summary(history: dict) -> dict:
@@ -117,12 +118,14 @@ def resolve_setup(spec: ExperimentSpec):
     return spec, model, clients, eval_data
 
 
-def build_transport(spec: ExperimentSpec):
+def build_transport(spec: ExperimentSpec, *, obs=None):
     """Fresh per-system transport for a spec (None = legacy accounting).
 
     A transport exists iff the spec opts in (a ``transport`` or
     ``faults`` section); it is rebuilt per system so idempotency keys and
-    fault statistics never leak across systems in one run.
+    fault statistics never leak across systems in one run.  ``obs`` (an
+    :class:`~repro.observability.Observability` bundle) gives the
+    transport a tracer for per-message spans.
     """
     if spec.transport is None and spec.faults is None:
         return None
@@ -130,7 +133,8 @@ def build_transport(spec: ExperimentSpec):
 
     tspec = spec.transport or TransportSpec()
     plan = FaultPlan(spec.faults) if spec.faults is not None else None
-    return InProcessTransport(fault_plan=plan, retry=tspec.retry_policy())
+    return InProcessTransport(fault_plan=plan, retry=tspec.retry_policy(),
+                              obs=obs)
 
 
 def run_experiment(spec: ExperimentSpec, *, log_echo: bool = False,
@@ -156,10 +160,14 @@ def run_experiment(spec: ExperimentSpec, *, log_echo: bool = False,
     trace, population = resolve_trace(spec, model, spec.run, seq_len=seq)
 
     results_dir = spec.results_dir or os.path.join("results", spec.name)
+    obs_spec = spec.observability
     results, summary = {}, {}
     for name, sys_cls in systems.items():
         workdir = os.path.join(results_dir, name) if spec.persist else None
-        transport = build_transport(spec)
+        obs = Observability.from_spec(obs_spec)
+        transport = build_transport(spec, obs=obs)
+        if obs.enabled and trace is not None and obs_spec.scheduler_events:
+            obs.tracer.ingest_fleet_trace(trace)
         ctx = SystemContext(
             model=model, run_cfg=spec.run, clients=clients,
             eval_data=eval_data, workdir=workdir, trace=trace,
@@ -169,10 +177,18 @@ def run_experiment(spec: ExperimentSpec, *, log_echo: bool = False,
             patience=spec.patience, log_echo=log_echo,
             transport=transport,
             quorum_frac=(spec.transport.quorum_frac
-                         if spec.transport is not None else 1.0))
+                         if spec.transport is not None else 1.0),
+            obs=obs)
         system = sys_cls()
         system.on_start(ctx)
-        result = system.run(ctx)
+        try:
+            result = system.run(ctx)
+        finally:
+            # the Runner's metrics-log handle must not leak on a
+            # mid-round QuorumError (or any other abort)
+            runner = getattr(ctx.trainer, "runner", None)
+            if runner is not None:
+                runner.close()
         system.on_finish(ctx, result)
         results[name] = result
         summary[name] = _history_summary(result["history"])
@@ -180,6 +196,20 @@ def run_experiment(spec: ExperimentSpec, *, log_echo: bool = False,
             # "bytes actually moved, retries included" alongside the
             # analytic history totals
             summary[name]["wire"] = dict(transport.stats)
+        if obs.enabled:
+            # per-phase breakdown into the summary; the full registry +
+            # tracer digest under a dedicated history key that parity
+            # tests exclude (core history keys stay byte-identical with
+            # observability on or off)
+            summary[name]["phases"] = obs.metrics.phase_table()
+            summary[name]["trace"] = obs.tracer.summary()
+            result["history"]["observability"] = obs.summary()
+            if write_results:
+                from repro.observability.export import export_artifacts
+                summary[name]["artifacts"] = export_artifacts(
+                    obs.tracer, os.path.join(results_dir, name),
+                    trace_json=obs_spec.trace_json,
+                    span_log=obs_spec.span_log)
 
     out = {"spec": spec, "results": results, "summary": summary,
            "results_dir": results_dir}

@@ -29,6 +29,7 @@ import os
 from typing import Any, Callable, Iterable, Optional, Tuple
 
 from repro.core import evaluate
+from repro.observability import NULL_OBS
 from repro.runtime.checkpoint import Checkpointer
 from repro.runtime.fault_tolerance import RoundJournal
 from repro.runtime.metrics import MetricsLogger
@@ -63,12 +64,21 @@ class Runner:
     def __init__(self, workdir: Optional[str] = None, *,
                  patience: int = 15, log_echo: bool = False,
                  log_name: str = "metrics.jsonl",
-                 history: Optional[dict] = None, fault_plan=None):
+                 history: Optional[dict] = None, fault_plan=None,
+                 obs=None):
         self.workdir = workdir
         self.patience = patience
+        self.obs = obs if obs is not None else NULL_OBS
+        self.history = history if history is not None else {}
+        self.history.setdefault("comm_bytes", 0)
+        self.history.setdefault("sim_time", 0.0)
+        # the metrics log is stamped with the *simulated* clock (not
+        # time.time()), so logs from byte-identical resume runs diff
+        # clean; the history dict must exist before the logger reads it
         self.log = MetricsLogger(
             os.path.join(workdir, log_name) if workdir else None,
-            echo=log_echo)
+            echo=log_echo, clock=lambda: self.history["sim_time"])
+        self.obs.tracer.bind_sim_clock(lambda: self.history["sim_time"])
         # fault_plan threads torn-write injection into the storage
         # boundary (checkpoint arrays, journal appends) for chaos tests
         self.ckpt = Checkpointer(os.path.join(workdir, "ckpt"),
@@ -77,13 +87,27 @@ class Runner:
         self.journal = RoundJournal(os.path.join(workdir, "journal.jsonl"),
                                     fault_plan=fault_plan) \
             if workdir else None
-        self.history = history if history is not None else {}
-        self.history.setdefault("comm_bytes", 0)
-        self.history.setdefault("sim_time", 0.0)
         # early-stop state restored per phase by restore(); consumed by the
         # next run_phase of that phase so a resumed run stops at the same
         # round an uninterrupted run would have
         self._stopper_state: dict = {}
+
+    # ------------------------------------------------------------------
+    def close(self):
+        """Release the metrics-log handle (idempotent).
+
+        Called by :func:`repro.experiments.api.run_experiment` in a
+        ``finally`` — a mid-round :class:`~repro.transport.QuorumError`
+        must not leak the open JSONL handle.
+        """
+        self.log.close()
+
+    def __enter__(self) -> "Runner":
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.close()
+        return False
 
     # ------------------------------------------------------------------
     def restore(self, phase: str, state, *, step_name: str = "round"
@@ -113,10 +137,23 @@ class Runner:
             return tree, meta[step_name] + 1
         return state, 0
 
-    def account(self, *, comm_bytes: int = 0, sim_time: float = 0.0):
-        """Out-of-loop accounting (e.g. the one-shot activation upload)."""
+    def account(self, *, comm_bytes: int = 0, sim_time: float = 0.0,
+                phase: Optional[str] = None, direction: str = "up"):
+        """Out-of-loop accounting (e.g. the one-shot activation upload).
+
+        ``phase`` additionally attributes the bytes/time to a metrics
+        phase row (observability only — history totals are identical
+        either way).
+        """
         self.history["comm_bytes"] += comm_bytes
         self.history["sim_time"] += sim_time
+        if phase is not None and self.obs.enabled:
+            m = self.obs.metrics
+            if comm_bytes:
+                m.counter("comm_bytes", comm_bytes, phase=phase,
+                          direction=direction)
+            if sim_time:
+                m.observe("step_sim_s", sim_time, phase=phase)
 
     # ------------------------------------------------------------------
     def run_phase(self, phase: str, state,
@@ -147,12 +184,24 @@ class Runner:
             # (in a LATER phase) — don't train rounds the uninterrupted
             # run never trained
             return state
+        tracer, metrics = self.obs.tracer, self.obs.metrics
         for step_idx, plan in plans:
-            out = body(state, step_idx, plan)
-            state = out.state
-            self.history[history_key].append(out.record)
-            self.history["comm_bytes"] += out.comm_bytes
-            self.history["sim_time"] += out.sim_time
+            with tracer.span(f"{phase}.{step_name}", track=phase,
+                             **{step_name: step_idx}) as sp:
+                out = body(state, step_idx, plan)
+                state = out.state
+                self.history[history_key].append(out.record)
+                self.history["comm_bytes"] += out.comm_bytes
+                self.history["sim_time"] += out.sim_time
+                sp.set(**{k: v for k, v in out.record.items()
+                          if isinstance(v, (int, float, str, bool))})
+            if self.obs.enabled:
+                metrics.counter("steps", 1, phase=phase)
+                if out.comm_bytes:
+                    metrics.counter("comm_bytes", out.comm_bytes,
+                                    phase=phase)
+                metrics.observe("step_wall_s", sp.dur_wall, phase=phase)
+                metrics.observe("step_sim_s", out.sim_time, phase=phase)
             self.log.log(phase=phase, **out.record, **out.log)
             # update the stopper BEFORE checkpointing so the persisted
             # stopper state covers this step (restore resumes at step+1)

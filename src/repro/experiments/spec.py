@@ -148,6 +148,39 @@ class TransportSpec:
 
 
 @dataclass(frozen=True)
+class ObservabilitySpec:
+    """Span tracing + phase/round metrics for every system in the run.
+
+    When enabled, each system gets its own
+    :class:`~repro.observability.Observability` bundle: spans from the
+    runner/trainers/transport/scheduler, a metrics registry whose
+    per-phase breakdown lands in the experiment summary, and (under the
+    system's results directory) a Perfetto-loadable ``trace.json`` plus
+    a CRC'd ``spans.jsonl``.  Tracing never feeds back into accounting
+    or RNG — fault-free histories stay byte-identical with it on or off.
+
+    ``profile=True`` additionally couples spans to
+    ``jax.profiler.TraceAnnotation`` (see
+    :mod:`repro.observability.profiling`; the ``--profile`` CLI flag
+    wraps the whole run in ``jax.profiler.trace``).
+    """
+
+    enabled: bool = True
+    trace_json: bool = True      # export Chrome trace-event JSON
+    span_log: bool = True        # export CRC'd span JSONL
+    scheduler_events: bool = True  # ingest fleet-trace heap events
+    max_events: int = 250_000    # per-system event cap (then dropped+counted)
+    profile: bool = False        # couple spans to jax.profiler annotations
+
+    def validate(self) -> list:
+        problems = []
+        if self.max_events < 1:
+            problems.append(
+                f"observability.max_events={self.max_events} < 1")
+        return problems
+
+
+@dataclass(frozen=True)
 class ExperimentSpec:
     """One declarative experiment: systems x (model, data, trace, budgets).
 
@@ -180,6 +213,8 @@ class ExperimentSpec:
     # accounting, byte-identical histories)
     transport: Optional[TransportSpec] = None
     faults: Optional[FaultSpec] = None
+    # span tracing + metrics (optional; None = disabled, zero overhead)
+    observability: Optional[ObservabilitySpec] = None
 
     # ------------------------------------------------------------------
     def to_dict(self) -> dict:
@@ -248,6 +283,8 @@ class ExperimentSpec:
             problems.extend(self.transport.validate())
         if self.faults is not None:
             problems.extend(self.faults.validate())
+        if self.observability is not None:
+            problems.extend(self.observability.validate())
         if self.fleet is not None and \
                 not 0.0 < self.fleet.quorum_frac <= 1.0:
             problems.append(

@@ -58,6 +58,7 @@ class SystemContext:
     trainer: Any = None            # reuse a live trainer (legacy shims)
     transport: Any = None          # InProcessTransport (None = analytic)
     quorum_frac: float = 1.0       # verified-upload fraction closing a round
+    obs: Any = None                # Observability bundle (None = NULL_OBS)
 
     @property
     def seq_len(self) -> int:
@@ -155,13 +156,13 @@ class AmpereSystem(System):
 
     def _trainer(self, ctx: SystemContext):
         from repro.core.uit import AmpereTrainer
-        if ctx.trainer is not None:
-            return ctx.trainer
-        return AmpereTrainer(ctx.model, ctx.run_cfg, ctx.clients,
-                             ctx.eval_data, workdir=ctx.workdir,
-                             patience=ctx.patience, log_echo=ctx.log_echo,
-                             transport=ctx.transport,
-                             quorum_frac=ctx.quorum_frac)
+        if ctx.trainer is None:
+            ctx.trainer = AmpereTrainer(
+                ctx.model, ctx.run_cfg, ctx.clients, ctx.eval_data,
+                workdir=ctx.workdir, patience=ctx.patience,
+                log_echo=ctx.log_echo, transport=ctx.transport,
+                quorum_frac=ctx.quorum_frac, obs=ctx.obs)
+        return ctx.trainer
 
     def init_state(self, ctx: SystemContext, key):
         tr = self._trainer(ctx)
@@ -236,7 +237,13 @@ def fedbuff_schedule(ctx: SystemContext, rounds: int):
             fcfg, async_buffer_size=max(2, fcfg.init_cohort // 2))
     lat = make_latency_fn(ctx.model, ctx.run_cfg, algo="ampere",
                           seq_len=ctx.seq_len)
-    return FleetScheduler(ctx.population, lat, fcfg).simulate(rounds)
+    trace = FleetScheduler(ctx.population, lat, fcfg).simulate(rounds)
+    if ctx.obs is not None and getattr(ctx.obs, "enabled", False):
+        # the derived buffered schedule gets its own scheduler subtrack
+        # (the shared sync trace was already ingested by run_experiment)
+        ctx.obs.tracer.ingest_fleet_trace(trace, track="scheduler/async",
+                                          events=False)
+    return trace
 
 
 @register_system("fedbuff")
@@ -248,13 +255,13 @@ class FedBuffSystem(AmpereSystem):
 
     def _trainer(self, ctx: SystemContext):
         from repro.core.baselines import FedBuffTrainer
-        if ctx.trainer is not None:
-            return ctx.trainer
-        return FedBuffTrainer(ctx.model, ctx.run_cfg, ctx.clients,
-                              ctx.eval_data, workdir=ctx.workdir,
-                              patience=ctx.patience, log_echo=ctx.log_echo,
-                              transport=ctx.transport,
-                              quorum_frac=ctx.quorum_frac)
+        if ctx.trainer is None:
+            ctx.trainer = FedBuffTrainer(
+                ctx.model, ctx.run_cfg, ctx.clients, ctx.eval_data,
+                workdir=ctx.workdir, patience=ctx.patience,
+                log_echo=ctx.log_echo, transport=ctx.transport,
+                quorum_frac=ctx.quorum_frac, obs=ctx.obs)
+        return ctx.trainer
 
     def _device_phase(self, tr, ctx: SystemContext, dev_state):
         rounds = ctx.max_rounds if ctx.max_rounds is not None \
@@ -272,13 +279,14 @@ class SFLSystem(System):
 
     def _trainer(self, ctx: SystemContext):
         from repro.core.baselines import SFLTrainer
-        if ctx.trainer is not None:
-            return ctx.trainer
-        return SFLTrainer(ctx.model, ctx.run_cfg, ctx.clients,
-                          ctx.eval_data, variant=self.variant,
-                          workdir=ctx.workdir, patience=ctx.patience,
-                          log_echo=ctx.log_echo, transport=ctx.transport,
-                          quorum_frac=ctx.quorum_frac)
+        if ctx.trainer is None:
+            ctx.trainer = SFLTrainer(
+                ctx.model, ctx.run_cfg, ctx.clients, ctx.eval_data,
+                variant=self.variant, workdir=ctx.workdir,
+                patience=ctx.patience, log_echo=ctx.log_echo,
+                transport=ctx.transport, quorum_frac=ctx.quorum_frac,
+                obs=ctx.obs)
+        return ctx.trainer
 
     def init_state(self, ctx: SystemContext, key):
         return self._trainer(ctx)._init_state(key)
@@ -333,13 +341,13 @@ class FedAvgSystem(System):
 
     def _trainer(self, ctx: SystemContext):
         from repro.core.baselines import FedAvgTrainer
-        if ctx.trainer is not None:
-            return ctx.trainer
-        return FedAvgTrainer(ctx.model, ctx.run_cfg, ctx.clients,
-                             ctx.eval_data, workdir=ctx.workdir,
-                             patience=ctx.patience, log_echo=ctx.log_echo,
-                             transport=ctx.transport,
-                             quorum_frac=ctx.quorum_frac)
+        if ctx.trainer is None:
+            ctx.trainer = FedAvgTrainer(
+                ctx.model, ctx.run_cfg, ctx.clients, ctx.eval_data,
+                workdir=ctx.workdir, patience=ctx.patience,
+                log_echo=ctx.log_echo, transport=ctx.transport,
+                quorum_frac=ctx.quorum_frac, obs=ctx.obs)
+        return ctx.trainer
 
     def init_state(self, ctx: SystemContext, key):
         return ctx.model.init(key)

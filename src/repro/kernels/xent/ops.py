@@ -132,7 +132,10 @@ def cross_entropy(hidden, w, labels, mask=None, *, softcap: float = 0.0,
         return cross_entropy_ref(hidden, w, labels, mask, softcap)
     if impl == "pallas":
         from repro.kernels.xent.kernel import fused_xent_pallas
-        per_token = fused_xent_pallas(hidden, w, labels, softcap=softcap)
+        from repro.observability.profiling import annotate
+        with annotate("fused_xent_pallas"):   # host dispatch (--profile)
+            per_token = fused_xent_pallas(hidden, w, labels,
+                                          softcap=softcap)
     elif impl == "sharded":
         per_token = _sharded_per_token(hidden, w, labels, softcap)
     else:

@@ -33,6 +33,7 @@ import dataclasses
 import math
 from typing import Dict, List, Optional
 
+from repro.observability import NULL_OBS
 from repro.transport.faults import FaultPlan
 from repro.transport.framing import (CorruptFrame, Frame, TruncatedFrame,
                                      decode_frame, encode_frame, flip_bit)
@@ -74,21 +75,38 @@ class InProcessTransport:
 
     def __init__(self, fault_plan: Optional[FaultPlan] = None,
                  retry: Optional[RetryPolicy] = None,
-                 default_bandwidth_bps: float = DEFAULT_BANDWIDTH_BPS):
+                 default_bandwidth_bps: float = DEFAULT_BANDWIDTH_BPS,
+                 obs=None):
         self.fault_plan = fault_plan
         self.retry = retry or RetryPolicy()
         self.default_bandwidth_bps = float(default_bandwidth_bps)
+        self.obs = obs if obs is not None else NULL_OBS
         self._delivered: set = set()
         self.stats = _new_stats()
+        self._mark = _new_stats()
 
     @property
     def faulty(self) -> bool:
         return self.fault_plan is not None and self.fault_plan.active
 
     # ------------------------------------------------------------------
+    def delta_stats(self) -> Dict[str, float]:
+        """Stats accumulated since the previous call (reset-and-emit).
+
+        The cumulative :attr:`stats` dict is untouched (the experiment
+        summary reads it at end of run); only the internal mark moves.
+        Zero entries are omitted so per-round log lines stay short.
+        """
+        delta = {k: self.stats[k] - self._mark[k] for k in self.stats}
+        self._mark = dict(self.stats)
+        return {k: (round(v, 9) if isinstance(v, float) else v)
+                for k, v in delta.items() if v}
+
+    # ------------------------------------------------------------------
     def transfer(self, key: str, nbytes: int, *, device: int = -1,
                  bandwidth_bps: Optional[float] = None,
-                 payload: Optional[bytes] = None) -> TransferResult:
+                 payload: Optional[bytes] = None,
+                 phase: Optional[str] = None) -> TransferResult:
         """Move ``nbytes`` from/to ``device`` under the fault plan.
 
         ``key`` is the message's idempotency key — it must be stable
@@ -96,8 +114,36 @@ class InProcessTransport:
         logical step, and unique across distinct messages.  With
         ``payload`` given, an injected corruption is exercised through
         the real CRC framing codec instead of being assumed detected.
+        ``phase`` attributes the message's span/metrics to a pipeline
+        phase (observability only — never affects accounting).
         """
-        nbytes = int(nbytes)
+        obs = self.obs
+        if not obs.enabled:
+            return self._transfer(key, int(nbytes), device, bandwidth_bps,
+                                  payload, None)
+        ph = phase or "transport"
+        with obs.tracer.span("xfer", track="transport", key=key,
+                             device=device, nbytes=int(nbytes),
+                             phase=ph) as sp:
+            res = self._transfer(key, int(nbytes), device, bandwidth_bps,
+                                 payload, sp)
+            sp.set(ok=res.ok, attempts=res.attempts,
+                   wire_bytes=res.wire_bytes,
+                   extra_s=round(res.extra_time, 9),
+                   first=res.first_delivery)
+        m = obs.metrics
+        m.counter("transport_sends", 1, phase=ph)
+        m.counter("transport_wire_bytes", res.wire_bytes, phase=ph)
+        if res.attempts > 1:
+            m.counter("retries", res.attempts - 1, phase=ph)
+        if not res.ok:
+            m.counter("transport_failures", 1, phase=ph)
+        if res.extra_time:
+            m.observe("transfer_extra_s", res.extra_time, phase=ph)
+        return res
+
+    def _transfer(self, key: str, nbytes: int, device,
+                  bandwidth_bps, payload, sp) -> TransferResult:
         self.stats["sends"] += 1
         if not self.faulty:
             first = key not in self._delivered
@@ -110,12 +156,16 @@ class InProcessTransport:
         plan = self.fault_plan
         wire = 0
         total_t = 0.0
+        backoff_t = 0.0
+        verdicts = [] if sp is not None else None
         ok = False
         attempt = 0
         for attempt in range(1, self.retry.max_attempts + 1):
             if attempt > 1:
-                total_t += self.retry.backoff_s(
+                b = self.retry.backoff_s(
                     attempt - 1, plan.backoff_jitter(key, attempt))
+                total_t += b
+                backoff_t += b
                 self.stats["retries"] += 1
             d = plan.decide(key, attempt, device)
             if d.reset_frac is not None:
@@ -125,6 +175,8 @@ class InProcessTransport:
                 wire += moved
                 total_t += moved / bw
                 self.stats["resets"] += 1
+                if verdicts is not None:
+                    verdicts.append("reset")
                 continue
             if d.drop:
                 # the frame left the sender and vanished; the loss is
@@ -132,6 +184,8 @@ class InProcessTransport:
                 wire += nbytes
                 total_t += nbytes / bw + self.retry.attempt_timeout_s
                 self.stats["drops"] += 1
+                if verdicts is not None:
+                    verdicts.append("drop")
                 continue
             if d.corrupt:
                 # arrived, but the receiver's CRC rejects it
@@ -148,6 +202,8 @@ class InProcessTransport:
                 wire += nbytes
                 total_t += nbytes / bw
                 self.stats["corruptions"] += 1
+                if verdicts is not None:
+                    verdicts.append("corrupt")
                 continue
             # delivered (possibly late, possibly twice)
             mult = 2 if d.duplicate else 1
@@ -157,6 +213,9 @@ class InProcessTransport:
                 self.stats["duplicates"] += 1
             if d.delay_s:
                 self.stats["spikes"] += 1
+            if verdicts is not None:
+                verdicts.append("dup" if d.duplicate else
+                                ("spike" if d.delay_s else "delivered"))
             ok = True
             break
 
@@ -172,6 +231,8 @@ class InProcessTransport:
             self.stats["failures"] += 1
         self.stats["wire_bytes"] += wire
         self.stats["extra_time"] += extra
+        if sp is not None:
+            sp.set(verdicts=verdicts, backoff_s=round(backoff_t, 9))
         return TransferResult(ok, wire, extra, attempt, first)
 
 
@@ -182,7 +243,8 @@ class InProcessTransport:
 
 def cohort_exchange(transport: Optional[InProcessTransport], *,
                     round_key: str, clients, one_way_bytes: int,
-                    quorum_frac: float = 1.0, bandwidth_bps=None):
+                    quorum_frac: float = 1.0, bandwidth_bps=None,
+                    phase: Optional[str] = None):
     """One round's per-client down+up model exchange over ``transport``.
 
     Returns ``(kept_indices, wire_bytes, extra_time, excluded_ids)``.
@@ -213,15 +275,18 @@ def cohort_exchange(transport: Optional[InProcessTransport], *,
         bw = (bandwidth_bps.get(cid) if isinstance(bandwidth_bps, dict)
               else bandwidth_bps)
         down = transport.transfer(f"{round_key}/down/{cid}", one_way_bytes,
-                                  device=cid, bandwidth_bps=bw)
+                                  device=cid, bandwidth_bps=bw, phase=phase)
         up = transport.transfer(f"{round_key}/up/{cid}", one_way_bytes,
-                                device=cid, bandwidth_bps=bw)
+                                device=cid, bandwidth_bps=bw, phase=phase)
         wire += down.wire_bytes + up.wire_bytes
         extra = max(extra, down.extra_time + up.extra_time)
         if down.ok and up.ok:
             kept.append(i)
         else:
             excluded.append(cid)
+            transport.obs.tracer.instant(
+                "excluded", track="transport", device=cid,
+                round_key=round_key, phase=phase or "transport")
     need = required_quorum(len(ids), quorum_frac)
     if len(kept) < need:
         raise QuorumError(
