@@ -31,4 +31,20 @@ python scripts/run_experiment.py examples/specs/chaos_smoke.json \
 python scripts/trace_report.py "$CHAOS_DIR" --validate --require-retries \
     --out "$CHAOS_DIR/report.md"
 rm -rf "$CHAOS_DIR"
+# streaming smoke: same chaos fault plan, but the activation upload goes
+# through the memmap ring (CRC-committed segments, torn writes repaired,
+# watermark backpressure) and server epochs overlap the device round —
+# the summary's phase table must report nonzero overlapped seconds.
+STREAM_DIR=$(mktemp -d)
+python scripts/run_experiment.py examples/specs/streaming_smoke.json \
+    --results-dir "$STREAM_DIR"
+python - "$STREAM_DIR" <<'PY'
+import json, sys
+summary = json.load(open(f"{sys.argv[1]}/summary.json"))["summary"]["ampere"]
+rows = {r["phase"]: r for r in summary["phases"]}
+overlap = rows.get("server", {}).get("overlap_s", 0.0)
+assert overlap > 0.0, f"streaming smoke: no server/device overlap: {rows}"
+print(f"streaming smoke OK: overlap_s={overlap}")
+PY
+rm -rf "$STREAM_DIR"
 python -m benchmarks.run --gate

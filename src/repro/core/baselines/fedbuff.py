@@ -18,11 +18,15 @@ consolidation, centralized server training) are inherited unchanged, so
 ``fedbuff`` results are directly comparable with every other system in
 the registry.
 
-Crash-resume: the loop-carried state is a *ring* of recent global-model
-versions (still-in-flight clients reference stale snapshots), keyed by
-version number and pruned to the trace's maximum staleness.  The ring is
-what the shared :class:`~repro.experiments.runner.Runner` checkpoints,
-and batch indices are stateless in (seed, round, slot, client)
+Crash-resume: the loop-carried state is a
+:class:`~repro.streaming.VersionRing` of recent global-model versions
+(still-in-flight clients reference stale snapshots) — the streaming
+subsystem's aggregation boundary: buffered completions *append* a new
+version, staleness is read off the ring, and slots older than the
+trace's maximum staleness are pruned.  The ring's
+``state_dict()`` (the PR 4 ``{str(version): state}`` tree) is what the
+shared :class:`~repro.experiments.runner.Runner` checkpoints, and batch
+indices are stateless in (seed, round, slot, client)
 (:meth:`repro.fleet.FleetEngine.buffered_round_indices`), so a resumed
 coordinator replays byte-identical aggregations.
 """
@@ -36,6 +40,7 @@ import jax.numpy as jnp
 
 from repro.core.uit import AmpereTrainer
 from repro.experiments.runner import StepOutcome
+from repro.streaming.versions import VersionRing
 
 
 class FedBuffTrainer(AmpereTrainer):
@@ -92,15 +97,16 @@ class FedBuffTrainer(AmpereTrainer):
             if excluded:    # quorum-degraded buffer: reweight the survivors
                 total = sum(weights)
                 weights = [w / total for w in weights]
-            cur = ring[str(rnd)]
-            snaps = engine.stack_states(
-                [ring[str(rnd - s)] for s in staleness])
+            # the ring IS the aggregation boundary: buffered completions
+            # reference stale snapshots off it, the aggregate appends the
+            # next version, and the prune keeps exactly the reachable set
+            vring = VersionRing.from_state_dict(ring, s_max=s_max)
+            cur = vring.get(rnd)
+            snaps = engine.stack_states(vring.snapshots(rnd, staleness))
             new, metrics = engine.run_buffered_round(
                 cur, snaps, rnd, clients, weights, self._sched(rnd))
-            ring = dict(ring)
-            ring[str(rnd + 1)] = new
-            for k in [k for k in ring if int(k) < rnd + 1 - s_max]:
-                del ring[k]
+            vring.append(rnd + 1, new)
+            ring = vring.state_dict()
             val = aux_eval(new)
             log = {"dropped": len(plan.dropped),
                    "sim_t": round(plan.t_end, 6)}
@@ -128,4 +134,4 @@ class FedBuffTrainer(AmpereTrainer):
             ((p.round_idx, p) for p in plans if p.round_idx >= start_round),
             body, history_key="device", monitor="val_loss",
             checkpoint_every=self.run.checkpoint_every)
-        return ring[str(max(int(k) for k in ring))]
+        return VersionRing.from_state_dict(ring, s_max=s_max).latest()

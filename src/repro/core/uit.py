@@ -380,6 +380,35 @@ class AmpereTrainer:
         failed: set = set()
         counters: dict = {}
         pending: dict = {}
+        # streaming store: each produced shard carries its simulated
+        # arrival time so the server learner can price epoch overlap.
+        # Serial pricing: cumulative stored bytes through the shared
+        # link + fault-retry extras so far (the last arrival lands at
+        # exactly t_up + extra_total, the transfer's accounted end).
+        # Parallel pricing: each client's cumulative bytes on its own
+        # link + its own extras.
+        streams = hasattr(store, "sample_arrivals")
+        bytes_cum: dict = {None: 0}
+
+        def arrival(cid, nbytes):
+            if upload == "parallel":
+                bytes_cum[cid] = bytes_cum.get(cid, 0) + nbytes
+                bw_c = (client_bandwidth_bps.get(cid,
+                                                 comm_model.BANDWIDTH_BPS)
+                        if client_bandwidth_bps is not None
+                        else comm_model.BANDWIDTH_BPS)
+                return (bytes_cum[cid] / bw_c
+                        + client_extra.get(cid, 0.0))
+            bytes_cum[None] += nbytes
+            return (bytes_cum[None] / comm_model.BANDWIDTH_BPS
+                    + sum(client_extra.values()))
+
+        def submit(cid, shard, t_arr):
+            if streams:
+                store.submit(cid, shard, t_arrival=t_arr)
+            else:
+                store.submit(cid, shard)
+
         store.start_writer()
         # double-buffered upload: batch k+1 transfers while k computes
         for (cid, labels), inp in DevicePrefetcher(host_batches()):
@@ -407,17 +436,21 @@ class AmpereTrainer:
                     continue
                 if not res.first_delivery:
                     continue    # duplicate absorbed by the idempotency key
+            t_arr = 0.0
+            if streams:
+                t_arr = arrival(cid, ActivationStore.shard_nbytes(
+                    shard, store.quantize))
             if faulty:
                 # hold shards back until the whole client verifies, so a
                 # device that perma-fails mid-stream never half-lands
-                pending.setdefault(cid, []).append(shard)
+                pending.setdefault(cid, []).append((shard, t_arr))
             else:
-                store.submit(cid, shard)
+                submit(cid, shard, t_arr)
         for cid, shards in pending.items():
             if cid in failed:
                 continue
-            for shard in shards:
-                store.submit(cid, shard)
+            for shard, t_arr in shards:
+                submit(cid, shard, t_arr)
         store.finish()
         if faulty and failed:
             survivors = len(self.clients) - len(failed)
@@ -448,6 +481,9 @@ class AmpereTrainer:
             extra_total = (max(client_extra.values())
                            if upload == "parallel"
                            else sum(client_extra.values()))
+        # the transfer's accounted end: the overlap accountant seeds its
+        # frontier here so streamed server epochs never double-charge
+        self._transfer_sim_s = t_up + extra_total
         # fault-free transport moves exactly the stored bytes, so this
         # stays byte-identical to the legacy analytic accounting
         self.runner.account(
@@ -460,6 +496,18 @@ class AmpereTrainer:
                                      phase="transfer")
         sp.set(bytes=store.bytes_received, sim_time_s=round(t_up, 9),
                excluded=len(failed))
+        if streams:
+            rs = store.ring.stats
+            sp.set(streaming=True, ring_segments=rs["segments"],
+                   ring_stalls=rs["stalls"],
+                   ring_max_occupancy=rs["max_occupancy"])
+            if self.obs.enabled:
+                self.obs.metrics.counter("ring_backpressure_stalls",
+                                         rs["stalls"], phase="transfer")
+                if rs["torn_repairs"]:
+                    self.obs.metrics.counter("ring_torn_repairs",
+                                             rs["torn_repairs"],
+                                             phase="transfer")
         if faulty:
             self.log.log(phase="transfer", bytes=store.bytes_received,
                          upload=upload, wire=wire_total,
@@ -509,11 +557,41 @@ class AmpereTrainer:
             n_samples=store.num_samples(), seq_len=self._seq_len(),
             sizes=self.sizes)
 
+        # streamed store: epochs start on first-shard-landed and their
+        # accounted sim-time is the pipeline increment past the device
+        # round's frontier instead of the full serialized epoch — the
+        # compute path (same pool, same rng draw, same jitted scan) is
+        # untouched, so records stay byte-identical to the serialized run
+        accountant = None
+        if resident and hasattr(store, "sample_arrivals"):
+            from repro.streaming import OverlapAccountant
+            nb = max(1, store.num_samples() // bs)
+            accountant = OverlapAccountant(
+                store.sample_arrivals(),
+                device_end=getattr(self, "_transfer_sim_s", 0.0),
+                per_batch_s=epoch_sim_time / nb)
+
         def body(srv_state, epoch, _plan):
+            epoch_sim = epoch_sim_time
             if resident:
-                idx = jnp.asarray(store.epoch_indices(bs))
-                srv_state, losses = self._server_epoch(srv_state, pool_dev,
-                                                       idx)
+                idx_np = store.epoch_indices(bs)
+                idx = jnp.asarray(idx_np)
+                if accountant is not None:
+                    with self.obs.tracer.span("stream_consume",
+                                              track="streaming",
+                                              epoch=epoch) as csp:
+                        srv_state, losses = self._server_epoch(
+                            srv_state, pool_dev, idx)
+                        dt, overlapped = accountant.epoch(idx_np)
+                        epoch_sim = dt
+                        csp.set(sim_s=round(dt, 9),
+                                overlap_s=round(overlapped, 9))
+                    if self.obs.enabled:
+                        self.obs.metrics.counter("overlap_s", overlapped,
+                                                 phase="server")
+                else:
+                    srv_state, losses = self._server_epoch(srv_state,
+                                                           pool_dev, idx)
                 ls = np.asarray(losses, np.float64)  # ONE sync per epoch
             else:
                 acc = []
@@ -535,7 +613,7 @@ class AmpereTrainer:
                 state=srv_state,
                 record={"epoch": epoch, "loss": float(np.mean(ls)),
                         "val_loss": val["loss"], "val_acc": val["acc"]},
-                sim_time=epoch_sim_time)
+                sim_time=epoch_sim)
 
         return self.runner.run_phase(
             "server", srv_state,

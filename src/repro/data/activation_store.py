@@ -31,14 +31,16 @@ import numpy as np
 class ActivationStore:
     def __init__(self, directory: Optional[str] = None,
                  consolidated: bool = True, quantize_int8: bool = False,
-                 seed: int = 0):
+                 seed: int = 0, queue_depth: int = 64):
         self.dir = directory
         self.consolidated = consolidated
         self.quantize = quantize_int8
         self.rng = np.random.default_rng(seed)
         self._mem: Dict[int, List[dict]] = {}
         self._lock = threading.Lock()
-        self._q: "queue.Queue" = queue.Queue()
+        # bounded: a producer outrunning the writer blocks on put() —
+        # legacy mode exerts backpressure too, not just the ring store
+        self._q: "queue.Queue" = queue.Queue(maxsize=queue_depth)
         self._writer: Optional[threading.Thread] = None
         self._closed = threading.Event()
         self.bytes_received = 0
@@ -49,9 +51,11 @@ class ActivationStore:
     # Subprocess 1: receive & store
     # ------------------------------------------------------------------
     def start_writer(self):
+        # non-daemon: close()/finish() joins it, so the writer can never
+        # race interpreter teardown mid-.npz-write
         if self._writer is None:
             self._writer = threading.Thread(target=self._writer_loop,
-                                            daemon=True)
+                                            daemon=False)
             self._writer.start()
 
     def _writer_loop(self):
@@ -72,6 +76,10 @@ class ActivationStore:
             self._writer = None
         self._closed.set()
 
+    # close() is the lifecycle name (join the writer, release the store);
+    # finish() remains the Algorithm-1 name for the same transition
+    close = finish
+
     def add(self, client_id: int, shard: dict):
         """Synchronous upload (tests / simple drivers)."""
         self._store(client_id, shard)
@@ -89,10 +97,17 @@ class ActivationStore:
         return nbytes + sum(np.asarray(v).nbytes for k, v in shard.items()
                             if k not in ("acts", "acts_scale"))
 
-    def _store(self, client_id: int, shard: dict):
+    @staticmethod
+    def prepare_shard(shard: dict, quantize: bool):
+        """Normalize one shard for storage: fp32 payload or int8 + scale.
+
+        Returns ``(prepared_shard, stored_nbytes)``; shared by the legacy
+        in-RAM path and the streaming ring so both store byte-identical
+        arrays.
+        """
         shard = dict(shard)
         acts = np.asarray(shard["acts"])
-        if self.quantize:
+        if quantize:
             scale = np.abs(acts).max(axis=-1, keepdims=True) / 127.0
             scale = np.maximum(scale, 1e-12)
             q = np.clip(np.round(acts / scale), -127, 127).astype(np.int8)
@@ -104,6 +119,10 @@ class ActivationStore:
             nbytes = shard["acts"].nbytes
         nbytes += sum(np.asarray(v).nbytes for k, v in shard.items()
                       if k not in ("acts", "acts_scale"))
+        return shard, nbytes
+
+    def _store(self, client_id: int, shard: dict):
+        shard, nbytes = self.prepare_shard(shard, self.quantize)
         assert nbytes == self.shard_nbytes(shard, self.quantize)
         with self._lock:
             self._mem.setdefault(int(client_id), []).append(shard)

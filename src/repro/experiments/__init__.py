@@ -17,15 +17,17 @@ from repro.experiments.api import (build_transport, resolve_setup,
                                    resolve_trace, run_experiment)
 from repro.experiments.runner import Runner, StepOutcome
 from repro.experiments.spec import (DataSpec, ExperimentSpec,
-                                    ObservabilitySpec, TransportSpec,
-                                    dataclass_from_dict, dataclass_to_dict)
+                                    ObservabilitySpec, StreamingSpec,
+                                    TransportSpec, dataclass_from_dict,
+                                    dataclass_to_dict)
 from repro.experiments.systems import (System, SystemContext, get_system,
                                        list_systems, register_system,
                                        replay_plan)
 
 __all__ = [
     "DataSpec", "ExperimentSpec", "ObservabilitySpec", "Runner",
-    "StepOutcome", "System", "SystemContext", "TransportSpec",
+    "StepOutcome", "StreamingSpec", "System", "SystemContext",
+    "TransportSpec",
     "build_transport",
     "dataclass_from_dict", "dataclass_to_dict", "get_system",
     "list_systems", "register_system", "replay_plan", "resolve_setup",

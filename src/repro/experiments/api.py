@@ -178,7 +178,7 @@ def run_experiment(spec: ExperimentSpec, *, log_echo: bool = False,
             transport=transport,
             quorum_frac=(spec.transport.quorum_frac
                          if spec.transport is not None else 1.0),
-            obs=obs)
+            obs=obs, streaming=spec.streaming)
         system = sys_cls()
         system.on_start(ctx)
         try:

@@ -148,6 +148,52 @@ class TransportSpec:
 
 
 @dataclass(frozen=True)
+class StreamingSpec:
+    """Actor/learner streaming: the activation ring between phases 4/5.
+
+    When enabled, Ampere-family systems route the one-shot activation
+    upload through a sharded ring buffer
+    (:class:`~repro.streaming.StreamingActivationStore`): device actors
+    append CRC-committed segments (memmap-backed with ``backend=
+    "memmap"`` and a persisted workdir, else in-RAM bytes), watermark
+    backpressure bounds producer/consumer skew at
+    ``capacity_segments``/``low_watermark``, and server epochs start on
+    first-shard-landed — their accounted ``sim_time`` overlaps the
+    remainder of the device round (``overlap_s`` in the phase table).
+    Histories stay byte-identical to the phase-serialized run except for
+    the ``sim_time`` total, which can only shrink.
+
+    ``drain_chunk``/``interleave_seed`` drive the seeded
+    :class:`~repro.streaming.InterleaveSchedule` so the single-process
+    simulator's producer/consumer interleaving replays exactly.
+    """
+
+    enabled: bool = True
+    backend: str = "memmap"          # falls back to "memory" w/o a workdir
+    capacity_segments: int = 64      # committed-but-unconsumed bound
+    low_watermark: Optional[int] = None   # gate reopen level (None = cap/2)
+    drain_chunk: int = 4             # learner segments per stall (seeded x2)
+    interleave_seed: int = 0
+
+    def validate(self) -> list:
+        problems = []
+        if self.backend not in ("memmap", "memory"):
+            problems.append(f"streaming.backend={self.backend!r} not in "
+                            "('memmap', 'memory')")
+        if self.capacity_segments < 2:
+            problems.append(f"streaming.capacity_segments="
+                            f"{self.capacity_segments} < 2")
+        if self.low_watermark is not None and not \
+                0 <= self.low_watermark < self.capacity_segments:
+            problems.append(
+                f"streaming.low_watermark={self.low_watermark} outside "
+                f"[0, capacity_segments)")
+        if self.drain_chunk < 1:
+            problems.append(f"streaming.drain_chunk={self.drain_chunk} < 1")
+        return problems
+
+
+@dataclass(frozen=True)
 class ObservabilitySpec:
     """Span tracing + phase/round metrics for every system in the run.
 
@@ -215,6 +261,9 @@ class ExperimentSpec:
     faults: Optional[FaultSpec] = None
     # span tracing + metrics (optional; None = disabled, zero overhead)
     observability: Optional[ObservabilitySpec] = None
+    # actor/learner activation streaming (optional; None = the legacy
+    # phase-serialized consolidation store)
+    streaming: Optional[StreamingSpec] = None
 
     # ------------------------------------------------------------------
     def to_dict(self) -> dict:
@@ -285,6 +334,8 @@ class ExperimentSpec:
             problems.extend(self.faults.validate())
         if self.observability is not None:
             problems.extend(self.observability.validate())
+        if self.streaming is not None:
+            problems.extend(self.streaming.validate())
         if self.fleet is not None and \
                 not 0.0 < self.fleet.quorum_frac <= 1.0:
             problems.append(

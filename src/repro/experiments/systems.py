@@ -59,6 +59,7 @@ class SystemContext:
     transport: Any = None          # InProcessTransport (None = analytic)
     quorum_frac: float = 1.0       # verified-upload fraction closing a round
     obs: Any = None                # Observability bundle (None = NULL_OBS)
+    streaming: Any = None          # StreamingSpec (None = serialized store)
 
     @property
     def seq_len(self) -> int:
@@ -176,6 +177,37 @@ class AmpereSystem(System):
                                              ctx.max_rounds)
         return tr.run_device_phase(dev_state, ctx.max_rounds)
 
+    def _make_store(self, tr, ctx: SystemContext):
+        """The consolidation store for phases 4/5: the streaming ring
+        when the spec opts in, else the legacy phase-serialized store.
+        A memmap ring needs a persisted workdir to stream from disk;
+        without one it degrades to the in-RAM ring backend (identical
+        history — the backends decode the same serialized bytes)."""
+        sp = ctx.streaming
+        if sp is not None and sp.enabled:
+            from repro.streaming import StreamingActivationStore
+
+            ring_dir = (os.path.join(tr.workdir, "ring")
+                        if tr.workdir else None)
+            backend = sp.backend if (sp.backend != "memmap"
+                                     or ring_dir) else "memory"
+            return StreamingActivationStore(
+                directory=ring_dir, consolidated=tr.consolidate,
+                quantize_int8=tr.run.split.quantize_activations,
+                seed=tr.run.seed, capacity_segments=sp.capacity_segments,
+                low_watermark=sp.low_watermark, backend=backend,
+                drain_chunk=sp.drain_chunk,
+                interleave_seed=sp.interleave_seed,
+                fault_plan=(ctx.transport.fault_plan
+                            if ctx.transport is not None else None),
+                obs=tr.obs)
+        return ActivationStore(
+            directory=(os.path.join(tr.workdir, "acts")
+                       if tr.workdir else None),
+            consolidated=tr.consolidate,
+            quantize_int8=tr.run.split.quantize_activations,
+            seed=tr.run.seed)
+
     def run(self, ctx: SystemContext) -> dict:
         from repro.core import splitting
 
@@ -185,12 +217,7 @@ class AmpereSystem(System):
         dev, srv, aux = tr._init_states(key)
         dev_state = {"device": dev, "aux": aux}
         dev_state = self._device_phase(tr, ctx, dev_state)
-        store = ctx.store or ActivationStore(
-            directory=(os.path.join(tr.workdir, "acts")
-                       if tr.workdir else None),
-            consolidated=tr.consolidate,
-            quantize_int8=tr.run.split.quantize_activations,
-            seed=tr.run.seed)
+        store = ctx.store or self._make_store(tr, ctx)
         bw = None
         if ctx.population is not None:
             bw = {p.device_id: p.bandwidth_bps for p in ctx.population}

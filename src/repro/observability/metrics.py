@@ -116,7 +116,7 @@ class MetricsRegistry:
             return phases.setdefault(phase, {
                 "phase": phase, "steps": 0, "bytes_up": 0, "bytes_down": 0,
                 "bytes_total": 0, "wall_s": 0.0, "sim_s": 0.0,
-                "retries": 0, "excluded": 0})
+                "overlap_s": 0.0, "retries": 0, "excluded": 0})
 
         for key, v in self.counters.items():
             name, lab = parse_metric_key(key)
@@ -140,6 +140,9 @@ class MetricsRegistry:
                 # transport_failures deliberately not folded in: one
                 # excluded device can be several failed messages
                 r["excluded"] += int(v)
+            elif name == "overlap_s":
+                # streamed server seconds hidden behind the device round
+                r["overlap_s"] += float(v)
         for key, h in self.hists.items():
             name, lab = parse_metric_key(key)
             phase = lab.get("phase")
@@ -154,6 +157,7 @@ class MetricsRegistry:
                 r["bytes_total"] = r["bytes_up"] + r["bytes_down"]
             r["wall_s"] = round(r["wall_s"], 6)
             r["sim_s"] = round(r["sim_s"], 9)
+            r["overlap_s"] = round(r["overlap_s"], 9)
         return [phases[p] for p in sorted(phases)]
 
 
@@ -165,7 +169,7 @@ def format_phase_table(rows: List[dict], *, title: str = "") -> str:
     if not rows:
         return "(no per-phase metrics)"
     cols = ["phase", "steps", "bytes_down", "bytes_up", "bytes_total",
-            "wall_s", "sim_s", "retries", "excluded"]
+            "wall_s", "sim_s", "overlap_s", "retries", "excluded"]
     out = []
     if title:
         out.append(f"### {title}")

@@ -1,0 +1,26 @@
+"""Streaming actor/learner subsystem.
+
+Device actors append activation shards into a sharded, memmap-backed
+ring buffer with CRC-committed segments and watermark backpressure
+(:mod:`~repro.streaming.ring`); the server learner consumes them as they
+commit through a ring-backed :class:`StreamingActivationStore`, with
+server epochs overlapping the device round in accounted sim-time
+(:mod:`~repro.streaming.overlap`).  :class:`VersionRing` rehomes the
+FedBuff aggregation boundary onto the same ring idiom.
+
+See ``src/repro/streaming/README.md`` for the segment layout, the
+watermark policy, and the overlap accounting model.
+"""
+
+from repro.streaming.overlap import InterleaveSchedule, OverlapAccountant
+from repro.streaming.ring import (ActivationRing, RingClosed,
+                                  SegmentPrefetcher, TornSegment,
+                                  decode_shard, encode_shard)
+from repro.streaming.store import StreamingActivationStore
+from repro.streaming.versions import VersionRing
+
+__all__ = [
+    "ActivationRing", "InterleaveSchedule", "OverlapAccountant",
+    "RingClosed", "SegmentPrefetcher", "StreamingActivationStore",
+    "TornSegment", "VersionRing", "decode_shard", "encode_shard",
+]

@@ -1,0 +1,106 @@
+"""Overlap accounting: server epochs pipelined against the device round.
+
+The legacy accounting serializes phase 4 and phase 5: the one-shot
+transfer charges ``t_up + extra`` and then every server epoch charges
+its full analytic ``epoch_sim_time`` — total
+``t_up + extra + E * epoch_sim_time``.  Streaming mode keeps the exact
+same compute (same pool bytes, same rng draws, same jitted epoch) but
+prices the server phase as a pipeline against per-shard *arrival* times
+recorded by the ring:
+
+* the ``k``-th batch of an epoch is **ready** once ``(k+1) * bs``
+  samples have *landed* (the streaming learner consumes in arrival
+  order — the replayed full-pool permutation relabels which landed
+  samples fill which batch without changing batch count or throughput,
+  which is why the compute can stay byte-identical while the first
+  epoch starts on first-shard-landed);
+* the learner serves batches back-to-back at ``per_batch_s``
+  (= ``epoch_sim_time / batches_per_epoch``), its cursor ``t`` advancing
+  ``t = max(t, ready) + per_batch_s``;
+* epoch ``e`` ends at ``T_e``; the *accounted* sim-time for the epoch is
+  ``dt_e = max(0, T_e - C_{e-1})`` against the accounted frontier
+  ``C_e = max(C_{e-1}, T_e)``, seeded with ``C_0 = t_up + extra`` (the
+  transfer charge already in the history);
+* the per-epoch **overlap** is ``epoch_sim_time - dt_e`` — the seconds
+  of server training hidden behind the still-running device round.
+
+Total accounted time is ``max(T_E, t_up + extra)``: never more than the
+serialized total, equal to it only when nothing overlaps.  Arrivals are
+clamped to the transfer's accounted end so parallel-upload pricing
+(max-over-links) can never push an arrival past the frontier the history
+already charged.
+
+:class:`InterleaveSchedule` is the determinism half: under backpressure
+the single-process simulator must decide how many segments the learner
+drains before the producer retries — a seeded draw makes occupancy and
+stall statistics replay exactly.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class InterleaveSchedule:
+    """Seeded producer/consumer interleaving for the simulator.
+
+    ``next_drain()`` returns how many ring segments the learner drains
+    at the next backpressure stall — uniform in ``[1, 2 * drain_chunk]``
+    from a private rng, so the interleaving (and every occupancy/stall
+    stat downstream of it) is a pure function of the seed.
+    """
+
+    def __init__(self, seed: int = 0, drain_chunk: int = 4):
+        if drain_chunk < 1:
+            raise ValueError(f"drain_chunk={drain_chunk} < 1")
+        self.drain_chunk = int(drain_chunk)
+        self._rng = np.random.default_rng(int(seed))
+
+    def next_drain(self) -> int:
+        return int(self._rng.integers(1, 2 * self.drain_chunk + 1))
+
+
+class OverlapAccountant:
+    """Pipelined sim-time for server epochs over streamed arrivals."""
+
+    def __init__(self, sample_arrivals: np.ndarray, device_end: float,
+                 per_batch_s: float):
+        arr = np.sort(np.asarray(sample_arrivals, np.float64))
+        # the transfer already charged [0, device_end]; arrivals beyond
+        # it would double-charge time the history has accounted
+        self.arrivals = np.minimum(arr, float(device_end)) if arr.size \
+            else arr
+        self.device_end = float(device_end)
+        self.per_batch_s = float(per_batch_s)
+        self._t = 0.0                   # learner cursor
+        self._frontier = float(device_end)   # accounted sim-time frontier
+
+    def epoch(self, idx: np.ndarray):
+        """Serve one epoch of gathered batches ``idx`` (nb, bs).
+
+        Returns ``(dt, overlapped)``: the sim-seconds to account for
+        this epoch and the seconds of it hidden behind the device round
+        (``dt + overlapped == nb * per_batch_s`` exactly).
+        """
+        idx = np.asarray(idx)
+        nb = len(idx)
+        bs = idx.shape[1] if idx.ndim == 2 else 1
+        n = self.arrivals.size
+        for k in range(nb):
+            ready = 0.0
+            if n:
+                # capacity constraint: batch k needs (k+1)*bs landed
+                # samples (clamped — the epoch's last batch may drop a
+                # trailing remainder, never needing more than n)
+                ready = float(self.arrivals[min((k + 1) * bs, n) - 1])
+            self._t = max(self._t, ready) + self.per_batch_s
+        serialized = nb * self.per_batch_s
+        dt = max(0.0, self._t - self._frontier)
+        self._frontier = max(self._frontier, self._t)
+        # float residue can push serialized - dt a few ulp below zero
+        return dt, max(0.0, serialized - dt)
+
+    @property
+    def total_s(self) -> float:
+        """Accounted end-to-end frontier: ``max(T_E, device_end)``."""
+        return self._frontier

@@ -1,0 +1,322 @@
+"""Streaming actor/learner subsystem: ring segment integrity (CRC
+commit, torn-write repair), watermark backpressure under a slow
+consumer, memmap/in-memory backend parity, streaming-vs-serialized
+history parity with overlap in ``sim_time``, the capacity-model overlap
+accountant, FedBuff's :class:`VersionRing` matching the PR 4
+ring-of-versions semantics, and the legacy store's writer lifecycle."""
+
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig, OptimConfig, RunConfig
+from repro.data.activation_store import ActivationStore
+from repro.experiments import (DataSpec, ExperimentSpec, ObservabilitySpec,
+                               StreamingSpec, run_experiment)
+from repro.streaming import (ActivationRing, InterleaveSchedule,
+                             OverlapAccountant, StreamingActivationStore,
+                             TornSegment, VersionRing, decode_shard,
+                             encode_shard)
+from repro.transport.faults import FaultPlan, FaultSpec
+
+ARCH = "vit-s"
+
+
+def _shard(i, n=4, d=3):
+    rng = np.random.default_rng(i)
+    return {"acts": rng.normal(size=(n, d)).astype(np.float32),
+            "labels": rng.integers(0, 9, (n,)).astype(np.int32)}
+
+
+def _run_cfg():
+    return RunConfig(
+        arch=ARCH,
+        fed=FedConfig(num_clients=6, clients_per_round=3, local_steps=2,
+                      device_batch_size=4, server_batch_size=8,
+                      dirichlet_alpha=0.5),
+        optim=OptimConfig(name="momentum", lr=0.1, schedule="inverse_time",
+                          decay_gamma=0.01))
+
+
+def _spec(**kw):
+    base = dict(name="t", systems=("ampere",), arch=ARCH, run=_run_cfg(),
+                data=DataSpec(train_samples=144, eval_samples=48),
+                max_rounds=2, max_server_epochs=2, patience=50)
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# ring: codec + commit + CRC
+# ---------------------------------------------------------------------------
+
+
+def test_shard_codec_roundtrip_deterministic():
+    sh = _shard(0)
+    buf = encode_shard(sh)
+    assert buf == encode_shard(sh)          # no timestamps, byte-stable
+    back = decode_shard(buf)
+    assert set(back) == set(sh)
+    for k in sh:
+        assert back[k].dtype == sh[k].dtype
+        assert np.array_equal(back[k], sh[k])
+
+
+@pytest.mark.parametrize("backend", ["memory", "memmap"])
+def test_ring_roundtrip_and_metadata(backend, tmp_path):
+    ring = ActivationRing(directory=str(tmp_path / "r"), backend=backend,
+                          capacity_segments=4, low_watermark=2)
+    shards, seq = [], 0
+    for i in range(9):
+        sh = _shard(i)
+        shards.append(sh)
+        while not ring.try_put(i % 3, sh, t_arrival=0.25 * i):
+            ring.read(seq)
+            ring.ack(seq)
+            seq += 1
+    ring.close()
+    for j in range(9):
+        meta, got = ring.read(j)
+        assert meta.client == j % 3
+        assert meta.t_arrival == 0.25 * j
+        assert meta.n_samples == 4
+        for k in shards[j]:
+            assert np.array_equal(got[k], shards[j][k])
+    # capacity was respected and backpressure was exercised
+    assert ring.stats["max_occupancy"] <= 4
+    assert ring.stats["stalls"] > 0
+
+
+def test_ring_torn_write_repaired_and_counted(tmp_path):
+    plan = FaultPlan(FaultSpec(seed=3, torn_write_prob=1.0))
+    ring = ActivationRing(directory=str(tmp_path / "r"), backend="memmap",
+                          capacity_segments=16, fault_plan=plan)
+    for i in range(5):
+        ring.put(0, {"acts": np.full((2, 2), i, np.float32)})
+    # every commit tore once and was rewritten cleanly before the
+    # consumer could observe it
+    assert ring.stats["torn_repairs"] == 5
+    for i in range(5):
+        _, sh = ring.read(i)
+        assert np.all(sh["acts"] == i)
+
+
+def test_ring_rejects_corrupt_segment(tmp_path):
+    ring = ActivationRing(directory=str(tmp_path / "r"), backend="memmap",
+                          capacity_segments=4)
+    ring.put(0, _shard(0))
+    path = ring._seg_path(0)
+    blob = bytearray(open(path, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    open(path, "wb").write(bytes(blob))
+    with pytest.raises(TornSegment):
+        ring._verify(0)
+
+
+def test_ring_backpressure_blocks_and_unblocks_under_slow_consumer():
+    ring = ActivationRing(backend="memory", capacity_segments=3,
+                          low_watermark=1)
+    done = []
+
+    def produce():
+        for i in range(12):
+            ring.put(0, {"acts": np.full((2, 2), i, np.float32)},
+                     timeout=10.0)
+        ring.close()
+        done.append(True)
+
+    t = threading.Thread(target=produce)
+    t.start()
+    time.sleep(0.1)
+    # the producer is 3 ahead at most (gate closed at capacity)
+    assert ring.peek_committed() <= 3
+    seq = 0
+    while ring.next_committed(seq, block=True, timeout=10.0):
+        _, sh = ring.read(seq)
+        assert np.all(sh["acts"] == seq)    # FIFO order preserved
+        ring.ack(seq)
+        seq += 1
+        time.sleep(0.005)                   # slow consumer
+    t.join(timeout=10.0)
+    assert done and seq == 12
+    assert ring.stats["stalls"] > 0
+    assert ring.stats["stall_wait_s"] > 0.0
+    assert ring.stats["max_occupancy"] <= 3
+
+
+# ---------------------------------------------------------------------------
+# streaming store: pool parity with the legacy store
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["memory", "memmap"])
+@pytest.mark.parametrize("quantize", [False, True])
+def test_streaming_store_pool_matches_legacy(backend, quantize, tmp_path):
+    raw = [(c, _shard(10 + k, n=8, d=5)) for k, c in enumerate((0, 1, 0, 2))]
+    legacy = ActivationStore(seed=0, quantize_int8=quantize)
+    for c, s in raw:
+        legacy.add(c, dict(s))
+    legacy.finish()
+    st = StreamingActivationStore(
+        directory=str(tmp_path / "r"), backend=backend, seed=0,
+        quantize_int8=quantize, capacity_segments=2)
+    for k, (c, s) in enumerate(raw):
+        st.submit(c, dict(s), t_arrival=float(k))
+    st.finish()
+    assert st.bytes_received == legacy.bytes_received
+    assert st.num_samples() == legacy.num_samples()
+    assert st.pool_nbytes() == legacy.pool_nbytes()
+    pl, ps = legacy.pool(dequantize=True), st.pool(dequantize=True)
+    for k in pl:
+        assert np.array_equal(pl[k], ps[k])
+    # identically seeded stores draw identical epoch indices (first draw
+    # each — the rng contract the server phase relies on)
+    assert np.array_equal(legacy.epoch_indices(4), st.epoch_indices(4))
+    # arrivals align with pool rows, in submit order
+    arr = st.sample_arrivals()
+    assert arr.shape == (32,)
+    assert np.array_equal(np.unique(arr), [0.0, 1.0, 2.0, 3.0])
+
+
+# ---------------------------------------------------------------------------
+# overlap accounting
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_accountant_capacity_model():
+    acct = OverlapAccountant(np.array([0.5, 1.0, 1.5, 2.0]),
+                             device_end=2.0, per_batch_s=1.0)
+    idx = np.array([[3, 1], [0, 2]])
+    # batch0 needs 2 landed samples (ready 1.0) -> done 2.0; batch1
+    # needs 4 (ready 2.0) -> done 3.0: dt = 3.0 - 2.0, overlap = 1.0
+    dt, ov = acct.epoch(idx)
+    assert (dt, ov) == (1.0, 1.0)
+    # second epoch: everything landed, fully serialized
+    dt, ov = acct.epoch(idx)
+    assert (dt, ov) == (2.0, 0.0)
+    assert acct.total_s == 5.0          # vs 2 + 2*2 = 6 serialized
+
+
+def test_overlap_never_exceeds_serialized_and_clamps_arrivals():
+    rng = np.random.default_rng(0)
+    acct = OverlapAccountant(rng.uniform(0, 10, 64), device_end=5.0,
+                             per_batch_s=0.3)
+    idx = np.arange(64).reshape(8, 8)
+    total_dt = 0.0
+    for _ in range(3):
+        dt, ov = acct.epoch(idx)
+        assert dt >= 0.0 and ov >= 0.0
+        assert dt + ov == pytest.approx(8 * 0.3)
+        total_dt += dt
+    # accounted total = max(learner end, device end) <= serialized total
+    assert acct.total_s == pytest.approx(5.0 + total_dt)
+    assert acct.total_s <= 5.0 + 3 * 8 * 0.3
+
+
+def test_interleave_schedule_is_seed_deterministic():
+    s1 = InterleaveSchedule(seed=4, drain_chunk=3)
+    s2 = InterleaveSchedule(seed=4, drain_chunk=3)
+    a = [s1.next_drain() for _ in range(8)]
+    assert a == [s2.next_drain() for _ in range(8)]
+    assert all(1 <= v <= 6 for v in a)
+    assert a != [InterleaveSchedule(seed=5, drain_chunk=3).next_drain()
+                 for _ in range(8)]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: streaming vs phase-serialized Ampere
+# ---------------------------------------------------------------------------
+
+
+def _canon(history, drop=("sim_time",)):
+    return json.dumps({k: v for k, v in history.items() if k not in drop},
+                      sort_keys=True, default=str)
+
+
+def test_streaming_run_history_identical_sim_time_overlapped():
+    plain = run_experiment(_spec(), write_results=False)
+    stream = run_experiment(
+        _spec(streaming=StreamingSpec(backend="memory")),
+        write_results=False)
+    h0 = plain["results"]["ampere"]["history"]
+    h1 = stream["results"]["ampere"]["history"]
+    # identical records and comm bytes; only the sim-time total moves
+    assert _canon(h0) == _canon(h1)
+    assert h1["sim_time"] < h0["sim_time"]
+
+
+def test_streaming_memmap_and_memory_backends_byte_identical(tmp_path):
+    runs = {}
+    for backend in ("memory", "memmap"):
+        spec = _spec(name=f"b_{backend}", persist=True,
+                     results_dir=str(tmp_path / backend),
+                     streaming=StreamingSpec(backend=backend))
+        runs[backend] = run_experiment(spec, write_results=False)
+    h_mem = runs["memory"]["results"]["ampere"]["history"]
+    h_map = runs["memmap"]["results"]["ampere"]["history"]
+    # FULL identity, sim_time included: the backends decode the same
+    # serialized segment bytes and price the same arrivals
+    assert _canon(h_mem, drop=()) == _canon(h_map, drop=())
+    # and the memmap run actually staged segments on disk
+    ring_dir = tmp_path / "memmap" / "ampere" / "ring"
+    assert sorted(ring_dir.glob("seg_*.bin"))
+
+
+def test_streaming_overlap_lands_in_phase_table():
+    out = run_experiment(
+        _spec(streaming=StreamingSpec(backend="memory"),
+              observability=ObservabilitySpec()),
+        write_results=False)
+    rows = {r["phase"]: r for r in out["summary"]["ampere"]["phases"]}
+    assert rows["server"]["overlap_s"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# FedBuff on the version ring
+# ---------------------------------------------------------------------------
+
+
+def test_version_ring_matches_pr4_semantics():
+    # reference: the PR 4 inline dict discipline
+    s_max = 2
+    ref = {"0": "w0"}
+    vr = VersionRing.from_state_dict(ref, s_max=s_max)
+    for rnd in range(6):
+        staleness = [min(rnd, 1), min(rnd, s_max)]
+        # reference semantics
+        snaps_ref = [ref[str(rnd - s)] for s in staleness]
+        ref[str(rnd + 1)] = f"w{rnd + 1}"
+        for k in [k for k in ref if int(k) < rnd + 1 - s_max]:
+            del ref[k]
+        # ring semantics
+        assert vr.snapshots(rnd, staleness) == snaps_ref
+        assert vr.get(rnd) == f"w{rnd}"
+        vr.append(rnd + 1, f"w{rnd + 1}")
+        assert vr.state_dict() == {k: ref[k] for k in sorted(ref, key=int)}
+    assert vr.latest() == "w6"
+    assert vr.versions() == [4, 5, 6]
+    with pytest.raises(KeyError):
+        vr.get(3)       # pruned: staleness beyond s_max fails loudly
+
+
+# ---------------------------------------------------------------------------
+# legacy store lifecycle (satellite fix)
+# ---------------------------------------------------------------------------
+
+
+def test_activation_store_writer_joins_on_close_and_queue_is_bounded():
+    st = ActivationStore(seed=0, queue_depth=2)
+    assert st._q.maxsize == 2           # legacy mode backpressures too
+    st.start_writer()
+    assert st._writer.daemon is False   # close() joins; no teardown race
+    for i in range(8):
+        st.submit(i % 2, _shard(i))
+    writer = st._writer
+    st.close()                          # == finish(): joins the writer
+    assert st._writer is None
+    assert not writer.is_alive()
+    assert st.num_samples() == 32
+    assert st._closed.is_set()
