@@ -17,6 +17,11 @@ python -m pytest -q -m "not slow"
 if [[ "${CI_SLOW:-0}" == "1" ]]; then
     python -m pytest -q -m slow
 fi
+# static kernel-safety + determinism gate: Pallas alias/alignment/VMEM
+# geometry over the registered config matrix (cached per source hash)
+# plus the replay-determinism lint; fails only on findings not in the
+# committed STATICCHECK_baseline.json (same contract as the bench gate).
+python scripts/staticcheck.py --gate
 # spec validation + system registry smoke over the committed comparison spec
 python scripts/run_experiment.py examples/specs/compare_smoke.json --dry-run
 # seeded chaos smoke: drops/corruption/duplicates/torn writes injected at

@@ -1,0 +1,121 @@
+#!/usr/bin/env python
+"""Static kernel-safety + determinism checks (src/repro/staticcheck).
+
+    scripts/staticcheck.py                    # report all findings
+    scripts/staticcheck.py --gate             # fail on NON-baselined ones
+    scripts/staticcheck.py --format md --out STATICCHECK_report.md
+    scripts/staticcheck.py --write-baseline   # accept current findings
+
+The gate contract matches the bench gate: committed
+``STATICCHECK_baseline.json`` carries accepted findings (each with a
+reason string); only *new* findings fail CI, and stale baseline entries
+are reported so the file never rots.  Kernel tracing is cached per
+config/source hash in ``.staticcheck_cache.json`` (gitignored) —
+``--no-cache`` forces a full re-trace.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+
+
+def main(argv=None) -> int:
+    from repro.staticcheck import (BASELINE_FILE, AnalyzerSettings, Baseline,
+                                   BaselineEntry, format_json,
+                                   format_markdown, format_text,
+                                   run_staticcheck)
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--gate", action="store_true",
+                    help="exit 1 on findings not in the baseline")
+    ap.add_argument("--format", choices=("text", "md", "json"),
+                    default="text")
+    ap.add_argument("--out", help="write the report here instead of stdout")
+    ap.add_argument("--baseline",
+                    default=os.path.join(REPO_ROOT, BASELINE_FILE))
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept all current findings into the baseline "
+                         "(reasons of unchanged entries are preserved; "
+                         "new entries get a TODO reason to fill in)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="re-trace every kernel config")
+    ap.add_argument("--no-kernels", action="store_true",
+                    help="skip the Pallas kernel analyzer")
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the determinism lint")
+    ap.add_argument("--dma-threshold", type=int, default=2,
+                    help="min acceptable aliased revisit distance "
+                         "(default 2 — the tightest schedule the kernels "
+                         "intentionally produce)")
+    args = ap.parse_args(argv)
+
+    settings = AnalyzerSettings(dma_safety_threshold=args.dma_threshold)
+    findings, summaries = run_staticcheck(
+        REPO_ROOT, kernels=not args.no_kernels, lint=not args.no_lint,
+        use_cache=not args.no_cache, settings=settings)
+    baseline = Baseline.load(args.baseline)
+    gate = baseline.check(findings)
+
+    if args.write_baseline:
+        old = {e.fingerprint: e for e in baseline.entries}
+        entries = []
+        for f in findings:
+            prev = old.get(f.fingerprint)
+            entries.append(BaselineEntry(
+                fingerprint=f.fingerprint, rule=f.rule, path=f.path,
+                context=f.context,
+                reason=prev.reason if prev is not None
+                else "TODO: justify this acceptance"))
+        Baseline(entries).save(args.baseline)
+        print(f"wrote {len(entries)} accepted finding(s) to "
+              f"{args.baseline}")
+        return 0
+
+    if args.format == "md":
+        report = format_markdown(findings, gate, summaries)
+    elif args.format == "json":
+        report = format_json(findings, gate)
+    else:
+        report = format_text(findings, gate) if findings else ""
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(report + ("\n" if report and not report.endswith("\n")
+                              else ""))
+    elif report:
+        print(report)
+
+    n_err = sum(1 for f in findings if f.severity == "error")
+    status = {"findings": len(findings), "errors": n_err,
+              "new": len(gate.new), "baselined": len(gate.accepted),
+              "stale_baseline": len(gate.stale)}
+    print(f"staticcheck: {json.dumps(status, sort_keys=True)}",
+          file=sys.stderr)
+
+    if not args.gate:
+        return 0
+    if gate.stale:
+        print(f"staticcheck: WARNING {len(gate.stale)} stale baseline "
+              "entr(ies) — findings no longer present; regenerate with "
+              "--write-baseline", file=sys.stderr)
+    if gate.new:
+        print(f"staticcheck: FAIL — {len(gate.new)} new finding(s) not in "
+              f"{os.path.basename(args.baseline)}:", file=sys.stderr)
+        for f in gate.new:
+            print(f.format(), file=sys.stderr)
+        print("either fix them, waive at the code site "
+              "(# staticcheck: ok=<rule> <reason>), or accept into the "
+              "baseline with --write-baseline + a reason string.",
+              file=sys.stderr)
+        return 1
+    print("staticcheck: gate OK", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

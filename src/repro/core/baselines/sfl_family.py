@@ -19,6 +19,14 @@
   single global SGD step is taken on the shared split model, instead of
   H local steps FedAvg'd at round end.  Same per-iteration exchange
   volume as splitfed.
+* ``splitfed_pa`` — collaborative / parallel-aggregation SplitFed
+  [arXiv:2504.15724]: splitfed's per-iteration split training, but the
+  server folds client *deltas* into the global model on a buffered
+  asynchronous schedule (staleness-weighted, aggregation overlapped with
+  stragglers) instead of barriering the cohort each round.  The round
+  math is :func:`repro.core.aggregation.fedbuff_stacked`; the schedule
+  comes from the fedbuff fleet scheduler priced with splitfed's
+  per-round exchange (see ``SplitFedPASystem``).
 
 Every iteration of these systems exchanges activations + gradients with
 the server — that is precisely the per-iteration traffic Ampere eliminates;
@@ -181,6 +189,32 @@ def make_sfl_round_step(model, run_cfg, variant: str = "splitfed"):
             par, losses_h = jax.lax.scan(one, par, by_iter, length=H)
             return ({"device": par[0], "server": par[1]},
                     {"loss": jnp.mean(losses_h)})
+        return round_step
+
+    if variant == "splitfed_pa":
+        def client_round(par, client_batches, lr):
+            def one(par, batch):
+                loss, grads = jax.value_and_grad(joint_loss)(par, batch)
+                return _SGD(par, grads, lr), loss
+            par, losses_h = jax.lax.scan(one, par, client_batches, length=H)
+            return par, jnp.mean(losses_h)
+
+        def round_step(state, batches, weights, lr):
+            par = (state["device"], state["server"])
+            par_k, loss_k = jax.vmap(client_round, in_axes=(None, 0, None))(
+                par, batches, lr)
+            # Buffered delta fold: in-process replay trains every buffered
+            # client from the current global, so with broadcast snapshots
+            # this reduces to staleness-weighted FedAvg — parameter lag
+            # enters through the plan's 1/sqrt(1+s) weights and the
+            # scheduler's overlapped aggregation intervals.
+            snap_k = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None],
+                                           weights.shape[:1] + x.shape), par)
+            new = aggregation.fedbuff_stacked(par, par_k, snap_k, weights)
+            w = aggregation.normalize_weights(weights)
+            return ({"device": new[0], "server": new[1]},
+                    {"loss": jnp.sum(loss_k * w)})
         return round_step
 
     raise ValueError(f"unknown SFL variant {variant!r}")

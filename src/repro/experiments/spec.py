@@ -29,6 +29,10 @@ from repro.fleet.profiles import FleetConfig
 from repro.transport.faults import FaultSpec
 from repro.transport.retry import RetryPolicy
 
+#: systems that train on a buffered-asynchronous schedule (plans carry
+#: staleness) rather than replaying synchronous cohort rounds
+ASYNC_SYSTEMS = frozenset({"fedbuff", "splitfed_pa"})
+
 
 # ---------------------------------------------------------------------------
 # generic frozen-dataclass <-> JSON-dict codec
@@ -316,12 +320,13 @@ class ExperimentSpec:
             problems.append("max_server_epochs must be >= 1 (or null)")
         if self.run.fed.num_clients < self.run.fed.clients_per_round:
             problems.append("run.fed.num_clients < clients_per_round")
-        if "fedbuff" in self.systems and self.fleet is None and \
+        async_systems = sorted(set(self.systems) & ASYNC_SYSTEMS)
+        if async_systems and self.fleet is None and \
                 self.trace_path is None:
             problems.append(
-                "system 'fedbuff' needs a fleet section (its buffered "
-                "schedule is derived from the device population) or a "
-                "trace_path pointing at an async trace")
+                f"system(s) {async_systems} need a fleet section (their "
+                "buffered schedule is derived from the device population) "
+                "or a trace_path pointing at an async trace")
         if self.fleet is not None and (
                 self.fleet.async_buffer_size < 0
                 or self.fleet.max_staleness < 0
@@ -358,7 +363,8 @@ class ExperimentSpec:
                 trace_async = FleetTrace.peek_is_async(self.trace_path)
             except Exception:
                 trace_async = None   # unreadable; load() will raise loudly
-            sync_systems = [s for s in self.systems if s != "fedbuff"]
+            sync_systems = [s for s in self.systems
+                            if s not in ASYNC_SYSTEMS]
             if trace_async and sync_systems:
                 problems.append(
                     f"trace_path {self.trace_path!r} is a buffered-async "
@@ -366,10 +372,10 @@ class ExperimentSpec:
                     "synchronously — staleness-weighted buffer groups are "
                     "not synchronous cohorts; give the sync systems a sync "
                     "trace (or a fleet section to regenerate one)")
-            if trace_async is False and "fedbuff" in self.systems and \
+            if trace_async is False and async_systems and \
                     self.fleet is None:
                 problems.append(
-                    "system 'fedbuff' with a synchronous trace_path needs "
-                    "a fleet section too — its buffered schedule is "
-                    "derived from the device population")
+                    f"system(s) {async_systems} with a synchronous "
+                    "trace_path need a fleet section too — their buffered "
+                    "schedule is derived from the device population")
         return problems

@@ -234,17 +234,19 @@ class AmpereSystem(System):
                 "merged_params": merged, "history": tr.history}
 
 
-def fedbuff_schedule(ctx: SystemContext, rounds: int):
-    """The buffered-async schedule a fedbuff run trains on.
+def fedbuff_schedule(ctx: SystemContext, rounds: int, *,
+                     algo: str = "ampere"):
+    """The buffered-async schedule a buffered system trains on.
 
     A trace that is already async (plans carry staleness) is replayed
     as-is — the saved-trace path.  Otherwise the schedule is *derived*
     from the same device population the synchronous systems share: the
     spec's fleet config (async knobs filled with defaults when unset)
     drives :meth:`~repro.fleet.FleetScheduler._simulate_async` with
-    Ampere's per-round pricing, so the comparison holds everything but
-    the aggregation discipline fixed.  Deterministic in the spec — a
-    resumed run re-derives the identical schedule.
+    ``algo``'s per-round pricing (Ampere for fedbuff, splitfed for the
+    parallel-aggregation SFL baseline), so the comparison holds
+    everything but the aggregation discipline fixed.  Deterministic in
+    the spec — a resumed run re-derives the identical schedule.
     """
     if ctx.trace is not None and getattr(ctx.trace, "is_async", False):
         return ctx.trace
@@ -262,7 +264,7 @@ def fedbuff_schedule(ctx: SystemContext, rounds: int):
     if fcfg.async_buffer_size <= 0:
         fcfg = dataclasses.replace(
             fcfg, async_buffer_size=max(2, fcfg.init_cohort // 2))
-    lat = make_latency_fn(ctx.model, ctx.run_cfg, algo="ampere",
+    lat = make_latency_fn(ctx.model, ctx.run_cfg, algo=algo,
                           seq_len=ctx.seq_len)
     trace = FleetScheduler(ctx.population, lat, fcfg).simulate(rounds)
     if ctx.obs is not None and getattr(ctx.obs, "enabled", False):
@@ -340,6 +342,31 @@ class SplitFedMBSystem(SFLSystem):
     splitfed."""
 
     variant = "splitfed_mb"
+
+
+@register_system("splitfed_pa")
+class SplitFedPASystem(SFLSystem):
+    """Collaborative / parallel-aggregation SplitFed (arXiv:2504.15724):
+    splitfed's per-iteration activation/gradient exchange, but the
+    server aggregates buffered client deltas asynchronously
+    (staleness-weighted via ``fedbuff_stacked``) instead of barriering
+    the cohort each round.  The buffered schedule is derived by the
+    fedbuff fleet scheduler with *splitfed's* per-round pricing, so
+    splitfed vs splitfed_pa isolates the aggregation discipline."""
+
+    variant = "splitfed_pa"
+
+    def run(self, ctx: SystemContext) -> dict:
+        tr = self._trainer(ctx)
+        rounds = ctx.max_rounds if ctx.max_rounds is not None \
+            else tr.run.fed.device_epochs
+        trace = fedbuff_schedule(ctx, rounds, algo="splitfed")
+        # Async plans' weights already carry the 1/sqrt(1+s) staleness
+        # scaling; round_time is the scheduler's overlapped aggregation
+        # interval, so it is trusted rather than re-priced.
+        plan = [dict(p.as_cohort(), round_time=p.round_time)
+                for p in trace.rounds]
+        return tr.run_rounds(rounds, key=ctx.key, cohort_plan=plan)
 
 
 @register_system("splitfedv2")

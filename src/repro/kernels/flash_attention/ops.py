@@ -39,13 +39,21 @@ def _pad_to(x, axis, mult):
     return jnp.pad(x, widths)
 
 
-def _block_sizes(S, Skv, block_q, block_k):
+def _sublane(dtype) -> int:
+    """Minimum TPU tile rows for a dtype: 8 for 4-byte, 16 for 2-byte,
+    32 for 1-byte element types."""
+    return {4: 8, 2: 16, 1: 32}.get(jnp.dtype(dtype).itemsize, 8)
+
+
+def _block_sizes(S, Skv, block_q, block_k, dtype=jnp.float32):
     """Clamp blocks toward the (possibly short) sequence, rounded up to the
-    8-sublane fp32 tile so odd shapes (e.g. S=20) never produce a
-    lane-misaligned block — ``_pad_to`` absorbs the remainder."""
-    bq = min(block_q, max(8, S))
-    bk = min(block_k, max(8, Skv))
-    return -(-bq // 8) * 8, -(-bk // 8) * 8
+    dtype's sublane tile (8 rows fp32, 16 rows bf16) so odd shapes (e.g.
+    S=20) never produce a misaligned block — ``_pad_to`` absorbs the
+    remainder."""
+    sub = _sublane(dtype)
+    bq = min(block_q, max(sub, S))
+    bk = min(block_k, max(sub, Skv))
+    return -(-bq // sub) * sub, -(-bk // sub) * sub
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
@@ -66,7 +74,7 @@ def _fwd(q, k, v, causal, window, softcap, scale, block_q, block_k):
     qk = jnp.transpose(q, (0, 2, 3, 1, 4)).reshape(B * Hkv * G, S, hd)
     kk = jnp.transpose(k, (0, 2, 1, 3)).reshape(B * Hkv, Skv, hd)
     vk = jnp.transpose(v, (0, 2, 1, 3)).reshape(B * Hkv, Skv, hd)
-    bq, bk = _block_sizes(S, Skv, block_q, block_k)
+    bq, bk = _block_sizes(S, Skv, block_q, block_k, q.dtype)
     qp = _pad_to(qk, 1, bq)
     kp = _pad_to(kk, 1, bk)
     vp = _pad_to(vk, 1, bk)
@@ -92,7 +100,7 @@ def _vjp_bwd(causal, window, softcap, scale, block_q, block_k, bwd_strategy,
     qp, kp, vp, op, lsep, kv_proto = res
     B, S, Hkv, G, hd = do.shape
     Skv = kv_proto.shape[0]
-    bq, bk = _block_sizes(S, Skv, block_q, block_k)
+    bq, bk = _block_sizes(S, Skv, block_q, block_k, qp.dtype)
 
     # one fp32 cast + layout pass over do; padded rows are zero, so delta
     # (and every gradient contribution) vanishes there

@@ -45,11 +45,12 @@ def pick_blocks(D: int, vmem_budget: int = 12 * 2 ** 20):
     return 8, 128
 
 
-def clamp_block_t(bt: int, T: int) -> int:
-    """Clamp the token block toward T (rounded up to the 8-sublane fp32
-    tile) so short sequences don't pad to a huge block — bt=256 with T=20
-    would otherwise pad 12x."""
-    return max(8, min(bt, ((T + 7) // 8) * 8))
+def clamp_block_t(bt: int, T: int, dtype=jnp.float32) -> int:
+    """Clamp the token block toward T (rounded up to the dtype's sublane
+    tile: 8 rows fp32, 16 rows bf16) so short sequences don't pad to a
+    huge block — bt=256 with T=20 would otherwise pad 12x."""
+    sub = {4: 8, 2: 16, 1: 32}.get(jnp.dtype(dtype).itemsize, 8)
+    return max(sub, min(-(-bt // sub) * sub, -(-T // sub) * sub))
 
 
 def _logits_tile(h, w, labels, iv, bv, V, softcap):
@@ -110,7 +111,7 @@ def xent_fwd(h, w, labels, *, softcap=0.0, block_t=None, block_v=None,
     bt0, bv0 = pick_blocks(D)
     bt = block_t or bt0
     bv = block_v or bv0
-    bt = clamp_block_t(bt, T)
+    bt = clamp_block_t(bt, T, h.dtype)
     padT = (-T) % bt
     padV = (-V) % bv
     hp = jnp.pad(h, ((0, padT), (0, 0))) if padT else h
@@ -250,7 +251,7 @@ def xent_bwd(h, w, labels, lse, g, *, softcap=0.0, block_t=None,
     bt0, bv0 = pick_blocks(D)
     bt = block_t or bt0
     bv = block_v or bv0
-    bt = clamp_block_t(bt, T)
+    bt = clamp_block_t(bt, T, h.dtype)
     padT = (-T) % bt
     padV = (-V) % bv
     hp = jnp.pad(h, ((0, padT), (0, 0))) if padT else h

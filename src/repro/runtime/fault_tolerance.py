@@ -105,16 +105,21 @@ class RoundJournal:
 
 
 def with_retries(fn: Callable, *args, retries: int = 3, backoff: float = 0.0,
-                 exceptions=(OSError, IOError), **kwargs):
+                 exceptions=(OSError, IOError), sleep_fn: Callable = None,
+                 **kwargs):
     """Bounded retry with exponential backoff (no jitter, no deadlines).
 
     Superseded by :meth:`repro.transport.retry.RetryPolicy.call`; new
     code should use that.  Kept for existing callers, with its two
     historical bugs fixed: it no longer sleeps after the final failed
     attempt, and the terminal error chains the last underlying one.
+    ``sleep_fn`` injects the backoff sleeper (defaults to
+    :func:`time.sleep`) so simulated callers and tests never block on
+    real wall-clock waits.
     """
     from repro.transport.retry import RetryExhaustedError
 
+    sleeper = time.sleep if sleep_fn is None else sleep_fn
     err = None
     for attempt in range(retries):
         try:
@@ -122,24 +127,28 @@ def with_retries(fn: Callable, *args, retries: int = 3, backoff: float = 0.0,
         except exceptions as e:  # pragma: no cover - timing dependent
             err = e
             if backoff and attempt < retries - 1:
-                time.sleep(backoff * (2 ** attempt))
+                sleeper(backoff * (2 ** attempt))
     raise RetryExhaustedError(
         f"{getattr(fn, '__name__', fn)} failed after {retries} attempts: "
         f"{err}", retries) from err
 
 
 class Heartbeats:
-    """Tracks last-seen times per client; ``alive()`` filters a cohort."""
+    """Tracks last-seen times per client; ``alive()`` filters a cohort.
+
+    ``now`` is required: every caller runs inside the simulated fleet and
+    passes sim time — an implicit wall-clock fallback here would mix
+    clock domains and silently break replay determinism.
+    """
 
     def __init__(self, timeout: float = 60.0):
         self.timeout = timeout
         self.last_seen = {}
 
-    def beat(self, client_id: int, now: Optional[float] = None):
-        self.last_seen[int(client_id)] = time.time() if now is None else now
+    def beat(self, client_id: int, now: float):
+        self.last_seen[int(client_id)] = now
 
-    def alive(self, client_ids, now: Optional[float] = None):
-        now = time.time() if now is None else now
+    def alive(self, client_ids, now: float):
         out = []
         for c in client_ids:
             t = self.last_seen.get(int(c))

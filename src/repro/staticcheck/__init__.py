@@ -1,0 +1,50 @@
+"""Static kernel-safety and determinism analysis (see README.md here).
+
+Two prongs: :mod:`~repro.staticcheck.kernel_analyzer` proves the Pallas
+alias/alignment/VMEM geometry over a representative config matrix
+without a TPU; :mod:`~repro.staticcheck.lint` catches determinism
+regressions (wall-clock, unseeded RNG, unordered serialization) before
+they flake a replay test.  ``scripts/staticcheck.py --gate`` fails CI
+only on findings absent from the committed ``STATICCHECK_baseline.json``
+— the same contract as the bench gate.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+from repro.staticcheck.findings import (ANALYZER_VERSION, Baseline,
+                                        BaselineEntry, Finding, GateResult,
+                                        format_json, format_markdown,
+                                        format_text, sort_findings)
+from repro.staticcheck.kernel_analyzer import (AnalyzerSettings,
+                                               analyze_kernel_configs,
+                                               analyze_traceable)
+from repro.staticcheck.lint import lint_source, lint_tree
+
+BASELINE_FILE = "STATICCHECK_baseline.json"
+REPORT_FILE = "STATICCHECK_report.md"
+CACHE_FILE = ".staticcheck_cache.json"
+
+__all__ = [
+    "ANALYZER_VERSION", "AnalyzerSettings", "Baseline", "BaselineEntry",
+    "Finding", "GateResult", "analyze_kernel_configs", "analyze_traceable",
+    "format_json", "format_markdown", "format_text", "lint_source",
+    "lint_tree", "run_staticcheck", "sort_findings",
+]
+
+
+def run_staticcheck(repo_root: str, *, kernels: bool = True,
+                    lint: bool = True, use_cache: bool = True,
+                    settings: Optional[AnalyzerSettings] = None):
+    """Run both prongs; returns ``(findings, kernel_summaries)``."""
+    findings, summaries = [], []
+    if kernels:
+        cache_path = os.path.join(repo_root, CACHE_FILE)
+        kf, summaries, _ = analyze_kernel_configs(
+            settings=settings, cache_path=cache_path, use_cache=use_cache)
+        findings.extend(kf)
+    if lint:
+        findings.extend(lint_tree(repo_root))
+    return sort_findings(findings), summaries

@@ -116,11 +116,11 @@ def test_spec_validation_reports_problems():
 def test_registry_covers_all_systems():
     assert list_systems() == ["ampere", "fedavg", "fedbuff", "pipar",
                               "scaffold", "splitfed", "splitfed_mb",
-                              "splitfedv2", "splitgp"]
+                              "splitfed_pa", "splitfedv2", "splitgp"]
     spec = _spec(systems=tuple(list_systems()),
                  fleet=FleetConfig(n_devices=6))   # fedbuff needs a fleet
     out = run_experiment(spec, dry_run=True)
-    assert out["valid"] and len(out["systems"]) == 9
+    assert out["valid"] and len(out["systems"]) == 10
 
 
 def test_spec_validation_fedbuff_needs_fleet():
