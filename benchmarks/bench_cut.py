@@ -1,0 +1,145 @@
+"""Adaptive-cut machinery perf gate: frontier sweep, policy resolution,
+prefix aggregation.
+
+Writes ``BENCH_cut.json`` at the repo root (same contract as
+``BENCH_step.json``: ``times_s`` entries are gated by
+``scripts/check_bench_regression.py``).
+
+Measured:
+
+* ``cut_frontier_mobilenet_l`` / ``cut_frontier_vit_s`` — one full
+  per-class cut-frontier sweep (every device class x every legal depth)
+  at the paper-scale configs.  Analytic only — this is the cost-model
+  hot path ``resolve_cuts`` runs once per experiment, and it must stay
+  cheap enough to call at spec-resolution time.
+* ``resolve_cuts_120dev`` — full ``CutPolicy`` resolution: the per-class
+  frontier plus the deterministic class->device mapping over a sampled
+  120-device population.
+* ``prefix_fedavg_2depth`` — heterogeneous consolidation micro-gate:
+  folding two trained depth buckets back over the shared prefix of a
+  device stack (the per-round aggregation step of a two-depth fleet).
+
+The payload also records the cut each class picks at full scale
+(``cuts_mobilenet_l`` / ``cuts_vit_s``) so cost-model drift shows up in
+review, not just runtime drift.
+
+  PYTHONPATH=src python -m benchmarks.run --only bench_cut
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax
+
+from benchmarks.common import best as _best, save, table
+
+BENCH_PATH = "BENCH_cut.json"
+
+
+def _bench_frontier(reps: int):
+    from repro.configs import registry
+    from repro.experiments.spec import ExperimentSpec
+    from repro.fleet import profiles
+    from repro.fleet.cuts import CutPolicy, class_frontier
+    from repro.models import build_model
+
+    pol = CutPolicy(mode="per_profile")
+    run = ExperimentSpec().run
+    times, extras = {}, {}
+    for arch in ("mobilenet-l", "vit-s"):
+        model = build_model(registry.get_config(arch))
+        split = dataclasses.replace(run.split, split_point=1)
+        key = arch.replace("-", "_")
+
+        def sweep(model=model, split=split):
+            out = {}
+            sizes_by_cut = {}   # shared across classes, as resolve_cuts does
+            for name, cls in profiles.DEVICE_CLASSES.items():
+                rows = class_frontier(
+                    model, split, cls, policy=pol, n_samples=256,
+                    batch_size=32, device_epochs=55, upload_samples=512,
+                    sizes_by_cut=sizes_by_cut)
+                out[name] = min(rows, key=lambda r: (r["total_s"],
+                                                     r["split_point"])
+                                )["split_point"]
+            return out
+
+        extras[f"cuts_{key}"] = sweep()
+        times[f"cut_frontier_{key}"] = _best(sweep, reps)
+    return times, extras
+
+
+def _bench_resolve(reps: int):
+    from repro.configs import registry
+    from repro.experiments.spec import ExperimentSpec
+    from repro.fleet.cuts import CutPolicy, resolve_cuts
+    from repro.fleet.profiles import FleetConfig
+    from repro.models import build_model
+
+    run = ExperimentSpec().run
+    model = build_model(registry.get_config("mobilenet-l"))
+    fleet = FleetConfig(n_devices=120)
+    pol = CutPolicy(mode="per_profile")
+
+    def resolve():
+        return resolve_cuts(pol, model, run, fleet)
+
+    a = resolve()
+    return ({"resolve_cuts_120dev": _best(resolve, reps)},
+            {"resolved_uniform": a.uniform,
+             "resolved_depths": list(a.depths)})
+
+
+def _bench_prefix(reps: int):
+    from repro.configs import registry
+    from repro.core import aggregation, splitting
+    from repro.models import build_model
+
+    model = build_model(registry.get_smoke_config("mobilenet-l"))
+    params = model.init(jax.random.PRNGKey(0))
+    p_max = model.cfg.num_layers - 1
+    dev, _ = splitting.split_params(model, params, p_max)
+    shallow = {"layers": [jax.tree.map(lambda a: a * 1.01, layer)
+                          for layer in dev["layers"][:1]]}
+    deep = {"layers": [jax.tree.map(lambda a: a * 0.99, layer)
+                       for layer in dev["layers"][:p_max - 1]]}
+    by_depth = {1: shallow, p_max - 1: deep}
+    w = {1: 0.5, p_max - 1: 0.5}
+
+    def agg():
+        out = aggregation.prefix_fedavg(dev, by_depth, w)
+        jax.block_until_ready(out)
+        return out
+
+    agg()   # compile/warm
+    return {"prefix_fedavg_2depth": _best(agg, reps)}, {}
+
+
+def run(quick: bool = True):
+    reps = 3 if quick else 10
+    times, config = {}, {}
+    for bench in (_bench_frontier, _bench_resolve, _bench_prefix):
+        t, c = bench(reps)
+        times.update(t)
+        config.update(c)
+
+    payload = {"config": config,
+               "times_s": {k: round(v, 6) for k, v in times.items()}}
+    with open(BENCH_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    save("bench_cut", payload)
+
+    rows = [{"metric": k, "value": v} for k, v in times.items()]
+    rows += [{"metric": f"full-scale cuts ({k.split('_', 1)[1]})",
+              "value": json.dumps(v)}
+             for k, v in config.items() if k.startswith("cuts_")]
+    table(rows, ["metric", "value"],
+          "bench_cut — adaptive-cut machinery wall clock")
+    return payload
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -37,6 +37,7 @@ import traceback
 
 from benchmarks import (
     bench_attention,
+    bench_cut,
     bench_fleet,
     bench_step,
     fig3_fig6_splitpoint,
@@ -67,12 +68,14 @@ BENCHMARKS = {
     "bench_step": bench_step.run,
     "bench_fleet": bench_fleet.run,
     "bench_attention": bench_attention.run,
+    "bench_cut": bench_cut.run,
 }
 
 # gate benchmarks: name -> committed snapshot they rewrite
 GATED = {"bench_step": bench_step.BENCH_PATH,
          "bench_fleet": bench_fleet.BENCH_PATH,
-         "bench_attention": bench_attention.BENCH_PATH}
+         "bench_attention": bench_attention.BENCH_PATH,
+         "bench_cut": bench_cut.BENCH_PATH}
 
 
 def run_gate(threshold: float) -> int:

@@ -52,4 +52,32 @@ assert overlap > 0.0, f"streaming smoke: no server/device overlap: {rows}"
 print(f"streaming smoke OK: overlap_s={overlap}")
 PY
 rm -rf "$STREAM_DIR"
+# heterogeneous-cut smoke: per_profile CutPolicy over a two-class fleet
+# (phone-3g pinned deeper via overrides — at smoke scale device compute
+# is negligible, so the cost model alone resolves uniform).  The run
+# must consolidate/train/aggregate across two cut depths end-to-end; the
+# summary must record >= 2 distinct per-class cuts and a phase table
+# whose analytic comm bytes balance (down == up per exchange phase,
+# up-only for the one-shot activation transfer).
+CUT_DIR=$(mktemp -d)
+python scripts/run_experiment.py examples/specs/cut_smoke.json \
+    --results-dir "$CUT_DIR"
+python - "$CUT_DIR" <<'PY'
+import json, sys
+summary = json.load(open(f"{sys.argv[1]}/summary.json"))["summary"]["ampere"]
+cuts = summary["cuts"]
+assert not cuts["uniform"] and len(set(cuts["by_class"].values())) >= 2, \
+    f"cut smoke: expected heterogeneous per-class cuts, got {cuts}"
+rows = {r["phase"]: r for r in summary["phases"]}
+for phase, r in rows.items():
+    assert r["bytes_total"] == r["bytes_up"] + r["bytes_down"], \
+        f"cut smoke: unbalanced bytes in phase {phase}: {r}"
+assert rows["fleet"]["bytes_up"] == rows["fleet"]["bytes_down"] > 0, \
+    f"cut smoke: fleet exchange not symmetric: {rows['fleet']}"
+assert rows["transfer"]["bytes_up"] > 0 and \
+    rows["transfer"]["bytes_down"] == 0, \
+    f"cut smoke: one-shot upload should be up-only: {rows['transfer']}"
+print(f"cut smoke OK: cuts={cuts['by_class']} depths={cuts['depths']}")
+PY
+rm -rf "$CUT_DIR"
 python -m benchmarks.run --gate

@@ -84,6 +84,43 @@ def fedbuff_stacked(global_tree, trained_k, snapshot_k, weights,
     return jax.tree.map(agg, global_tree, trained_k, snapshot_k)
 
 
+def prefix_fedavg(current, by_depth, weights):
+    """Aggregate heterogeneous-depth device blocks over their overlapping
+    layer prefix.
+
+    ``current`` is the global device stack (layers ``[0, p_max)`` plus any
+    non-layer keys, e.g. the LM embedding); ``by_depth`` maps cut depth
+    ``d`` -> a trained device tree whose ``"layers"`` list covers
+    ``[0, d)``; ``weights`` maps depth -> that bucket's total client
+    weight.  Layer ``l`` is the weighted average over the buckets that own
+    it (``d > l``); non-layer keys average over every contributing bucket.
+    Layers no positive-weight bucket covers keep their ``current`` value,
+    so a round where only shallow-cut clients survive leaves the deep tail
+    untouched.  A single depth covering the whole stack reduces to plain
+    :func:`fedavg` of that bucket (i.e. the legacy uniform path).
+    """
+    depths = sorted(d for d in by_depth if weights.get(d, 0.0) > 0.0)
+    if not depths:
+        return current
+    out = {}
+    n_layers = len(current["layers"])
+    layers = []
+    for l in range(n_layers):
+        owners = [d for d in depths if d > l]
+        if not owners:
+            layers.append(current["layers"][l])
+            continue
+        layers.append(fedavg([by_depth[d]["layers"][l] for d in owners],
+                             [weights[d] for d in owners]))
+    out["layers"] = layers
+    for key in current:
+        if key == "layers":
+            continue
+        out[key] = fedavg([by_depth[d][key] for d in depths],
+                          [weights[d] for d in depths])
+    return out
+
+
 def tree_sub(a, b):
     return jax.tree.map(lambda x, y: (x.astype(jnp.float32)
                                       - y.astype(jnp.float32)), a, b)

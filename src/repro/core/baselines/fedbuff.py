@@ -114,7 +114,7 @@ class FedBuffTrainer(AmpereTrainer):
                 log["excluded"] = len(excluded)
             if self.transport is not None:
                 log["wire"] = self.transport.delta_stats()
-            self._round_metrics("fedbuff", len(plan.clients), excluded)
+            self._round_metrics("fedbuff", plan.clients, excluded)
             if self.obs.enabled:
                 for s in staleness:
                     self.obs.metrics.observe("staleness", float(s),

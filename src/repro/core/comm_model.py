@@ -212,3 +212,111 @@ def ampere_server_epoch_time(model, split_cfg, tm: TimeModel, *,
     sizes = sizes or split_sizes(model, split_cfg, seq_len=max(seq_len, 1))
     tokens = seq_len if model.kind == "lm" else 1
     return 6.0 * (sizes.server / 4) * tokens * n_samples / (tm.server_gflops * 1e9)
+
+
+def epoch_time_parts(algo: str, model, split_cfg, tm: TimeModel, *,
+                     n_samples: int, batch_size: int, seq_len: int = 0,
+                     sizes: Optional[SplitSizes] = None):
+    """(compute_s, comm_s) decomposition of :func:`epoch_time`.
+
+    ``comm_s`` is the link-bound share of the epoch — the part a
+    shared-uplink scheduler stretches when several devices of the same
+    class contend for one link.  The two parts mirror the formulas in
+    :func:`epoch_time` term by term; they are NOT derived by subtraction,
+    and :func:`epoch_time` itself is deliberately left untouched so its
+    float rounding (and every committed trace priced with it) stays
+    bit-identical.
+    """
+    sizes = sizes or split_sizes(model, split_cfg, seq_len=max(seq_len, 1))
+    fl_dev = device_flops_per_sample(model, split_cfg, algo, seq_len=seq_len,
+                                     sizes=sizes)
+    t_dev = fl_dev * n_samples / (tm.device_gflops * 1e9 * tm.speed_factor)
+    srv_params = sizes.server / 4
+    tokens = seq_len if model.kind == "lm" else 1
+    t_srv = 6.0 * srv_params * tokens * n_samples / (tm.server_gflops * 1e9)
+    t_model_x = 2 * (sizes.device + (sizes.aux if algo in ("ampere", "splitgp")
+                                     else 0)) / tm.bandwidth
+    t_act = 2 * sizes.act_per_sample * n_samples / tm.bandwidth
+
+    if algo == "fedavg":
+        t_full = 6.0 * (sizes.device + sizes.server) / 4 * tokens * n_samples \
+            / (tm.device_gflops * 1e9 * tm.speed_factor)
+        return t_full, 2 * (sizes.device + sizes.server) / tm.bandwidth
+    if algo == "ampere":
+        return t_dev, t_model_x
+    if algo == "pipar":
+        return max(t_dev + t_srv, t_act), t_model_x
+    extra = t_model_x if algo != "scaffold" else 2 * t_model_x
+    return t_dev + t_srv, t_act + extra
+
+
+# ---------------------------------------------------------------------------
+# Cut-layer frontier sweep (per-profile CutPolicy + benchmarks/bench_cut)
+# ---------------------------------------------------------------------------
+
+
+def cut_frontier(model, split_cfg, *, cuts=None, algo: str = "ampere",
+                 tm: Optional[TimeModel] = None, n_samples: int,
+                 batch_size: int, seq_len: int = 0,
+                 device_epochs: int = 1, upload_samples: Optional[int] = None,
+                 sizes_by_cut: Optional[dict] = None):
+    """Sweep the cut layer and price each candidate split.
+
+    Returns one row dict per candidate ``p`` (default: every legal cut in
+    ``[1, num_layers - 1]``) with the quantities that trade off against
+    each other as the cut moves:
+
+    * ``device_bytes`` / ``aux_bytes`` / ``server_bytes`` — model-block
+      sizes at that cut,
+    * ``act_bytes_per_sample`` — the one-shot upload cost per sample
+      (shrinks with depth for CNNs; flat for token models),
+    * ``comm_bytes`` — total per-device bytes (:func:`comm_volume`),
+    * ``device_flops_per_sample`` — on-device work,
+    * ``epoch_s`` / ``upload_s`` / ``total_s`` — simulated seconds for one
+      device epoch, the one-shot activation upload, and the per-device
+      objective ``device_epochs * epoch_s + upload_s`` that
+      ``fleet.cuts.resolve_cuts`` minimises per device class.
+
+    ``upload_samples`` defaults to ``n_samples`` (the per-epoch sample
+    count); pass the device's full dataset size when they differ.
+
+    ``sizes_by_cut`` is an optional ``{p: SplitSizes}`` cache shared
+    across sweeps: block sizes depend only on the cut, not on ``tm``, so
+    a per-class frontier (``fleet.cuts.resolve_cuts``) prices every
+    class from one abstract-eval pass.  The dict is filled in place.
+    """
+    tm = tm or TimeModel()
+    cfg = model.cfg
+    if cuts is None:
+        cuts = range(1, cfg.num_layers)
+    n_up = n_samples if upload_samples is None else upload_samples
+    rows = []
+    for p in cuts:
+        sc = dataclasses.replace(split_cfg, split_point=int(p))
+        sizes = None if sizes_by_cut is None else sizes_by_cut.get(int(p))
+        if sizes is None:
+            sizes = split_sizes(model, sc, seq_len=max(seq_len, 1))
+            if sizes_by_cut is not None:
+                sizes_by_cut[int(p)] = sizes
+        e_t = epoch_time(algo, model, sc, tm, n_samples=n_samples,
+                         batch_size=batch_size, seq_len=seq_len, sizes=sizes)
+        if algo == "ampere":
+            upload_s = sizes.act_per_sample * n_up / tm.bandwidth
+        else:
+            upload_s = 0.0  # iterative algos pay activations inside epoch_s
+        rows.append({
+            "split_point": int(p),
+            "device_bytes": sizes.device,
+            "aux_bytes": sizes.aux,
+            "server_bytes": sizes.server,
+            "act_bytes_per_sample": sizes.act_per_sample,
+            "comm_bytes": comm_volume(
+                algo, sizes, epochs=device_epochs, n_samples=n_up,
+                device_epochs=device_epochs),
+            "device_flops_per_sample": device_flops_per_sample(
+                model, sc, algo, seq_len=seq_len, sizes=sizes),
+            "epoch_s": e_t,
+            "upload_s": upload_s,
+            "total_s": device_epochs * e_t + upload_s,
+        })
+    return rows

@@ -1,15 +1,32 @@
-"""Split-point machinery (Ampere §3.2.1).
+"""Split-point machinery (Ampere §3.2.1), generalised to *sets* of cuts.
 
 Splits a model at layer ``p`` into a *device block* (embedding + layers
 [0, p)) and a *server block* (layers [p, L) + final norm + head), provides
 the forward functions of each half, and re-merges the halves for
 end-to-end evaluation/serving.
 
+With a per-profile :class:`repro.fleet.cuts.CutPolicy` the fleet holds
+several cut depths at once, and one server block must serve them all.
+The server is split at the *shallowest* fleet cut ``p_min`` and
+``server_forward(..., entry=p_i)`` enters the stack at any deeper cut:
+layers with global index below ``entry`` are skipped, so activations cut
+at ``p_i >= p_min`` resume exactly where their device block stopped.  The
+overlap layers ``[p_min, p_max)`` exist in both halves; the trainer owns
+reconciling them (device-trained copies win before server epochs, and
+heterogeneous device stacks aggregate over their common prefix via
+``aggregation.prefix_fedavg``).
+
 LM parameter trees are period-stacked (see models/transformer.py); the
-device block (p is small — the paper's optimum is p=1) is carried as a
-list of *loose* per-layer trees, while the server block keeps the stacked
-representation for the complete trailing repetitions plus loose layers for
-the partial leading period — so the server training step still scans.
+device block (cuts are small — the paper's optimum is p=1) is carried as
+a list of *loose* per-layer trees, while the server block keeps the
+stacked representation for the complete trailing repetitions plus loose
+layers for the partial leading period — so the server training step still
+scans.  ``split_params(..., loose_until=p_max)`` extends the loose region
+so every possible entry point lands on a loose layer, never inside the
+scanned stack; ``merge_params``/``server_forward`` derive the
+loose/stacked boundary from ``len(server["layers_head"])`` rather than
+recomputing it from ``p``, so both accept blocks split with any
+``loose_until``.
 
 Tied-embedding archs: the server must own an output head after the split
 (the embedding lives on the device), so ``split_params`` materializes an
@@ -43,7 +60,11 @@ def loose_layer(blocks, layer_idx: int, period: int):
 # ---------------------------------------------------------------------------
 
 
-def split_params(model, params, p: int):
+def split_params(model, params, p: int, *, loose_until: Optional[int] = None):
+    """Split at ``p``.  ``loose_until`` (LM only) extends the server's
+    loose leading region to cover ``[p, ceil(loose_until / P) * P)`` so a
+    heterogeneous-cut fleet's deepest entry point stays outside the
+    scanned stack; ``None`` keeps the legacy minimal loose region."""
     cfg = model.cfg
     if not _is_lm(model):
         device = {"layers": list(params["layers"][:p])}
@@ -52,7 +73,8 @@ def split_params(model, params, p: int):
 
     P = cfg.pattern_period
     R = cfg.num_layers // P
-    r0 = -(-p // P)  # first complete repetition owned by the server
+    q = max(p, loose_until) if loose_until is not None else p
+    r0 = -(-q // P)  # first complete repetition owned by the server
     device = {
         "embed": params["embed"],
         "layers": [loose_layer(params["blocks"], i, P) for i in range(p)],
@@ -82,19 +104,27 @@ def merged_config(model):
 
 
 def merge_params(model, device, server, p: int):
-    """Re-assemble a full parameter tree from the two halves."""
+    """Re-assemble a full parameter tree from the two halves.
+
+    The device block may carry more than ``p`` layers (a heterogeneous
+    fleet's global stack reaches ``p_max``); only its first ``p`` are
+    used.  The LM loose/stacked boundary is derived from
+    ``len(server["layers_head"])``, so blocks split with any
+    ``loose_until`` merge correctly.
+    """
     cfg = model.cfg
     if not _is_lm(model):
-        return {"layers": list(device["layers"]) + list(server["layers"]),
+        return {"layers": list(device["layers"][:p]) + list(server["layers"]),
                 "head": server["head"]}
     P = cfg.pattern_period
     R = cfg.num_layers // P
-    r0 = -(-p // P)
+    lh_end = p + len(server["layers_head"])
+    r0 = lh_end // P
 
     def layer_at(i):
         if i < p:
             return device["layers"][i]
-        if i < r0 * P:
+        if i < lh_end:
             return server["layers_head"][i - p]
         r, j = divmod(i, P)
         return jax.tree.map(lambda a: a[r - r0], server["blocks"][f"pos{j}"])
@@ -141,9 +171,18 @@ def device_forward(model, device_params, inputs, p: int, *, positions=None,
 
 def server_forward(model, server_params, activations, p: int, *,
                    positions=None, impl="xla", scan=True, remat="block",
-                   return_logits=True):
-    """Layers [p, L) + final norm (+ head weight exposed separately)."""
+                   return_logits=True, entry: Optional[int] = None):
+    """Layers [p, L) + final norm (+ head weight exposed separately).
+
+    ``entry`` (a Python int, static under jit) enters the stack at a cut
+    deeper than the split: layers with global index < ``entry`` are
+    skipped, so activations produced by a device block cut at
+    ``entry >= p`` resume at their own boundary.  ``entry`` must land in
+    the loose region for LMs — split the server with
+    ``loose_until >= max(entry)`` — and defaults to ``p`` (no skip).
+    """
     cfg = model.cfg
+    e = p if entry is None else int(entry)
     if not _is_lm(model):
         x = activations.astype(L.dt(cfg.dtype))
         from repro.models import cnn as CNN
@@ -151,6 +190,8 @@ def server_forward(model, server_params, activations, p: int, *,
         n_server = len(server_params["layers"])
         for k in range(n_server):
             i = p + k
+            if i < e:
+                continue
             if cfg.family in ("vit", "swin"):
                 x = VIT.apply_vit_layer(cfg, server_params["layers"][k], x, i)
             else:
@@ -160,8 +201,11 @@ def server_forward(model, server_params, activations, p: int, *,
         return {"hidden": x, "logits": logits,
                 "aux": jnp.zeros((), jnp.float32)}
 
-    P = cfg.pattern_period
-    r0 = -(-p // P)
+    lh_end = p + len(server_params["layers_head"])
+    if e > lh_end:
+        raise ValueError(
+            f"entry {e} is inside the scanned stack (loose region ends at "
+            f"{lh_end}); split the server with loose_until >= {e}")
     B, S = activations.shape[:2]
     x = activations.astype(L.dt(cfg.dtype))
     if positions is None:
@@ -169,11 +213,13 @@ def server_forward(model, server_params, activations, p: int, *,
     aux_total = jnp.zeros((), jnp.float32)
     for k, lp in enumerate(server_params["layers_head"]):
         i = p + k
+        if i < e:
+            continue
         fn = T.checkpointed_block_apply if remat == "block" else T.block_apply
         x, _, aux = fn(cfg, lp, x, positions, i, impl=impl)
         aux_total = aux_total + aux
     if server_params["blocks"] is not None:
-        n_rel = cfg.num_layers - r0 * P
+        n_rel = cfg.num_layers - lh_end
         x, _, aux = T.run_blocks(cfg, server_params["blocks"], x, positions,
                                  lo=0, hi=n_rel, impl=impl, scan=scan,
                                  remat=remat)

@@ -223,13 +223,17 @@ def make_buffered_round_pool_step(model, run_cfg, *, impl="xla",
 
 
 def make_server_train_step(model, run_cfg, *, impl="xla", xent_impl="xla",
-                           grad_shardings=None):
+                           grad_shardings=None, entry=None):
     """``grad_shardings``: optional NamedSharding tree matching the server
     params; constraining the gradients to the parameter sharding right at
     the grad boundary makes SPMD materialize them as a reduce-scatter in
     the backward dtype instead of a full-precision all-reduce deferred to
     the optimizer use-site (measured 2-4x collective reduction on ZeRO
-    configs)."""
+    configs).
+
+    ``entry``: static cut depth this step's activations were produced at
+    (heterogeneous-cut consolidation trains one server block with
+    per-bucket entry points); ``None`` = the split point itself."""
     cfg = model.cfg
     p = run_cfg.split.split_point
     opt = make_optimizer(run_cfg.optim)
@@ -243,7 +247,8 @@ def make_server_train_step(model, run_cfg, *, impl="xla", xent_impl="xla",
             from repro.runtime import compression
             acts = compression.dequantize_int8(acts, batch["acts_scale"])
         out = splitting.server_forward(model, server_params, acts, p,
-                                       impl=impl, scan=scan, remat=remat)
+                                       impl=impl, scan=scan, remat=remat,
+                                       entry=entry)
         if model.kind == "lm":
             head_w = splitting.server_head_weight(server_params)
             loss, m = losses.lm_loss_from_hidden(
@@ -283,7 +288,7 @@ def init_server_state(model, run_cfg, server_params):
 
 
 def make_server_epoch_fn(model, run_cfg, *, impl="xla", xent_impl="xla",
-                         grad_shardings=None):
+                         grad_shardings=None, entry=None):
     """One FULL server epoch as a single jittable function.
 
     ``epoch_fn(state, pool, idx)`` scans :func:`make_server_train_step`
@@ -296,7 +301,7 @@ def make_server_epoch_fn(model, run_cfg, *, impl="xla", xent_impl="xla",
     """
     step = make_server_train_step(model, run_cfg, impl=impl,
                                   xent_impl=xent_impl,
-                                  grad_shardings=grad_shardings)
+                                  grad_shardings=grad_shardings, entry=entry)
 
     def epoch_fn(state, pool, idx):
         def body(state, idx_b):

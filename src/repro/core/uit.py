@@ -42,6 +42,7 @@ deprecation shims over it — prefer
 
 from __future__ import annotations
 
+import dataclasses
 from typing import List, Optional
 
 import jax
@@ -64,7 +65,7 @@ class AmpereTrainer:
                  eval_data, workdir: Optional[str] = None,
                  patience: int = 15, log_echo: bool = False,
                  consolidate: bool = True, transport=None,
-                 quorum_frac: float = 1.0, obs=None):
+                 quorum_frac: float = 1.0, obs=None, cuts=None):
         self.model = model
         self.run = run_cfg
         self.clients = clients
@@ -76,6 +77,19 @@ class AmpereTrainer:
         # analytic accounting byte-for-byte
         self.transport = transport
         self.quorum_frac = quorum_frac
+        # heterogeneous cuts: a non-uniform CutAssignment switches the
+        # device phase to per-depth bucket rounds and the server phase to
+        # per-bucket entry points.  Uniform assignments must be collapsed
+        # onto run_cfg.split.split_point upstream (experiments.api does),
+        # keeping the legacy single-cut path byte-identical.
+        self.cuts = None
+        if cuts is not None and not cuts.uniform:
+            if cuts.depths[0] != run_cfg.split.split_point:
+                raise ValueError(
+                    f"run_cfg.split.split_point={run_cfg.split.split_point} "
+                    f"must equal the shallowest cut {cuts.depths[0]} (the "
+                    "server block is split there)")
+            self.cuts = cuts
         self.obs = obs if obs is not None else NULL_OBS
         self.rng = np.random.default_rng(run_cfg.fed.seed)
         # cross-cutting loop machinery (metrics, checkpoint/journal,
@@ -112,40 +126,89 @@ class AmpereTrainer:
         seq = self._seq_len()
         self.sizes = comm_model.split_sizes(model, run_cfg.split, seq_len=seq)
 
+        # per-depth run configs + sizes for the heterogeneous paths
+        # (abstract eval_shape only — nothing is allocated)
+        self._run_by_depth = {}
+        self._sizes_by_depth = {}
+        if self.cuts is not None:
+            for d in self.cuts.depths:
+                rc = dataclasses.replace(
+                    run_cfg,
+                    split=dataclasses.replace(run_cfg.split,
+                                              split_point=int(d)))
+                self._run_by_depth[d] = rc
+                self._sizes_by_depth[d] = comm_model.split_sizes(
+                    model, rc.split, seq_len=seq)
+
     # ------------------------------------------------------------------
     def _seq_len(self) -> int:
         if self.model.kind != "lm":
             return 0
         return int(self.clients[0].dataset.arrays["tokens"].shape[1])
 
-    def _round_metrics(self, phase: str, cohort_n: int, excluded):
+    def _one_way_bytes(self, client_id) -> int:
+        """Device-block + aux bytes one model exchange moves for this
+        client (its own cut depth under a heterogeneous assignment)."""
+        if self.cuts is None:
+            return self.sizes.device + self.sizes.aux
+        s = self._sizes_by_depth[self.cuts.cut_of(client_id)]
+        return s.device + s.aux
+
+    def _round_metrics(self, phase: str, clients, excluded):
         """Direction-split analytic bytes + exclusions for one round.
 
         Observability only — the runner already accounts the undirected
         wire total into history; this splits the *analytic* volume by
-        direction for the per-phase table.
+        direction for the per-phase table.  ``clients`` is the round's
+        cohort id list (per-client bytes differ across cut depths).
         """
         if not self.obs.enabled:
             return
         m = self.obs.metrics
-        one_way = (self.sizes.device + self.sizes.aux) * cohort_n
+        one_way = sum(self._one_way_bytes(c) for c in clients)
         m.counter("comm_bytes", one_way, phase=phase, direction="down")
         m.counter("comm_bytes", one_way, phase=phase, direction="up")
         if excluded:
             m.counter("excluded_devices", len(excluded), phase=phase)
 
+    def _device_prefix(self, device, d: int):
+        """The ``[0, d)`` layer slice of a device tree (non-layer keys —
+        the LM embedding — ride along whole).  The slices reference the
+        same buffers, so per-bucket round steps must not donate them."""
+        out = {k: v for k, v in device.items() if k != "layers"}
+        out["layers"] = list(device["layers"][:d])
+        return out
+
     def _init_states(self, key):
         params = self.model.init(key)
         p = self.run.split.split_point
-        dev, srv = splitting.split_params(self.model, params, p)
-        aux = auxiliary.init_aux(self.model, jax.random.fold_in(key, 7),
-                                 self.run.split)
+        if self.cuts is None:
+            dev, srv = splitting.split_params(self.model, params, p)
+            aux = auxiliary.init_aux(self.model, jax.random.fold_in(key, 7),
+                                     self.run.split)
+            return dev, srv, aux
+        # heterogeneous: one global device stack at the DEEPEST cut, one
+        # server block split at the shallowest with a loose region through
+        # p_max (every entry point lands on a loose layer), and one aux
+        # net per depth (string keys — checkpoint-safe)
+        p_max = self.cuts.depths[-1]
+        dev, _ = splitting.split_params(self.model, params, p_max)
+        _, srv = splitting.split_params(self.model, params, p,
+                                        loose_until=p_max)
+        aux = {f"p{d}": auxiliary.init_aux(
+                   self.model, jax.random.fold_in(key, 7 + j),
+                   self._run_by_depth[d].split)
+               for j, d in enumerate(self.cuts.depths)}
         return dev, srv, aux
 
     # ------------------------------------------------------------------
     # Phase 3: federated device training
     # ------------------------------------------------------------------
     def run_device_phase(self, dev_state, max_rounds: Optional[int] = None):
+        if self.cuts is not None:
+            raise ValueError(
+                "heterogeneous cuts run through the fleet device phase "
+                "(a per_profile CutPolicy requires a fleet trace)")
         fed = self.run.fed
         K = fed.clients_per_round
         aux_eval = self._make_aux_eval()
@@ -202,7 +265,7 @@ class AmpereTrainer:
                 log["excluded"] = len(excluded)
             if self.transport is not None:
                 log["wire"] = self.transport.delta_stats()
-            self._round_metrics("device", len(cohort["clients"]), excluded)
+            self._round_metrics("device", cohort["clients"], excluded)
             return StepOutcome(
                 state=state,
                 record={"round": rnd, "loss": float(metrics["loss"]), **val},
@@ -233,6 +296,9 @@ class AmpereTrainer:
         """
         from repro.fleet.engine import FleetEngine
 
+        if self.cuts is not None:
+            return self._run_fleet_device_phase_hetero(dev_state, trace,
+                                                       max_rounds)
         engine = FleetEngine(self.model, self.run, self.clients,
                              seed=self.run.fed.seed)
         aux_eval = self._make_aux_eval()
@@ -261,11 +327,102 @@ class AmpereTrainer:
                 log["excluded"] = len(excluded)
             if self.transport is not None:
                 log["wire"] = self.transport.delta_stats()
-            self._round_metrics("fleet", len(plan.clients), excluded)
+            self._round_metrics("fleet", plan.clients, excluded)
             return StepOutcome(
                 state=state,
                 record={"round": rnd, "loss": float(metrics["loss"]),
                         "t_end": plan.t_end, "cohort": plan.cohort_size,
+                        "survivors": len(survivors), **val},
+                comm_bytes=wire,
+                sim_time=plan.round_time + extra,
+                log=log)
+
+        plans = trace.rounds if max_rounds is None else \
+            trace.rounds[:max_rounds]
+        return self.runner.run_phase(
+            "fleet", dev_state,
+            ((p.round_idx, p) for p in plans if p.round_idx >= start_round),
+            body, history_key="device", monitor="val_loss",
+            checkpoint_every=self.run.checkpoint_every)
+
+    def _run_fleet_device_phase_hetero(self, dev_state, trace,
+                                       max_rounds: Optional[int] = None):
+        """Fleet device phase with per-profile cut depths.
+
+        One :class:`FleetEngine` per depth (each compiles at its own layer
+        count; ``donate=False`` because the per-bucket states are slices
+        referencing the global stack's buffers).  Every round's survivors
+        are bucketed by assigned cut, each bucket trains the ``[0, d)``
+        prefix of the global device stack with its own aux net, and
+        ``aggregation.prefix_fedavg`` folds the trained buckets back over
+        their overlapping prefix — layers no surviving bucket covers keep
+        their current global value.
+        """
+        from repro.fleet.engine import FleetEngine
+
+        cuts = self.cuts
+        engines = {d: FleetEngine(self.model, self._run_by_depth[d],
+                                  self.clients, seed=self.run.fed.seed,
+                                  donate=False)
+                   for d in cuts.depths}
+        aux_eval = self._make_aux_eval()
+        dev_state, start_round = self.runner.restore("fleet", dev_state)
+        dev_state = jax.tree.map(lambda a: jnp.array(a), dev_state)
+
+        def body(state, rnd, plan):
+            lr = self._sched(rnd)
+            kept, wire, extra, excluded = cohort_exchange(
+                self.transport, round_key=f"ampere/fleet/{rnd}",
+                clients=plan.clients,
+                one_way_bytes=[self._one_way_bytes(c)
+                               for c in plan.clients],
+                quorum_frac=self.quorum_frac, phase="fleet")
+            survivors = [plan.clients[i] for i in kept]
+            weights = [plan.weights[i] for i in kept]
+            if excluded:    # quorum-degraded round: reweight the survivors
+                total = sum(weights)
+                weights = [w_ / total for w_ in weights]
+            buckets = {d: ([], []) for d in cuts.depths}
+            for c, w_ in zip(survivors, weights):
+                ids, ws = buckets[cuts.cut_of(c)]
+                ids.append(c)
+                ws.append(w_)
+            trained, bucket_w = {}, {}
+            loss_num = 0.0
+            for d in cuts.depths:
+                ids, ws = buckets[d]
+                if not ids:
+                    continue
+                sub = {"device": self._device_prefix(state["device"], d),
+                       "aux": state["aux"][f"p{d}"]}
+                sub, metrics = engines[d].run_round(
+                    sub, rnd, ids, ws, lr, pad_to=plan.cohort_size)
+                trained[d] = sub
+                bucket_w[d] = float(sum(ws))
+                loss_num += bucket_w[d] * float(metrics["loss"])
+            new_aux = dict(state["aux"])
+            for d in trained:
+                new_aux[f"p{d}"] = trained[d]["aux"]
+            new_device = aggregation.prefix_fedavg(
+                state["device"],
+                {d: t["device"] for d, t in trained.items()}, bucket_w)
+            state = {"device": new_device, "aux": new_aux}
+            total_w = sum(bucket_w.values())
+            loss = loss_num / total_w if total_w else 0.0
+            val = aux_eval(state)
+            log = {"dropped": len(plan.dropped),
+                   "sim_t": round(plan.t_end, 6),
+                   "buckets": {f"p{d}": len(buckets[d][0])
+                               for d in cuts.depths}}
+            if self.transport is not None and self.transport.faulty:
+                log["excluded"] = len(excluded)
+            if self.transport is not None:
+                log["wire"] = self.transport.delta_stats()
+            self._round_metrics("fleet", plan.clients, excluded)
+            return StepOutcome(
+                state=state,
+                record={"round": rnd, "loss": loss, "t_end": plan.t_end,
+                        "cohort": plan.cohort_size,
                         "survivors": len(survivors), **val},
                 comm_bytes=wire,
                 sim_time=plan.round_time + extra,
@@ -300,16 +457,31 @@ class AmpereTrainer:
 
     def _make_aux_eval(self):
         model, run = self.model, self.run
-        p = run.split.split_point
 
-        @jax.jit
-        def step(dev_state, batch):
-            inp = batch["tokens"] if model.kind == "lm" else batch["images"]
-            acts = splitting.device_forward(model, dev_state["device"], inp, p)
-            loss, m = auxiliary.aux_loss(model, dev_state["aux"],
-                                         dev_state["device"], acts, batch,
-                                         run.split)
-            return loss, m.get("acc", jnp.zeros(()))
+        def make_step(p, split_cfg, aux_of):
+            @jax.jit
+            def step(dev_state, batch):
+                inp = batch["tokens"] if model.kind == "lm" \
+                    else batch["images"]
+                acts = splitting.device_forward(model, dev_state["device"],
+                                                inp, p)
+                loss, m = auxiliary.aux_loss(model, aux_of(dev_state),
+                                             dev_state["device"], acts,
+                                             batch, split_cfg)
+                return loss, m.get("acc", jnp.zeros(()))
+            return step
+
+        if self.cuts is None:
+            steps_by_depth = {run.split.split_point: make_step(
+                run.split.split_point, run.split, lambda s: s["aux"])}
+        else:
+            # one step per depth: each evaluates its own aux head on its
+            # own prefix of the shared device stack; the reported metric
+            # averages across depths
+            steps_by_depth = {
+                d: make_step(d, self._run_by_depth[d].split,
+                             (lambda d=d: lambda s: s["aux"][f"p{d}"])())
+                for d in self.cuts.depths}
 
         def eval_fn(dev_state, max_batches: int = 8, batch_size: int = 64):
             with self.obs.tracer.span("aux_eval", track="eval") as sp:
@@ -320,9 +492,10 @@ class AmpereTrainer:
                     idx = np.arange(s, s + bs)
                     batch = {k: jnp.asarray(v[idx])
                              for k, v in self.eval_data.arrays.items()}
-                    loss, acc = step(dev_state, batch)
-                    ls.append(float(loss))
-                    accs.append(float(acc))
+                    for step in steps_by_depth.values():
+                        loss, acc = step(dev_state, batch)
+                        ls.append(float(loss))
+                        accs.append(float(acc))
                 out = {"val_loss": float(np.mean(ls)),
                        "val_acc": float(np.mean(accs))}
                 sp.set(**out)
@@ -357,9 +530,22 @@ class AmpereTrainer:
         model, run = self.model, self.run
         p = run.split.split_point
 
-        @jax.jit
-        def fwd(device_params, inp):
-            return splitting.device_forward(model, device_params, inp, p)
+        def make_fwd(depth):
+            @jax.jit
+            def fwd(device_params, inp):
+                return splitting.device_forward(model, device_params, inp,
+                                                depth)
+            return fwd
+
+        if self.cuts is None:
+            fwds = {None: make_fwd(p)}
+            cut_of = lambda cid: None           # noqa: E731
+        else:
+            # each client generates at its own assigned depth from the
+            # matching prefix of the global stack; shards are cut-tagged
+            # so the server phase can bucket them by entry point
+            fwds = {d: make_fwd(d) for d in self.cuts.depths}
+            cut_of = self.cuts.cut_of
 
         inp_key = "tokens" if model.kind == "lm" else "images"
         lab_key = "tokens" if model.kind == "lm" else "labels"
@@ -403,16 +589,21 @@ class AmpereTrainer:
             return (bytes_cum[None] / comm_model.BANDWIDTH_BPS
                     + sum(client_extra.values()))
 
-        def submit(cid, shard, t_arr):
+        def submit(cid, shard, t_arr, cut):
             if streams:
-                store.submit(cid, shard, t_arrival=t_arr)
+                store.submit(cid, shard, t_arrival=t_arr, cut=cut)
+            elif cut is not None:
+                store.submit(cid, shard, cut=cut)
             else:
                 store.submit(cid, shard)
 
         store.start_writer()
         # double-buffered upload: batch k+1 transfers while k computes
         for (cid, labels), inp in DevicePrefetcher(host_batches()):
-            shard = {"acts": np.asarray(fwd(dev_state["device"], inp),
+            cut = cut_of(cid)
+            dev_params = (dev_state["device"] if cut is None
+                          else self._device_prefix(dev_state["device"], cut))
+            shard = {"acts": np.asarray(fwds[cut](dev_params, inp),
                                         np.float32),
                      lab_key: labels}
             if transport is not None:
@@ -443,14 +634,14 @@ class AmpereTrainer:
             if faulty:
                 # hold shards back until the whole client verifies, so a
                 # device that perma-fails mid-stream never half-lands
-                pending.setdefault(cid, []).append((shard, t_arr))
+                pending.setdefault(cid, []).append((shard, t_arr, cut))
             else:
-                submit(cid, shard, t_arr)
+                submit(cid, shard, t_arr, cut)
         for cid, shards in pending.items():
             if cid in failed:
                 continue
-            for shard, t_arr in shards:
-                submit(cid, shard, t_arr)
+            for shard, t_arr, cut in shards:
+                submit(cid, shard, t_arr, cut)
         store.finish()
         if faulty and failed:
             survivors = len(self.clients) - len(failed)
@@ -531,6 +722,9 @@ class AmpereTrainer:
         Pools beyond ``run.device_pool_budget_mb`` fall back to streaming
         host batches through the double-buffered :class:`DevicePrefetcher`.
         """
+        if self.cuts is not None:
+            return self._run_server_phase_hetero(dev_state, srv_params,
+                                                 store, max_epochs)
         run = self.run
         srv_state = steps.init_server_state(self.model, run, srv_params)
         srv_state, start_epoch = self.runner.restore("server", srv_state,
@@ -614,6 +808,120 @@ class AmpereTrainer:
                 record={"epoch": epoch, "loss": float(np.mean(ls)),
                         "val_loss": val["loss"], "val_acc": val["acc"]},
                 sim_time=epoch_sim)
+
+        return self.runner.run_phase(
+            "server", srv_state,
+            ((e, None) for e in range(start_epoch, epochs)),
+            body, history_key="server", monitor="val_loss",
+            checkpoint_every=run.checkpoint_every, ckpt_offset=10_000,
+            step_name="epoch")
+
+    def merged_params(self, dev_state, server_params):
+        """Full merged model parameters (device block through the server
+        split + the server block).  Under a heterogeneous assignment the
+        device stack is oversized — ``merge_params`` reads only its first
+        ``split_point`` layers, and the overlap layers [p_min, p_max)
+        come from the server block's loose region, which holds the
+        server-phase-trained copy."""
+        return splitting.merge_params(self.model, dev_state["device"],
+                                      server_params,
+                                      self.run.split.split_point)
+
+    def _sync_overlap_from_device(self, device, server):
+        """Copy the device-trained overlap layers [p_min, p_max) from the
+        global device stack into the server block's loose region.  The
+        server block was carved at model init; the device phase has since
+        trained those layers on-device for the deeper buckets, so server
+        training must start from the converged copies."""
+        p_min = self.run.split.split_point
+        p_max = self.cuts.depths[-1]
+        key = "layers_head" if self.model.kind == "lm" else "layers"
+        lst = list(server[key])
+        for layer in range(p_min, p_max):
+            lst[layer - p_min] = device["layers"][layer]
+        out = dict(server)
+        out[key] = lst
+        return out
+
+    def _run_server_phase_hetero(self, dev_state, srv_params,
+                                 store: ActivationStore,
+                                 max_epochs: Optional[int] = None):
+        """Server phase over a heterogeneous-cut consolidated pool.
+
+        Shards are bucketed by their cut tag; each epoch runs one donated
+        scan per depth over that bucket's pool with the scan *entering*
+        the server block at that depth (:func:`steps.make_server_epoch_fn`
+        ``entry=``), in sorted-depth order so the store's rng stream
+        stays deterministic.  Before training starts the device-trained
+        overlap layers are synced into the server block's loose region.
+        The pool must fit the device budget — there is no host-streaming
+        fallback for per-bucket epochs.
+        """
+        run = self.run
+        srv_params = self._sync_overlap_from_device(dev_state["device"],
+                                                    srv_params)
+        srv_state = steps.init_server_state(self.model, run, srv_params)
+        srv_state, start_epoch = self.runner.restore("server", srv_state,
+                                                     step_name="epoch")
+        merged_model = build_model(splitting.merged_config(self.model))
+        eval_step = evaluate.make_eval_step(merged_model)
+        epochs = max_epochs if max_epochs is not None \
+            else run.fed.server_epochs
+
+        bs = run.fed.server_batch_size
+        budget = run.device_pool_budget_mb * 2 ** 20
+        if store.pool_nbytes() > budget:
+            raise ValueError(
+                f"heterogeneous-cut pool ({store.pool_nbytes()} bytes) "
+                f"exceeds device_pool_budget_mb={run.device_pool_budget_mb}"
+                "; per-bucket server epochs require a resident pool")
+        present = [d for d in store.cut_depths()
+                   if store.num_samples(cut=d) > 0]
+        if not present:
+            raise ValueError("heterogeneous server phase: store has no "
+                             "cut-tagged activation shards")
+        pools = {d: {k: jnp.asarray(v) for k, v in
+                     store.pool(dequantize=False, cut=d).items()}
+                 for d in present}
+        epoch_fns = {d: jax.jit(
+                         steps.make_server_epoch_fn(self.model, run,
+                                                    entry=int(d)),
+                         donate_argnums=(0,))
+                     for d in present}
+        # the epoch fns donate their input state; copy once so the
+        # caller's srv_params buffers survive the first donation
+        srv_state = jax.tree.map(lambda a: jnp.array(a), srv_state)
+
+        # each bucket's scan prices at its own depth's layer count and
+        # activation volume; the serialized epoch is their sum
+        epoch_sim_time = sum(
+            comm_model.ampere_server_epoch_time(
+                self.model, self._run_by_depth[d].split,
+                comm_model.TimeModel(),
+                n_samples=store.num_samples(cut=d),
+                seq_len=self._seq_len(), sizes=self._sizes_by_depth[d])
+            for d in present)
+
+        def body(srv_state, epoch, _plan):
+            ls = []
+            for d in present:       # sorted order: deterministic rng draws
+                n_d = store.num_samples(cut=d)
+                bs_d = min(bs, n_d)
+                idx = jnp.asarray(store.epoch_indices(bs_d, cut=d))
+                srv_state, losses = epoch_fns[d](srv_state, pools[d], idx)
+                ls.append(np.asarray(losses, np.float64))
+            ls = np.concatenate(ls) if ls else np.zeros((0,), np.float64)
+            merged = self.merged_params(dev_state, srv_state["server"])
+            with self.obs.tracer.span("merged_eval", track="eval",
+                                      epoch=epoch) as esp:
+                val = evaluate.evaluate(merged_model, merged, self.eval_data,
+                                        eval_step=eval_step)
+                esp.set(val_loss=val["loss"], val_acc=val["acc"])
+            return StepOutcome(
+                state=srv_state,
+                record={"epoch": epoch, "loss": float(np.mean(ls)),
+                        "val_loss": val["loss"], "val_acc": val["acc"]},
+                sim_time=epoch_sim_time)
 
         return self.runner.run_phase(
             "server", srv_state,

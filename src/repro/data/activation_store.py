@@ -16,6 +16,14 @@ Backends: in-memory (CPU experiments) or disk shards
 (``<dir>/client_<k>_<i>.npz``, atomic rename) with optional int8
 quantization of the payload (beyond-paper, cuts the one-shot transfer 4x
 vs fp32 — accounted in the comm model).
+
+Heterogeneous cuts: each shard may carry a *cut depth* tag (the layer its
+activations were produced at).  Tags live in a parallel in-memory index —
+shard payloads stay byte-identical to the untagged path — and every pool
+surface (``pool`` / ``num_samples`` / ``epoch_indices``) accepts
+``cut=`` to address one depth bucket, so the trainer can run server
+epochs with per-bucket entry points.  Disk shards do not persist tags;
+``load_store`` restarts are uniform-cut only.
 """
 
 from __future__ import annotations
@@ -37,6 +45,8 @@ class ActivationStore:
         self.quantize = quantize_int8
         self.rng = np.random.default_rng(seed)
         self._mem: Dict[int, List[dict]] = {}
+        # cut-depth tag per shard, parallel to _mem (None = untagged)
+        self._cut_tags: Dict[int, List[Optional[int]]] = {}
         self._lock = threading.Lock()
         # bounded: a producer outrunning the writer blocks on put() —
         # legacy mode exerts backpressure too, not just the ring store
@@ -65,9 +75,10 @@ class ActivationStore:
                 break
             self._store(*item)
 
-    def submit(self, client_id: int, shard: dict):
+    def submit(self, client_id: int, shard: dict,
+               cut: Optional[int] = None):
         """Async upload path (used with start_writer)."""
-        self._q.put((client_id, shard))
+        self._q.put((client_id, shard, cut))
 
     def finish(self):
         if self._writer is not None:
@@ -80,9 +91,9 @@ class ActivationStore:
     # finish() remains the Algorithm-1 name for the same transition
     close = finish
 
-    def add(self, client_id: int, shard: dict):
+    def add(self, client_id: int, shard: dict, cut: Optional[int] = None):
         """Synchronous upload (tests / simple drivers)."""
-        self._store(client_id, shard)
+        self._store(client_id, shard, cut)
 
     @staticmethod
     def shard_nbytes(shard: dict, quantize: bool) -> int:
@@ -121,11 +132,14 @@ class ActivationStore:
                       if k not in ("acts", "acts_scale"))
         return shard, nbytes
 
-    def _store(self, client_id: int, shard: dict):
+    def _store(self, client_id: int, shard: dict,
+               cut: Optional[int] = None):
         shard, nbytes = self.prepare_shard(shard, self.quantize)
         assert nbytes == self.shard_nbytes(shard, self.quantize)
         with self._lock:
             self._mem.setdefault(int(client_id), []).append(shard)
+            self._cut_tags.setdefault(int(client_id), []).append(
+                None if cut is None else int(cut))
             self.bytes_received += nbytes
         if self.dir:
             i = len(self._mem[int(client_id)]) - 1
@@ -137,28 +151,46 @@ class ActivationStore:
     # ------------------------------------------------------------------
     # Subprocess 2: load for training
     # ------------------------------------------------------------------
-    def _shards(self, client_id: Optional[int] = None) -> List[dict]:
-        """Snapshot of the shard list (all clients or one) under the lock
-        — the single source for pool assembly, counting and sizing."""
+    def _shards(self, client_id: Optional[int] = None,
+                cut: Optional[int] = None) -> List[dict]:
+        """Snapshot of the shard list (all clients or one, optionally one
+        cut bucket) under the lock — the single source for pool assembly,
+        counting and sizing.  Client iteration keeps dict insertion order
+        so the consolidated pool layout is unchanged by the tag index."""
         with self._lock:
-            if client_id is None:
-                return [s for lst in self._mem.values() for s in lst]
-            return list(self._mem.get(int(client_id), []))
+            cids = list(self._mem) if client_id is None else [int(client_id)]
+            out = []
+            for c in cids:
+                lst = self._mem.get(c, [])
+                if cut is None:
+                    out.extend(lst)
+                    continue
+                tags = self._cut_tags.get(c, [])
+                out.extend(s for i, s in enumerate(lst)
+                           if (tags[i] if i < len(tags) else None) == cut)
+            return out
 
-    def _pool(self, client_id: Optional[int] = None) -> dict:
-        shards = self._shards(client_id)
+    def cut_depths(self) -> List[int]:
+        """Sorted distinct cut tags present (untagged shards excluded)."""
+        with self._lock:
+            return sorted({t for tags in self._cut_tags.values()
+                           for t in tags if t is not None})
+
+    def _pool(self, client_id: Optional[int] = None,
+              cut: Optional[int] = None) -> dict:
+        shards = self._shards(client_id, cut)
         if not shards:
             return {}
         keys = shards[0].keys()
         return {k: np.concatenate([s[k] for s in shards]) for k in keys}
 
     def pool(self, client_id: Optional[int] = None,
-             dequantize: bool = False) -> dict:
-        """The full consolidated (or per-client) pool as one dict of
-        arrays.  With ``dequantize=False`` an int8 payload stays quantized
-        (plus its ``acts_scale``) — the device-resident server phase
-        uploads it as-is and dequantizes inside the jitted step."""
-        p = self._pool(client_id)
+             dequantize: bool = False, cut: Optional[int] = None) -> dict:
+        """The full consolidated (or per-client / per-cut) pool as one
+        dict of arrays.  With ``dequantize=False`` an int8 payload stays
+        quantized (plus its ``acts_scale``) — the device-resident server
+        phase uploads it as-is and dequantizes inside the jitted step."""
+        p = self._pool(client_id, cut)
         return self._dequant(p) if (dequantize and p) else p
 
     def pool_nbytes(self, client_id: Optional[int] = None) -> int:
@@ -170,20 +202,24 @@ class ActivationStore:
                    for s in self._shards(client_id) for v in s.values())
 
     def epoch_indices(self, batch_size: int,
-                      client_id: Optional[int] = None) -> np.ndarray:
+                      client_id: Optional[int] = None,
+                      cut: Optional[int] = None) -> np.ndarray:
         """(nb, batch_size) int32 gather indices for one shuffled epoch.
 
         Consumes exactly one ``rng.permutation`` — the same draw (and the
         same batch membership, trailing remainder dropped) as one
         :meth:`batches` epoch, so a store seeded identically yields
-        bit-identical batch order on either path."""
-        n = self.num_samples(client_id)
+        bit-identical batch order on either path.  With ``cut=`` the
+        indices address that bucket's pool; callers draw buckets in
+        sorted-depth order so the rng stream stays deterministic."""
+        n = self.num_samples(client_id, cut)
         order = self.rng.permutation(n)
         nb = n // batch_size
         return order[:nb * batch_size].reshape(nb, batch_size).astype(np.int32)
 
-    def num_samples(self, client_id: Optional[int] = None) -> int:
-        return sum(len(s["acts"]) for s in self._shards(client_id))
+    def num_samples(self, client_id: Optional[int] = None,
+                    cut: Optional[int] = None) -> int:
+        return sum(len(s["acts"]) for s in self._shards(client_id, cut))
 
     def clients(self) -> List[int]:
         with self._lock:

@@ -36,9 +36,52 @@ def _history_summary(history: dict) -> dict:
     return out
 
 
+def resolve_cut_policy(spec: ExperimentSpec, model, *, seq_len: int = 0):
+    """Resolve ``spec.cut`` into a per-client cut assignment.
+
+    Returns ``(spec, cuts, cut_summary)``.  A resolved assignment that is
+    *uniform* (every device class picked the same depth) is collapsed
+    onto ``run.split.split_point`` and ``cuts=None`` is returned, so the
+    legacy single-cut path runs byte-identically; a heterogeneous
+    assignment rewrites ``split_point`` to the shallowest cut (where the
+    server block is carved) and hands the assignment to the trainer.
+    Heterogeneous cuts are Ampere-only — the SFL baselines' round steps
+    compile at one fixed split.
+    """
+    import dataclasses
+
+    if spec.cut is None or spec.cut.mode == "static":
+        return spec, None, None
+    if spec.fleet is None:
+        raise ValueError(
+            "cut.mode='per_profile' needs spec.fleet — the device classes "
+            "whose cost frontier picks each cut")
+    from repro.fleet.cuts import resolve_cuts
+
+    assignment = resolve_cuts(spec.cut, model, spec.run, spec.fleet,
+                              seq_len=seq_len)
+    cut_summary = assignment.summary()
+    p = assignment.depths[0]
+    if p != spec.run.split.split_point:
+        spec = dataclasses.replace(
+            spec, run=dataclasses.replace(
+                spec.run, split=dataclasses.replace(
+                    spec.run.split, split_point=int(p))))
+    if assignment.uniform:
+        return spec, None, cut_summary
+    if sorted(set(spec.systems)) != ["ampere"]:
+        raise ValueError(
+            f"heterogeneous resolved cuts {cut_summary['by_class']} are "
+            f"ampere-only; drop {sorted(set(spec.systems) - {'ampere'})} "
+            "from spec.systems or constrain the policy (min_cut/max_cut/"
+            "overrides) to a uniform depth")
+    return spec, assignment, cut_summary
+
+
 def resolve_trace(spec: ExperimentSpec, model, run_cfg, *,
-                  seq_len: int = 0) -> Tuple[Optional[object],
-                                             Optional[list]]:
+                  seq_len: int = 0,
+                  cuts=None) -> Tuple[Optional[object],
+                                      Optional[list]]:
     """(trace, population) for a spec, or (None, None) without a fleet.
 
     Prefers loading the JSONL at ``spec.trace_path``; otherwise simulates
@@ -75,7 +118,8 @@ def resolve_trace(spec: ExperimentSpec, model, run_cfg, *,
     if spec.fleet is None:
         raise FileNotFoundError(
             f"trace_path {spec.trace_path!r} missing and spec.fleet is null")
-    lat = make_latency_fn(model, run_cfg, algo="ampere", seq_len=seq_len)
+    lat = make_latency_fn(model, run_cfg, algo="ampere", seq_len=seq_len,
+                          cuts=cuts)
     sim_cfg = spec.fleet if spec.fleet.async_buffer_size == 0 else \
         dataclasses.replace(spec.fleet, async_buffer_size=0)
     trace = FleetScheduler(population, lat, sim_cfg).simulate(rounds)
@@ -157,7 +201,10 @@ def run_experiment(spec: ExperimentSpec, *, log_echo: bool = False,
     spec, model, clients, eval_data = resolve_setup(spec)
     seq = int(eval_data.arrays["tokens"].shape[1]) if model.kind == "lm" \
         else 0
-    trace, population = resolve_trace(spec, model, spec.run, seq_len=seq)
+    spec, cuts, cut_summary = resolve_cut_policy(spec, model, seq_len=seq)
+    trace, population = resolve_trace(
+        spec, model, spec.run, seq_len=seq,
+        cuts=cuts.by_class if cuts is not None else None)
 
     results_dir = spec.results_dir or os.path.join("results", spec.name)
     obs_spec = spec.observability
@@ -178,7 +225,7 @@ def run_experiment(spec: ExperimentSpec, *, log_echo: bool = False,
             transport=transport,
             quorum_frac=(spec.transport.quorum_frac
                          if spec.transport is not None else 1.0),
-            obs=obs, streaming=spec.streaming)
+            obs=obs, streaming=spec.streaming, cuts=cuts)
         system = sys_cls()
         system.on_start(ctx)
         try:
@@ -192,6 +239,8 @@ def run_experiment(spec: ExperimentSpec, *, log_echo: bool = False,
         system.on_finish(ctx, result)
         results[name] = result
         summary[name] = _history_summary(result["history"])
+        if cut_summary is not None:
+            summary[name]["cuts"] = cut_summary
         if transport is not None:
             # "bytes actually moved, retries included" alongside the
             # analytic history totals

@@ -25,6 +25,7 @@ from dataclasses import dataclass, field
 from typing import Any, Optional, Tuple
 
 from repro.configs.base import RunConfig
+from repro.fleet.cuts import CutPolicy
 from repro.fleet.profiles import FleetConfig
 from repro.transport.faults import FaultSpec
 from repro.transport.retry import RetryPolicy
@@ -252,6 +253,9 @@ class ExperimentSpec:
     # is generated once and replayed everywhere)
     trace_path: Optional[str] = None
     fleet: Optional[FleetConfig] = None
+    # adaptive cut-layer selection (optional; None/static = the legacy
+    # single split_point for every device)
+    cut: Optional[CutPolicy] = None
     # budgets
     max_rounds: Optional[int] = None          # None = run.fed.device_epochs
     max_server_epochs: Optional[int] = None   # None = run.fed.server_epochs
@@ -309,9 +313,27 @@ class ExperimentSpec:
             if s not in known:
                 problems.append(
                     f"unknown system {s!r}; registered: {sorted(known)}")
+        num_layers = None
         if self.arch not in registry.list_archs():
             problems.append(f"unknown arch {self.arch!r}; known: "
                             f"{registry.list_archs()}")
+        else:
+            cfg = registry.get_smoke_config(self.arch) if self.smoke \
+                else registry.get_config(self.arch)
+            num_layers = cfg.num_layers
+            sp = self.run.split.split_point
+            if not 1 <= sp <= num_layers - 1:
+                problems.append(
+                    f"run.split.split_point={sp} outside [1, "
+                    f"{num_layers - 1}] for arch {self.arch!r} "
+                    f"({num_layers} layers: the device block needs at "
+                    "least one layer and the server block keeps one)")
+        if self.cut is not None:
+            problems.extend(self.cut.validate(num_layers))
+            if self.cut.mode == "per_profile" and self.fleet is None:
+                problems.append(
+                    "cut.mode='per_profile' needs a fleet section — the "
+                    "device classes whose cost frontier picks each cut")
         if self.data.train_samples <= 0 or self.data.eval_samples <= 0:
             problems.append("data.train_samples / eval_samples must be > 0")
         if self.max_rounds is not None and self.max_rounds < 1:

@@ -60,6 +60,7 @@ class SystemContext:
     quorum_frac: float = 1.0       # verified-upload fraction closing a round
     obs: Any = None                # Observability bundle (None = NULL_OBS)
     streaming: Any = None          # StreamingSpec (None = serialized store)
+    cuts: Any = None               # CutAssignment (None/uniform = legacy)
 
     @property
     def seq_len(self) -> int:
@@ -162,7 +163,7 @@ class AmpereSystem(System):
                 ctx.model, ctx.run_cfg, ctx.clients, ctx.eval_data,
                 workdir=ctx.workdir, patience=ctx.patience,
                 log_echo=ctx.log_echo, transport=ctx.transport,
-                quorum_frac=ctx.quorum_frac, obs=ctx.obs)
+                quorum_frac=ctx.quorum_frac, obs=ctx.obs, cuts=ctx.cuts)
         return ctx.trainer
 
     def init_state(self, ctx: SystemContext, key):
@@ -209,8 +210,6 @@ class AmpereSystem(System):
             seed=tr.run.seed)
 
     def run(self, ctx: SystemContext) -> dict:
-        from repro.core import splitting
-
         tr = self._trainer(ctx)
         key = ctx.key if ctx.key is not None \
             else jax.random.PRNGKey(tr.run.seed)
@@ -227,9 +226,7 @@ class AmpereSystem(System):
             client_bandwidth_bps=bw)
         srv_state = tr.run_server_phase(dev_state, srv, store,
                                         ctx.max_server_epochs)
-        merged = splitting.merge_params(tr.model, dev_state["device"],
-                                        srv_state["server"],
-                                        tr.run.split.split_point)
+        merged = tr.merged_params(dev_state, srv_state["server"])
         return {"device_state": dev_state, "server_state": srv_state,
                 "merged_params": merged, "history": tr.history}
 

@@ -120,6 +120,12 @@ class FleetConfig:
     # recorded as dropped) instead of waiting for the slowest survivor.
     # 1.0 = classic full-quorum behavior.
     quorum_frac: float = 1.0
+    # shared uplink: devices of one class contend for that class's link,
+    # so the comm share of a dispatch is multiplied by the number of
+    # same-class devices uploading concurrently.  Requires a latency_fn
+    # that exposes ``.parts`` (see make_latency_fn); off by default so
+    # committed traces priced with independent links stay byte-identical.
+    shared_uplink: bool = False
 
 
 def sample_population(cfg: FleetConfig,
@@ -148,27 +154,59 @@ def sample_population(cfg: FleetConfig,
 
 
 def make_latency_fn(model, run_cfg, *, algo: str = "ampere",
-                    seq_len: int = 0) -> Callable[[DeviceProfile], float]:
+                    seq_len: int = 0,
+                    cuts=None) -> Callable[[DeviceProfile], float]:
     """Per-round latency of one device, through the paper's cost model.
 
     One federated round processes ``local_steps * device_batch_size``
     samples on the device; :func:`comm_model.epoch_time` prices the local
     compute plus the per-round exchange traffic of ``algo`` (model-only for
     Ampere; activations+gradients every iteration for the SFL family).
-    ``split_sizes`` is evaluated once and shared across all profiles.
+    ``split_sizes`` is evaluated once per distinct cut and shared across
+    all profiles.
+
+    ``cuts`` maps device-class name -> cut layer (a resolved
+    :class:`repro.fleet.cuts.CutAssignment.by_class`); classes not in the
+    map fall back to ``run_cfg.split.split_point``.  The returned callable
+    carries a ``.parts(profile) -> (compute_s, comm_s)`` attribute
+    (:func:`comm_model.epoch_time_parts`) so the scheduler can stretch
+    only the link-bound share under ``FleetConfig.shared_uplink``.
     """
     fed = run_cfg.fed
-    sizes = comm_model.split_sizes(model, run_cfg.split,
-                                   seq_len=max(seq_len, 1))
     n_round_samples = fed.local_steps * fed.device_batch_size
 
+    split_by_class = {}
+    if cuts:
+        for name, p in dict(cuts).items():
+            split_by_class[name] = dataclasses.replace(
+                run_cfg.split, split_point=int(p))
+    sizes_cache = {}
+
+    def _split_and_sizes(profile: DeviceProfile):
+        split_cfg = split_by_class.get(profile.cls, run_cfg.split)
+        p = split_cfg.split_point
+        if p not in sizes_cache:
+            sizes_cache[p] = comm_model.split_sizes(model, split_cfg,
+                                                    seq_len=max(seq_len, 1))
+        return split_cfg, sizes_cache[p]
+
     def latency(profile: DeviceProfile) -> float:
+        split_cfg, sizes = _split_and_sizes(profile)
         tm = comm_model.TimeModel(device_gflops=profile.gflops,
                                   bandwidth=profile.bandwidth_bps)
         return comm_model.epoch_time(
-            algo, model, run_cfg.split, tm, n_samples=n_round_samples,
+            algo, model, split_cfg, tm, n_samples=n_round_samples,
             batch_size=fed.device_batch_size, seq_len=seq_len, sizes=sizes)
 
+    def parts(profile: DeviceProfile):
+        split_cfg, sizes = _split_and_sizes(profile)
+        tm = comm_model.TimeModel(device_gflops=profile.gflops,
+                                  bandwidth=profile.bandwidth_bps)
+        return comm_model.epoch_time_parts(
+            algo, model, split_cfg, tm, n_samples=n_round_samples,
+            batch_size=fed.device_batch_size, seq_len=seq_len, sizes=sizes)
+
+    latency.parts = parts
     return latency
 
 

@@ -249,6 +249,17 @@ class FleetScheduler:
         self._lat = {p.device_id: float(latency_fn(p)) for p in self.pop}
         self.base_latency = float(np.median(list(self._lat.values())))
         self._by_id = {p.device_id: p for p in self.pop}
+        # opt-in shared-uplink contention: a device class's profiled
+        # bandwidth is one shared link, so N same-class concurrent
+        # uploaders each see comm stretched N-fold.  Needs the latency
+        # split into (compute, comm) — make_latency_fn exposes ``.parts``;
+        # with a plain-lambda latency fn (or shared_uplink=False) the
+        # legacy whole-latency pricing is untouched.
+        self._parts = None
+        parts_fn = getattr(latency_fn, "parts", None)
+        if self.cfg.shared_uplink and parts_fn is not None:
+            self._parts = {p.device_id: tuple(float(x) for x in parts_fn(p))
+                           for p in self.pop}
         self._reset()
 
     def _reset(self):
@@ -351,14 +362,23 @@ class FleetScheduler:
 
         return handle
 
-    def _price_dispatch(self, d, now, next_offline):
+    def _price_dispatch(self, d, now, next_offline, n_shared: int = 1):
         """Jittered latency + failure time for one dispatched device.
 
         ``fail_t`` is None when the device will complete; otherwise the
         earlier of its scheduled churn-off and a mid-round hazard draw.
+        ``n_shared`` (shared-uplink mode only) is the number of same-class
+        devices transferring concurrently — the comm term stretches
+        ``n_shared``-fold while compute is unaffected.  Exactly one rng
+        draw either way, so legacy schedules replay bit-identically.
         """
-        lat = self._lat[d] * (1.0 + self.cfg.latency_jitter
-                              * self.rng.random())
+        if self._parts is not None and n_shared > 1:
+            comp, comm = self._parts[d]
+            lat = (comp + comm * n_shared) * (1.0 + self.cfg.latency_jitter
+                                              * self.rng.random())
+        else:
+            lat = self._lat[d] * (1.0 + self.cfg.latency_jitter
+                                  * self.rng.random())
         done_t = now + lat
         fail_t = None
         if next_offline.get(d, np.inf) <= done_t:
@@ -405,12 +425,21 @@ class FleetScheduler:
                                      replace=False)
             nonlocal cur
             cur = _Round(cur.idx, now, K)
+            # shared uplink: every chosen same-class device exchanges its
+            # model at round start concurrently, splitting the class link
+            n_cls = None
+            if self._parts is not None:
+                n_cls = {}
+                for c in chosen:
+                    cls = self._by_id[int(c)].cls
+                    n_cls[cls] = n_cls.get(cls, 0) + 1
             lats = []
             for d in (int(c) for c in chosen):
                 busy.add(d)
                 events.append((now, "assign", d, cur.idx))
-                lat, done_t, fail_t = self._price_dispatch(d, now,
-                                                           next_offline)
+                lat, done_t, fail_t = self._price_dispatch(
+                    d, now, next_offline,
+                    n_cls[self._by_id[d].cls] if n_cls else 1)
                 lats.append(lat)
                 cur.expected[d] = done_t
                 if fail_t is not None:
@@ -590,8 +619,15 @@ class FleetScheduler:
             for d in (int(c) for c in chosen):
                 in_flight[d] = version[0]
                 events.append((now, "assign", d, version[0]))
-                _, done_t, fail_t = self._price_dispatch(d, now,
-                                                         next_offline)
+                n_shared = 1
+                if self._parts is not None:
+                    # async: the class link is split among all in-flight
+                    # same-class devices at dispatch time
+                    cls = self._by_id[d].cls
+                    n_shared = sum(1 for x in in_flight
+                                   if self._by_id[x].cls == cls)
+                _, done_t, fail_t = self._price_dispatch(
+                    d, now, next_offline, n_shared)
                 if fail_t is not None:
                     push(fail_t, "dropout", d, version[0])
                 else:

@@ -130,7 +130,9 @@ class Baseline:
 
     @classmethod
     def from_findings(cls, findings: Sequence[Finding],
-                      reason: str = "TODO: justify") -> "Baseline":
+                      reason: str) -> "Baseline":
+        """``reason`` is required: every accepted finding carries an
+        explicit justification into the committed baseline."""
         return cls([BaselineEntry(fingerprint=f.fingerprint, rule=f.rule,
                                   path=f.path, context=f.context,
                                   reason=reason)

@@ -8,6 +8,7 @@ window between producer and consumer:
 * **Atomic header commit with CRC** (the PR 6 storage conventions): a
   segment is payload bytes followed by a fixed header written *last* —
   magic, ring version, client id, sample count, simulated arrival time,
+  cut depth (the split layer the activations were produced at),
   payload length, payload CRC32, and a CRC32 over the header itself.
   A reader only trusts a segment whose header CRC *and* payload CRC
   verify; a torn write (crash or injected via
@@ -52,10 +53,14 @@ import numpy as np
 from repro.observability import NULL_OBS
 from repro.transport.framing import crc32
 
-MAGIC = b"ARS1"
+MAGIC = b"ARS2"
 # magic(4) | version u64 | client i64 | n_samples u64 | t_arrival f64
-# | payload_len u64 | payload_crc u32 | header_crc u32
-_HEADER = struct.Struct(">4sQqQdQII")
+# | cut i64 | payload_len u64 | payload_crc u32 | header_crc u32
+# ARS2 added the cut field (the split depth the shard's activations were
+# produced at; -1 = untagged) — `version` stays producer-suppliable and
+# semantically owned by the FedBuff VersionRing, so the cut could not
+# ride on it.
+_HEADER = struct.Struct(">4sQqQdqQII")
 HEADER_SIZE = _HEADER.size
 
 
@@ -127,22 +132,23 @@ class SegmentMeta:
     """Decoded trusted header of one committed segment."""
 
     __slots__ = ("seq", "version", "client", "n_samples", "t_arrival",
-                 "payload_len")
+                 "cut", "payload_len")
 
     def __init__(self, seq, version, client, n_samples, t_arrival,
-                 payload_len):
+                 cut, payload_len):
         self.seq = seq
         self.version = version
         self.client = client
         self.n_samples = n_samples
         self.t_arrival = t_arrival
+        self.cut = cut              # split depth; -1 = untagged
         self.payload_len = payload_len
 
 
 def _pack_header(version: int, client: int, n_samples: int,
-                 t_arrival: float, payload: bytes) -> bytes:
+                 t_arrival: float, cut: int, payload: bytes) -> bytes:
     body = _HEADER.pack(MAGIC, version, client, n_samples, t_arrival,
-                        len(payload), crc32(payload), 0)[:-4]
+                        cut, len(payload), crc32(payload), 0)[:-4]
     return body + struct.pack(">I", crc32(body))
 
 
@@ -251,7 +257,7 @@ class ActivationRing:
             raise TornSegment(f"segment {seq}: short header "
                               f"({len(blob)} bytes)")
         head = bytes(memoryview(blob)[:HEADER_SIZE])
-        magic, version, client, n_samples, t_arr, plen, pcrc, hcrc = \
+        magic, version, client, n_samples, t_arr, cut, plen, pcrc, hcrc = \
             _HEADER.unpack(head)
         if magic != MAGIC:
             raise TornSegment(f"segment {seq}: bad magic {magic!r}")
@@ -263,12 +269,13 @@ class ActivationRing:
         payload = memoryview(blob)[HEADER_SIZE:HEADER_SIZE + plen]
         if crc32(bytes(payload)) != pcrc:
             raise TornSegment(f"segment {seq}: payload CRC mismatch")
-        return SegmentMeta(seq, version, client, n_samples, t_arr, plen)
+        return SegmentMeta(seq, version, client, n_samples, t_arr, cut, plen)
 
     def try_put(self, client: int, shard: Dict[str, np.ndarray], *,
                 version: Optional[int] = None,
                 t_arrival: float = 0.0,
-                n_samples: Optional[int] = None) -> bool:
+                n_samples: Optional[int] = None,
+                cut: int = -1) -> bool:
         """Commit one shard as the next segment; ``False`` if the gate is
         closed (backpressure) — never blocks."""
         with self._cond:
@@ -285,7 +292,7 @@ class ActivationRing:
         ver = seq if version is None else int(version)
         payload = encode_shard(shard)
         header = _pack_header(ver, int(client), int(n_samples),
-                              float(t_arrival), payload)
+                              float(t_arrival), int(cut), payload)
         self._write_segment(seq, header, payload)
         # verify-after-commit: an injected (or real) tear fails the CRC
         # here and the segment is rewritten cleanly — the consumer never
@@ -325,14 +332,16 @@ class ActivationRing:
 
     def put(self, client: int, shard: Dict[str, np.ndarray], *,
             version: Optional[int] = None, t_arrival: float = 0.0,
-            n_samples: Optional[int] = None, timeout: float = 30.0):
+            n_samples: Optional[int] = None, cut: int = -1,
+            timeout: float = 30.0):
         """Blocking append: waits out backpressure until the consumer
         drains below the low watermark (real-thread mode)."""
         import time
         deadline = time.monotonic() + timeout
         while True:
             if self.try_put(client, shard, version=version,
-                            t_arrival=t_arrival, n_samples=n_samples):
+                            t_arrival=t_arrival, n_samples=n_samples,
+                            cut=cut):
                 return
             t0 = time.monotonic()
             with self._cond:

@@ -68,18 +68,20 @@ class StreamingActivationStore(ActivationStore):
     def start_writer(self):
         """No writer thread: the ring IS the async boundary."""
 
-    def submit(self, client_id: int, shard: dict, t_arrival: float = 0.0):
+    def submit(self, client_id: int, shard: dict, t_arrival: float = 0.0,
+               cut: Optional[int] = None):
         shard, nbytes = self.prepare_shard(shard, self.quantize)
         assert nbytes == self.shard_nbytes(shard, self.quantize)
         while not self.ring.try_put(int(client_id), shard,
-                                    t_arrival=t_arrival):
+                                    t_arrival=t_arrival,
+                                    cut=-1 if cut is None else int(cut)):
             # backpressure: the learner drains a seeded chunk of the
             # oldest committed segments, reopening the gate at the low
             # watermark — deterministic single-process interleaving
             self.drain(self.schedule.next_drain())
 
-    def add(self, client_id: int, shard: dict):
-        self.submit(client_id, shard)
+    def add(self, client_id: int, shard: dict, cut: Optional[int] = None):
+        self.submit(client_id, shard, cut=cut)
 
     def finish(self):
         self.ring.close()
@@ -103,6 +105,8 @@ class StreamingActivationStore(ActivationStore):
             nbytes = sum(np.asarray(v).nbytes for v in shard.values())
             with self._lock:
                 self._mem.setdefault(meta.client, []).append(shard)
+                self._cut_tags.setdefault(meta.client, []).append(
+                    None if meta.cut < 0 else int(meta.cut))
                 self.bytes_received += nbytes
                 self.arrivals.append((meta.n_samples, meta.t_arrival))
             self.ring.ack(self._next_seq)

@@ -260,13 +260,23 @@ def cohort_exchange(transport: Optional[InProcessTransport], *,
     legacy analytic accounting exactly: all clients kept,
     ``2 * len(clients) * one_way_bytes`` wire bytes, zero extra time.
     ``bandwidth_bps`` may be a scalar or a ``{device_id: bps}`` map.
+    ``one_way_bytes`` may be a scalar (every client moves the same
+    payload) or a per-client sequence aligned with ``clients`` — a
+    heterogeneous-cut fleet exchanges a different device block per cut.
     """
     ids = [int(c) for c in clients]
-    one_way_bytes = int(one_way_bytes)
+    try:
+        per_client = [int(one_way_bytes)] * len(ids)
+    except TypeError:
+        per_client = [int(b) for b in one_way_bytes]
+        if len(per_client) != len(ids):
+            raise ValueError(
+                f"one_way_bytes: {len(per_client)} entries for "
+                f"{len(ids)} clients")
     if not ids:
         return [], 0, 0.0, []
     if transport is None:
-        return list(range(len(ids))), 2 * len(ids) * one_way_bytes, 0.0, []
+        return list(range(len(ids))), 2 * sum(per_client), 0.0, []
     kept: List[int] = []
     excluded: List[int] = []
     wire = 0
@@ -274,9 +284,9 @@ def cohort_exchange(transport: Optional[InProcessTransport], *,
     for i, cid in enumerate(ids):
         bw = (bandwidth_bps.get(cid) if isinstance(bandwidth_bps, dict)
               else bandwidth_bps)
-        down = transport.transfer(f"{round_key}/down/{cid}", one_way_bytes,
+        down = transport.transfer(f"{round_key}/down/{cid}", per_client[i],
                                   device=cid, bandwidth_bps=bw, phase=phase)
-        up = transport.transfer(f"{round_key}/up/{cid}", one_way_bytes,
+        up = transport.transfer(f"{round_key}/up/{cid}", per_client[i],
                                 device=cid, bandwidth_bps=bw, phase=phase)
         wire += down.wire_bytes + up.wire_bytes
         extra = max(extra, down.extra_time + up.extra_time)

@@ -457,6 +457,109 @@ def test_suite_shared_trace_drives_all_systems(tmp_path):
         out["results"]["fedbuff"]["history"]["device"]
 
 
+# ---------------------------------------------------------------------------
+# adaptive cuts: uniform per_profile collapses to static; two-depth fleets
+# consolidate/train/aggregate end-to-end
+# ---------------------------------------------------------------------------
+
+
+def _cut_fleet(**kw):
+    base = dict(n_devices=6, seed=0,
+                class_mix=(("jetson-fast", 0.5), ("phone-3g", 0.5)),
+                mean_session_rounds=20.0, mean_off_rounds=0.5,
+                p_online0=1.0, dropout_hazard=0.0,
+                min_cohort=2, max_cohort=3, init_cohort=3)
+    base.update(kw)
+    return FleetConfig(**base)
+
+
+def test_uniform_per_profile_matches_static():
+    """A per_profile policy that resolves to one depth (vit-s: activation
+    bytes are depth-flat, so every class picks the shallowest cut) must
+    collapse onto the legacy static path byte-identically — for Ampere
+    and for an SFL baseline."""
+    from repro.fleet.cuts import CutPolicy
+
+    systems = ("ampere", "splitfed")
+    per_prof = _spec(systems=systems, fleet=_cut_fleet(),
+                     cut=CutPolicy(mode="per_profile"))
+    out = run_experiment(per_prof, write_results=False)
+    cuts = out["summary"]["ampere"]["cuts"]
+    assert cuts["uniform"], cuts
+    p = cuts["depths"][0]
+
+    static = _spec(systems=systems, fleet=_cut_fleet())
+    static = replace(static, run=replace(
+        static.run, split=replace(static.run.split, split_point=p)))
+    base = run_experiment(static, write_results=False)
+    for name in systems:
+        assert out["results"][name]["history"] == \
+            base["results"][name]["history"]
+        assert "cuts" not in base["summary"][name]
+
+
+def test_two_depth_fleet_runs_end_to_end():
+    """Overrides pin phone-3g one layer deeper than the cost model's pick
+    (smoke-scale device compute is negligible, so the analytic frontier
+    alone resolves uniform): the run must shard activations by depth,
+    train the server block from both entry points, and aggregate the
+    heterogeneous device blocks over their shared prefix."""
+    from repro.fleet.cuts import CutPolicy
+
+    spec = _spec(
+        name="two_depth", arch="mobilenet-l",
+        run=replace(_run_cfg(), arch="mobilenet-l"),
+        fleet=_cut_fleet(),
+        cut=CutPolicy(mode="per_profile", overrides=(("phone-3g", 2),)))
+    out = run_experiment(spec, write_results=False)
+    cuts = out["summary"]["ampere"]["cuts"]
+    assert not cuts["uniform"] and cuts["depths"] == [1, 2], cuts
+    # the server block is carved at the shallowest cut
+    assert out["spec"].run.split.split_point == 1
+    hist = out["results"]["ampere"]["history"]
+    assert [r["round"] for r in hist["device"]] == [0, 1]
+    assert hist["server"], "server phase must produce epoch records"
+    assert np.isfinite(hist["server"][-1]["val_loss"])
+    assert hist["comm_bytes"] > 0 and hist["sim_time"] > 0
+
+
+def test_store_cut_buckets_and_prefix_aggregation():
+    """The consolidation store buckets shards by cut depth (shapes differ
+    across depths, so pools must never mix) and prefix_fedavg averages
+    layer l over exactly the buckets that own it (depth > l)."""
+    from repro.core import aggregation
+    from repro.data.activation_store import ActivationStore
+
+    store = ActivationStore(seed=0)
+    store.add(0, {"acts": np.ones((4, 2, 2, 3), np.float32),
+                  "labels": np.zeros(4, np.int64)}, cut=1)
+    store.add(1, {"acts": np.full((2, 1, 1, 5), 2.0, np.float32),
+                  "labels": np.ones(2, np.int64)}, cut=2)
+    assert store.cut_depths() == [1, 2]
+    assert store.num_samples(cut=1) == 4 and store.num_samples(cut=2) == 2
+    assert store.pool(cut=1)["acts"].shape == (4, 2, 2, 3)
+    assert store.pool(cut=2)["acts"].shape == (2, 1, 1, 5)
+    idx = store.epoch_indices(2, cut=1)
+    assert idx.shape == (2, 2) and set(idx.ravel()) <= {0, 1, 2, 3}
+
+    current = {"layers": [{"w": np.zeros(2, np.float32)},
+                          {"w": np.zeros(2, np.float32)},
+                          {"w": np.full(2, 7.0, np.float32)}]}
+    shallow = {"layers": [{"w": np.full(2, 2.0, np.float32)}]}
+    deep = {"layers": [{"w": np.full(2, 4.0, np.float32)},
+                       {"w": np.full(2, 6.0, np.float32)}]}
+    out = aggregation.prefix_fedavg(
+        current, {1: shallow, 2: deep}, {1: 1.0, 2: 1.0})
+    np.testing.assert_allclose(out["layers"][0]["w"], 3.0)  # both buckets
+    np.testing.assert_allclose(out["layers"][1]["w"], 6.0)  # deep only
+    np.testing.assert_allclose(out["layers"][2]["w"], 7.0)  # uncovered
+    # zero-weight deep bucket: the tail beyond the shallow cut is frozen
+    out2 = aggregation.prefix_fedavg(
+        current, {1: shallow, 2: deep}, {1: 1.0, 2: 0.0})
+    np.testing.assert_allclose(out2["layers"][0]["w"], 2.0)
+    np.testing.assert_allclose(out2["layers"][1]["w"], 0.0)
+
+
 @pytest.mark.slow
 def test_fedbuff_beats_sync_replay_under_stragglers(tmp_path):
     """The acceptance setup: one spec, fedbuff + splitfed, a straggler-
